@@ -1,0 +1,96 @@
+"""Table 1 analogue — PTQ method comparison at 4-bit, parity budgets.
+
+Per real-module-shaped matrix (llama3-8b modules / 4): quant-error-reduction
+ratio vs plain block-wise NF4 for GPTQ / AWQ / LoftQ / LoRDS(init) /
+LoRDS(refined), plus tiny-LM eval-loss after whole-model PTQ.
+Expected ordering (paper): LoRDS(refined) best at equal float budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    MODULE_SHAPES,
+    eval_loss,
+    quantize_model_weights,
+    realistic_weight,
+    timer,
+    tiny_lm,
+    train_tiny,
+)
+from repro.core import QuantSpec, baselines, metrics, ptq_refine, quantize
+from repro.core.scaling import scale_matrix
+from repro.data import synthetic_activations
+
+BLOCK = 64
+
+
+def _dequant_lords(res):
+    s = scale_matrix(res.b, res.a)
+    codes = quantize.unpack_codes(res.q_packed, "nf4")
+    return quantize.dequantize_codes(codes, s, "nf4")
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    ratios = {m: [] for m in ("gptq", "awq", "loftq", "lords_init",
+                              "lords_refined")}
+    for mod, (n, m) in MODULE_SHAPES.items():
+        key, sub = jax.random.split(key)
+        w = realistic_weight(sub, n, m)
+        x = jnp.asarray(synthetic_activations(256, m, seed=hash(mod) % 997))
+
+        qb, sb = quantize.quantize_blockwise(w, BLOCK, "nf4")
+        w_nf4 = quantize.dequantize_blockwise(qb, sb, BLOCK, "nf4")
+
+        outs = {}
+        qg, sg = baselines.gptq_quantize(w, x, BLOCK, "nf4")
+        outs["gptq"] = quantize.dequantize_blockwise(qg, sg, BLOCK, "nf4")
+        qa, sa, sc = baselines.awq_quantize(w, x, BLOCK, "nf4", n_grid=10)
+        outs["awq"] = quantize.dequantize_blockwise(qa, sa, BLOCK,
+                                                    "nf4") / sc[None, :]
+        ql, sl, lb, la = baselines.loftq_init(w, BLOCK, "nf4", r=8, iters=3)
+        outs["loftq"] = quantize.dequantize_blockwise(ql, sl, BLOCK,
+                                                      "nf4") + lb @ la
+        res0 = ptq_refine(w, "nf4", BLOCK, steps=0)
+        outs["lords_init"] = _dequant_lords(res0)
+        res = ptq_refine(w, "nf4", BLOCK, steps=250, lr=0.05)
+        outs["lords_refined"] = _dequant_lords(res)
+
+        y_ref = x @ w.T
+        mse_nf4 = float(jnp.mean((x @ w_nf4.T - y_ref) ** 2))
+        for name, w_hat in outs.items():
+            r = float(metrics.error_reduction_ratio(w, w_hat, w_nf4))
+            # GPTQ/AWQ optimize calibration-output MSE, not weight error —
+            # report both metrics (the paper's PPL tracks the output metric)
+            mse = float(jnp.mean((x @ w_hat.T - y_ref) ** 2))
+            ratios[name].append(r)
+            report(f"ptq_t1/{mod}/{name}", 0.0,
+                   f"err_reduction={r:.4f} out_mse_vs_nf4={mse/mse_nf4:.3f}")
+
+    for name, rs in ratios.items():
+        report(f"ptq_t1/avg/{name}", 0.0,
+               f"err_reduction_avg={sum(rs)/len(rs):.4f}")
+
+    # whole-model PTQ -> eval loss (PPL direction)
+    fp_quant = QuantSpec(method="none", mode="qat")
+    cfg_fp = tiny_lm(fp_quant)
+    with timer() as t:
+        params_fp, _ = train_tiny(cfg_fp, steps=150, lr=2e-3)
+    base = eval_loss(params_fp, cfg_fp)
+    report("ptq_t1/model/fp", t.dt * 1e6, f"eval_loss={base:.4f}")
+
+    # use NF2 so quantization damage (and LoRDS recovery) is visible on a
+    # tiny underfit model — at NF4 the noise floor hides any difference
+    for name, q in [
+        ("nf2", QuantSpec(method="blockwise", codebook="nf2", block_size=32,
+                          mode="frozen")),
+        ("lords_nf2", QuantSpec(method="lords", codebook="nf2", block_size=32,
+                                rank=4, mode="frozen")),
+    ]:
+        refine = 150 if name.startswith("lords") else 0
+        params_q = quantize_model_weights(params_fp, cfg_fp, q, refine=refine)
+        cfg_q = cfg_fp.with_(quant=q)
+        l = eval_loss(params_q, cfg_q)
+        report(f"ptq_t1/model/{name}", 0.0, f"eval_loss={l:.4f}")

@@ -1,0 +1,31 @@
+"""Table 4 analogue — QAT: block-wise INT4-QAT vs LoRDS-QAT on a tiny LM.
+
+Same data/steps/schedule; metric = held-out eval loss (log-PPL).  Paper
+claims LoRDS-QAT < INT4-QAT < PTQ-only.
+"""
+from __future__ import annotations
+
+from benchmarks.common import eval_loss, timer, tiny_lm, train_tiny
+from repro.core import QuantSpec
+
+STEPS = 150
+
+
+def run(report):
+    specs = {
+        "fp": QuantSpec(method="none", mode="qat"),
+        "int4_qat": QuantSpec(method="blockwise", codebook="int4",
+                              block_size=32, mode="qat"),
+        "lords_qat": QuantSpec(method="lords", codebook="int4",
+                               block_size=32, rank=4, mode="qat"),
+    }
+    losses = {}
+    for name, q in specs.items():
+        cfg = tiny_lm(q)
+        with timer() as t:
+            params, hist = train_tiny(cfg, steps=STEPS, lr=2e-3, seed=7)
+        losses[name] = eval_loss(params, cfg)
+        report(f"qat_t4/{name}", t.dt * 1e6 / STEPS,
+               f"eval_loss={losses[name]:.4f} train_last={hist[-1]:.4f}")
+    report("qat_t4/ordering", 0.0,
+           f"lords_beats_int4={losses['lords_qat'] < losses['int4_qat']}")

@@ -1,0 +1,68 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def render(records, mesh="16x16"):
+    rows = []
+    hdr = ("| arch | shape | kind | fits (arg+tmp GB) | t_compute | t_memory "
+           "| t_collective | bound | MODEL/HLO flops | roofline frac |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for r in records:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | - | FAIL | | | | "
+                        f"{r['status'][:40]} | | |")
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        argt = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0))
+        fits = "✓" if argt < 16e9 else "✗"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_gb(mem.get('argument_size_in_bytes', 0))}+"
+            f"{fmt_gb(mem.get('temp_size_in_bytes', 0))} {fits} | "
+            f"{fmt_s(rl['t_compute_s'])} | {fmt_s(rl['t_memory_s'])} | "
+            f"{fmt_s(rl['t_collective_s'])} | {rl['bottleneck']} | "
+            f"{rl['model_flops_ratio']:.2f} | "
+            f"{rl['model_fraction_of_roofline']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        records = json.load(f)
+    ok = sum(1 for r in records if r.get("status") == "ok")
+    print(f"## records: {len(records)} ({ok} ok)\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"### mesh {mesh}\n")
+        print(render(records, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
+``python -m benchmarks.run [table ...]`` (default: all).
+
+  ptq          Table 1  — PTQ method comparison (4-bit)
+  refine       Table 2  — iterative-refinement impact
+  lowbit       Table 3/9 — ultra-low-bit mixed precision
+  qat          Table 4  — INT4-QAT vs LoRDS-QAT
+  peft         Table 5  — QLoRA / LoftQ / LoRDS fine-tuning
+  rank         Fig. 3   — ΔW singular spectrum
+  kernels      Fig. 2/Table 6 — kernel cost comparison
+  error_ratio  Table 8  — per-module error reduction (incl. LoRDS†)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
+          "error_ratio"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or TABLES
+    rows = []
+
+    def report(name: str, us_per_call: float, derived: str):
+        row = f"{name},{us_per_call:.1f},{derived}"
+        rows.append(row)
+        print(row, flush=True)
+
+    print("name,us_per_call,derived")
+    for table in want:
+        mod = __import__(f"benchmarks.bench_{table}", fromlist=["run"])
+        t0 = time.time()
+        mod.run(report)
+        print(f"# bench_{table} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""QAT from scratch: jointly train master weights W and scaling factors (B,A)
+with STE fake quantization (paper §3.3) on a small LM.
+
+    PYTHONPATH=src python examples/qat_pretrain.py [--steps 200]
+"""
+import argparse
+
+from repro.configs import ShapeCfg, get_config
+from repro.core.lords import QuantSpec
+from repro.launch.train import run_training
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+cfg = get_config("qwen3-4b").with_(
+    name="qwen3-tiny-qat", num_layers=2, d_model=256, num_heads=4,
+    num_kv_heads=4, d_ff=512, vocab_size=8192, head_dim=64,
+    vocab_pad_multiple=256,
+    quant=QuantSpec(method="lords", codebook="int4", block_size=64,
+                    mode="qat"),
+)
+shape = ShapeCfg("qat", 128, 8, "train")
+out = run_training(cfg, shape, steps=args.steps, lr=1e-3)
+print(f"QAT loss: {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}")

@@ -1,0 +1,85 @@
+"""Merge all dry-run logs -> markdown tables -> EXPERIMENTS.md placeholders."""
+import json, subprocess, sys
+sys.path.insert(0, "/root/repo/perf")
+from log_to_records import parse
+
+LOGS = ["/tmp/dryrun_sweep.log", "/tmp/sweep_b.log", "/tmp/sweep_c.log",
+        "/tmp/dry_kimi.log", "/tmp/dry_405.log", "/tmp/dry_jamba.log",
+        "/tmp/dry_xlstm.log", "/tmp/hc_llama.log"]
+recs = []
+for p in LOGS:
+    try:
+        recs.extend(parse(p))
+    except OSError:
+        pass
+seen = {}
+for r in recs:
+    seen[(r["arch"], r["shape"], r["mesh"])] = r
+records = list(seen.values())
+json.dump(records, open("/root/repo/dryrun_merged.json", "w"), indent=1)
+
+ARCHS = ["minicpm3-4b","minitron-4b","llama3-405b","granite-20b",
+         "phi3.5-moe-42b-a6.6b","kimi-k2-1t-a32b","internvl2-1b","xlstm-1.3b",
+         "musicgen-medium","jamba-1.5-large-398b","llama3-8b","qwen3-8b","qwen3-4b"]
+SHAPES = ["train_4k","prefill_32k","decode_32k","long_500k"]
+LONG = {"xlstm-1.3b","jamba-1.5-large-398b"}
+
+def fmt_s(x):
+    x = max(x, 0.0)  # probe extrapolation can go (slightly) negative
+    if x == 0: return "~0"
+    if x < 1e-3: return f"{x*1e6:.0f}µs"
+    if x < 1: return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+def table(mesh):
+    rows = ["| arch | shape | mem/dev (arg+temp GB) | fits | t_compute | t_memory | t_collective | bound | frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_missing = 0
+    for a in ARCHS:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG:
+                continue
+            r = seen.get((a, s, mesh))
+            if r is None:
+                rows.append(f"| {a} | {s} | — | — | (not reached in sweep window) | | | | |")
+                n_missing += 1
+                continue
+            n_ok += 1
+            rl = r["roofline"]; mem = r["memory"]
+            tot = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 1e9
+            fits = "✓" if tot < 16 else "✗"
+            rows.append(
+                f"| {a} | {s} | {mem['argument_size_in_bytes']/1e9:.2f}+{mem['temp_size_in_bytes']/1e9:.2f} | {fits} | "
+                f"{fmt_s(rl['t_compute_s'])} | {fmt_s(rl['t_memory_s'])} | {fmt_s(rl['t_collective_s'])} | "
+                f"{rl['bottleneck']} | {rl['model_fraction_of_roofline']:.3f} |")
+    rows.append(f"\n({n_ok} cells compiled ok on this mesh; {n_missing} not reached)")
+    return "\n".join(rows)
+
+def table_mp():
+    rows = ["| arch | shape | mem/dev (arg+temp GB) | fits <16GB | compiled+sharded |",
+            "|---|---|---|---|---|"]
+    n_ok = 0
+    for a in ARCHS:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG:
+                continue
+            r = seen.get((a, s, "2x16x16"))
+            if r is None:
+                rows.append(f"| {a} | {s} | — | — | (not reached) |")
+                continue
+            n_ok += 1
+            mem = r["memory"]
+            tot = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 1e9
+            fits = "✓" if tot < 16 else "✗"
+            rows.append(
+                f"| {a} | {s} | {mem['argument_size_in_bytes']/1e9:.2f}+{mem['temp_size_in_bytes']/1e9:.2f} | {fits} | ✓ |")
+    rows.append(f"\n({n_ok} cells; the multi-pod pass proves the 'pod' axis shards — "
+                "roofline terms are single-pod only per the methodology, since "
+                "multi-pod cells compile without unrolled probes)")
+    return "\n".join(rows)
+
+md = open("/root/repo/EXPERIMENTS.md").read()
+md = md.replace("<!-- DRYRUN_TABLE_16 -->", table("16x16"))
+md = md.replace("<!-- DRYRUN_TABLE_512 -->", table_mp())
+open("/root/repo/EXPERIMENTS.md", "w").write(md)
+print("tables written;", len(records), "records total")

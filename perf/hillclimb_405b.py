@@ -1,0 +1,15 @@
+"""llama3-405b x train_4k: L1 = sequence parallel (fits + memory term)."""
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+
+which = sys.argv[1] if len(sys.argv) > 1 else "L1"
+if which == "L1":
+    rec = run_cell("llama3-405b", "train_4k",
+                   plan_tweaks=dict(seq_parallel=True), verbose=True)
+elif which == "L2":  # L1 + remat dots + smaller micro
+    rec = run_cell("llama3-405b", "train_4k",
+                   plan_tweaks=dict(seq_parallel=True, target_micro_tokens=4096),
+                   cfg_mutate=lambda c: c.with_(remat_policy="dots"),
+                   verbose=True)
+json.dump(rec, open(f"/root/repo/perf/l405_{which}.json", "w"), indent=1)

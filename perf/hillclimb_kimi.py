@@ -1,0 +1,20 @@
+"""Kimi-k2 x train_4k hillclimb: K1 = shard_map EP dispatch (padded 512)."""
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+import dataclasses
+
+def k1(cfg):
+    mo = dataclasses.replace(cfg.moe, dispatch="shard_map", pad_experts_to=512)
+    return cfg.with_(moe=mo)
+
+which = sys.argv[1] if len(sys.argv) > 1 else "K1"
+out = {}
+if which == "K1":
+    rec = run_cell("kimi-k2-1t-a32b", "train_4k", cfg_mutate=k1, verbose=True)
+elif which == "K2":  # K1 + bf16 elementwise + remat dots
+    os.environ["REPRO_BF16_ELEMWISE"] = "1"
+    rec = run_cell("kimi-k2-1t-a32b", "train_4k",
+                   cfg_mutate=lambda c: k1(c).with_(remat_policy="dots"),
+                   verbose=True)
+json.dump(rec, open(f"/root/repo/perf/kimi_{which}.json", "w"), indent=1)

@@ -1,0 +1,9 @@
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+# I5: seq_parallel + remat dots + micro 4096 tokens (temp guard for dots)
+rec = run_cell("llama3-8b", "train_4k",
+               plan_tweaks=dict(seq_parallel=True, target_micro_tokens=4096),
+               cfg_mutate=lambda c: c.with_(remat_policy="dots"),
+               verbose=True)
+json.dump(rec, open("/root/repo/perf/llama8b_I5.json", "w"), indent=1)

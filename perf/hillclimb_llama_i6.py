@@ -1,0 +1,10 @@
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+# I6: seq_parallel + remat dots at full 8192-token microbatches (SP shrinks
+# the dot-output checkpoints 16x, so dots policy should now fit)
+rec = run_cell("llama3-8b", "train_4k",
+               plan_tweaks=dict(seq_parallel=True),
+               cfg_mutate=lambda c: c.with_(remat_policy="dots"),
+               verbose=True)
+json.dump(rec, open("/root/repo/perf/llama8b_I6.json", "w"), indent=1)

@@ -1,0 +1,40 @@
+"""Parse dry-run [ok] log lines into table records (fallback when a sweep is
+interrupted before its JSON dump)."""
+import json, re, sys
+
+PAT = re.compile(
+    r"\[ok\] (\S+)\s+(\S+)\s+mesh=(\S+)\s+args=\s*([\d.]+)GB temp=\s*([\d.]+)GB "
+    r"t_c=([\d.e+-]+)s t_m=([\d.e+-]+)s t_coll=([\d.e+-]+)s bound=(\S+)\s+"
+    r"frac=([\d.]+)")
+
+def parse(path):
+    out = []
+    for line in open(path):
+        m = PAT.search(line)
+        if not m:
+            continue
+        a, sh, mesh, arg, tmp, tc, tm, tl, bound, frac = m.groups()
+        out.append(dict(arch=a, shape=sh, mesh=mesh, status="ok",
+                        memory={"argument_size_in_bytes": float(arg)*1e9,
+                                "temp_size_in_bytes": float(tmp)*1e9},
+                        kind={"train_4k":"train","prefill_32k":"prefill",
+                              "decode_32k":"decode","long_500k":"decode"}[sh],
+                        roofline={"t_compute_s": float(tc),
+                                  "t_memory_s": float(tm),
+                                  "t_collective_s": float(tl),
+                                  "bottleneck": bound,
+                                  "model_flops_ratio": 0.0,
+                                  "model_fraction_of_roofline": float(frac)}))
+    return out
+
+if __name__ == "__main__":
+    recs = []
+    for p in sys.argv[1:]:
+        recs.extend(parse(p))
+    # dedupe by (arch, shape, mesh), last wins
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"])] = r
+    json.dump(list(seen.values()), open("/root/repo/dryrun_merged.json", "w"),
+              indent=1)
+    print(f"{len(seen)} unique records")

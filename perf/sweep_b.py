@@ -1,0 +1,21 @@
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell, LONG_CTX_ARCHS
+
+ARCHS = ["llama3-8b", "minicpm3-4b", "minitron-4b", "musicgen-medium",
+         "phi3.5-moe-42b-a6.6b", "qwen3-4b", "qwen3-8b", "xlstm-1.3b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+records = []
+for arch in ARCHS:
+    for shape in SHAPES:
+        if shape == "long_500k" and arch not in LONG_CTX_ARCHS:
+            continue
+        for mp in (False, True):
+            try:
+                records.append(run_cell(arch, shape, multi_pod=mp, probes=not mp))
+            except Exception as e:
+                records.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": f"FAIL: {e}"})
+                print("[FAIL]", arch, shape, mp, e, flush=True)
+            json.dump(records, open("/root/repo/dryrun_results_b.json", "w"), indent=1)

@@ -1,0 +1,26 @@
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+
+# missing cells, single-pod (roofline) first, smallest archs first
+CELLS_16 = []
+for a in ["musicgen-medium", "qwen3-4b", "xlstm-1.3b", "minitron-4b",
+          "qwen3-8b", "minicpm3-4b", "phi3.5-moe-42b-a6.6b"]:
+    for s in ["decode_32k", "prefill_32k", "train_4k"]:
+        CELLS_16.append((a, s, False))
+CELLS_16.append(("xlstm-1.3b", "long_500k", True))
+CELLS_MP = [(a, s, True) for (a, s, _) in CELLS_16]
+
+SKIP = {("minicpm3-4b", "train_4k", False)}
+records = []
+for a, s, mp in CELLS_16 + CELLS_MP:
+    if (a, s, mp) in SKIP:
+        continue
+    try:
+        records.append(run_cell(a, s, multi_pod=mp, probes=not mp))
+    except Exception as e:
+        records.append({"arch": a, "shape": s,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAIL: {e}"})
+        print("[FAIL]", a, s, mp, repr(e)[:200], flush=True)
+    json.dump(records, open("/root/repo/dryrun_results_c.json", "w"), indent=1)

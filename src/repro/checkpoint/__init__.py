@@ -1,0 +1,2 @@
+"""repro.checkpoint — atomic, elastic-reshard checkpointing."""
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

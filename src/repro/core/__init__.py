@@ -1,0 +1,18 @@
+"""repro.core — LoRDS: Low-Rank Decomposed Scaling (the paper's contribution).
+
+Public surface:
+  QuantSpec, init_quantized_linear, apply_quantized_linear  (module API)
+  ptq_refine                                                 (Algorithm 1)
+  fake_quant_ste                                             (QAT STE)
+  lut / scaling / quantize / baselines / metrics             (submodules)
+"""
+from repro.core.lords import (  # noqa: F401
+    QuantSpec,
+    apply_quantized_linear,
+    dequantize_weight,
+    init_quantized_linear,
+    linear_param_specs,
+    trainable_keys,
+)
+from repro.core.ptq import PTQResult, ptq_refine  # noqa: F401
+from repro.core.qat import fake_quant_ste  # noqa: F401

@@ -1,0 +1,219 @@
+"""Baselines the paper compares against, implemented in JAX.
+
+* block-wise NF4/INT4 (bitsandbytes semantics)          — Tables 1, 4
+* QLoRA: block-wise quant + additive LoRA adapter        — Table 5
+* LoftQ: alternating residual-SVD adapter initialization — Tables 1, 3, 5, 8
+* QPiSSA: principal-components-to-adapter initialization — Tables 8, 9
+* GPTQ: Hessian-based column-wise quantization           — Table 1
+* AWQ: activation-aware per-channel scale search         — Table 1
+
+GPTQ/AWQ consume calibration activations (`repro.data.calibration`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scaling
+from repro.core.quantize import (
+    dequantize_blockwise,
+    dequantize_codes,
+    pack_codes,
+    quantize_blockwise,
+    quantize_codes,
+    unpack_codes,
+)
+
+__all__ = [
+    "init_baseline_linear",
+    "dequantize_baseline_weight",
+    "loftq_init",
+    "qpissa_init",
+    "gptq_quantize",
+    "awq_quantize",
+]
+
+
+# ---------------------------------------------------------------------------
+# init / dequant dispatch used by repro.core.lords
+# ---------------------------------------------------------------------------
+
+
+def init_baseline_linear(key, n, m, spec, w):
+    params: dict[str, jnp.ndarray] = {}
+    if spec.method == "blockwise":
+        if spec.mode == "qat":
+            params["w"] = w
+            params["s_blk"] = scaling.blockwise_scales(w, spec.block_size)
+        else:
+            q, s_blk = quantize_blockwise(w, spec.block_size, spec.codebook)
+            params["q"], params["s_blk"] = q, s_blk
+        return params
+
+    if spec.method == "qlora":
+        q, s_blk = quantize_blockwise(w, spec.block_size, spec.codebook)
+        params["q"], params["s_blk"] = q, s_blk
+        r = spec.adapter_rank
+        # LoRA init: A ~ kaiming-uniform, B = 0  (Hu et al., 2022)
+        bound = 1.0 / jnp.sqrt(m)
+        params["lora_a"] = jax.random.uniform(
+            key, (r, m), jnp.float32, -bound, bound
+        )
+        params["lora_b"] = jnp.zeros((n, r), jnp.float32)
+        return params
+
+    if spec.method == "loftq":
+        q, s_blk, lb, la = loftq_init(
+            w, spec.block_size, spec.codebook, spec.adapter_rank, spec.loftq_iters
+        )
+        params.update(q=q, s_blk=s_blk, lora_b=lb, lora_a=la)
+        return params
+
+    if spec.method == "qpissa":
+        q, s_blk, lb, la = qpissa_init(
+            w, spec.block_size, spec.codebook, spec.adapter_rank
+        )
+        params.update(q=q, s_blk=s_blk, lora_b=lb, lora_a=la)
+        return params
+
+    raise ValueError(f"unknown baseline method {spec.method!r}")
+
+
+def dequantize_baseline_weight(params, spec, n, m):
+    """Dequantize the *frozen/base* weight (adapter handled by the caller)."""
+    if spec.method == "blockwise" and spec.mode == "qat":
+        from repro.core.qat import fake_quant_ste
+
+        bs = params["w"].shape[-1] // params["s_blk"].shape[-1]
+        s = scaling.expand_block_scales(params["s_blk"], bs)
+        return fake_quant_ste(spec.codebook, params["w"], s).astype(
+            spec.compute_dtype
+        )
+    w_hat = dequantize_blockwise(
+        params["q"], params["s_blk"], spec.block_size, spec.codebook,
+        dtype=spec.compute_dtype,
+    )
+    if "awq_s" in params:  # AWQ: un-fold the per-input-channel smoothing
+        w_hat = w_hat / params["awq_s"][None, :].astype(spec.compute_dtype)
+    return w_hat
+
+
+# ---------------------------------------------------------------------------
+# LoftQ (Li et al., 2023) & QPiSSA (Meng et al., 2024)
+# ---------------------------------------------------------------------------
+
+
+def _svd_lowrank(x, r):
+    u, s, vt = jnp.linalg.svd(x.astype(jnp.float32), full_matrices=False)
+    root = jnp.sqrt(s[:r])
+    return u[:, :r] * root[None, :], root[:, None] * vt[:r, :]
+
+
+def loftq_init(w, block_size, codebook, r, iters=5):
+    """Alternate Q = quant(W − BA); (B, A) = SVD_r(W − dequant(Q))."""
+    w = w.astype(jnp.float32)
+    lb = jnp.zeros((w.shape[0], r), jnp.float32)
+    la = jnp.zeros((r, w.shape[1]), jnp.float32)
+    q = s_blk = None
+    for _ in range(max(iters, 1)):
+        resid = w - lb @ la
+        q, s_blk = quantize_blockwise(resid, block_size, codebook)
+        d = dequantize_blockwise(q, s_blk, block_size, codebook)
+        lb, la = _svd_lowrank(w - d, r)
+    return q, s_blk, lb, la
+
+
+def qpissa_init(w, block_size, codebook, r):
+    """Principal singular directions → adapter; residual → quantized base."""
+    w = w.astype(jnp.float32)
+    lb, la = _svd_lowrank(w, r)
+    resid = w - lb @ la
+    q, s_blk = quantize_blockwise(resid, block_size, codebook)
+    return q, s_blk, lb, la
+
+
+# ---------------------------------------------------------------------------
+# GPTQ (Frantar et al., 2022) — column-wise with error compensation
+# ---------------------------------------------------------------------------
+
+
+def gptq_quantize(
+    w: jnp.ndarray,
+    x_calib: jnp.ndarray,
+    block_size: int,
+    codebook: str,
+    damp: float = 0.01,
+):
+    """GPTQ for one linear.  ``w`` (n, m); ``x_calib`` (T, m) activations.
+
+    Classic formulation: H = 2 X Xᵀ (here Xᵀ X over tokens), Cholesky of
+    H⁻¹; quantize columns left→right, propagating the weighted error to the
+    not-yet-quantized columns.  Block scales are computed up front from W
+    (standard practice: scales from the original weights).
+    """
+    n, m = w.shape
+    w = w.astype(jnp.float32)
+    h = 2.0 * (x_calib.astype(jnp.float32).T @ x_calib.astype(jnp.float32))
+    h = h + damp * jnp.mean(jnp.diag(h)) * jnp.eye(m, dtype=jnp.float32)
+    # Hinv via Cholesky: GPTQ uses U = chol(H^-1, upper); U_jj scales the err.
+    hinv = jnp.linalg.inv(h)
+    u = jnp.linalg.cholesky(hinv, upper=True)
+
+    s_blk = scaling.blockwise_scales(w, block_size)
+    s = scaling.expand_block_scales(s_blk, block_size)
+
+    def body(j, carry):
+        wc, codes = carry
+        col = wc[:, j]
+        sj = s[:, j]
+        cj = quantize_codes(col, sj, codebook)
+        qj = dequantize_codes(cj, sj, codebook)
+        err = (col - qj) / u[j, j]
+        # propagate to remaining columns (mask keeps it jit-shaped)
+        row = u[j, :]
+        mask = (jnp.arange(m) > j).astype(jnp.float32)
+        wc = wc - jnp.outer(err, row * mask)
+        codes = codes.at[:, j].set(cj)
+        return wc, codes
+
+    codes0 = jnp.zeros((n, m), jnp.uint8)
+    _, codes = jax.lax.fori_loop(0, m, body, (w, codes0))
+    return pack_codes(codes, codebook), s_blk
+
+
+# ---------------------------------------------------------------------------
+# AWQ (Lin et al., 2024) — activation-aware per-channel scale search
+# ---------------------------------------------------------------------------
+
+
+def awq_quantize(
+    w: jnp.ndarray,
+    x_calib: jnp.ndarray,
+    block_size: int,
+    codebook: str,
+    n_grid: int = 20,
+):
+    """Grid-search s_j = E|x_j|^α protecting salient channels (α ∈ [0, 1))."""
+    w = w.astype(jnp.float32)
+    act_mag = jnp.mean(jnp.abs(x_calib.astype(jnp.float32)), axis=0)  # (m,)
+    act_mag = jnp.maximum(act_mag, 1e-8)
+    y_ref = x_calib @ w.T
+
+    def loss_for(alpha):
+        sc = act_mag**alpha
+        sc = sc / jnp.sqrt(jnp.max(sc) * jnp.min(sc))  # normalize center
+        q, s_blk = quantize_blockwise(w * sc[None, :], block_size, codebook)
+        w_hat = (
+            dequantize_blockwise(q, s_blk, block_size, codebook) / sc[None, :]
+        )
+        err = jnp.mean((x_calib @ w_hat.T - y_ref) ** 2)
+        return err, (q, s_blk, sc)
+
+    best = None
+    for i in range(n_grid):
+        alpha = i / n_grid
+        err, payload = loss_for(alpha)
+        if best is None or float(err) < best[0]:
+            best = (float(err), payload)
+    q, s_blk, sc = best[1]
+    return q, s_blk, sc

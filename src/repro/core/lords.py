@@ -1,0 +1,229 @@
+"""LoRDS quantized linear layers — the paper's core contribution as a module.
+
+A quantized linear is a pytree of arrays plus a :class:`QuantSpec`.  Three
+lifecycle modes share one parameterization (paper §3):
+
+  * ``frozen`` — inference: packed codes Q + (B, A); Ŵ = Q ⊙ (B·A).
+  * ``peft``   — same storage; B, A are *trainable* (multiplicative PEFT,
+    ΔW = Q ⊙ (B'A' − BA)); Q stays frozen. Fully differentiable, no STE.
+  * ``qat``    — master weights W kept; forward uses STE fake-quant
+    Ŵ = ROUND(W ⊘ BA) ⊙ (BA); W, B, A all trainable.
+
+Param-tree layout (keys present depend on mode/method):
+
+    {"q": uint8 packed codes (n, m/pack),
+     "b": (n, r), "a": (r, m),                  # lords
+     "s_blk": (n, m/B),                          # blockwise baseline
+     "w": (n, m),                                # qat master / fp
+     "lora_b": (n, r_q), "lora_a": (r_q, m),     # qlora/loftq baselines
+     "bias": (n,)}                               # optional
+
+Logical sharding axes for every key are produced alongside the params so the
+distributed layer can pjit any quantized model without introspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut, scaling
+from repro.core.qat import fake_quant_ste
+from repro.core.quantize import (
+    dequantize_codes,
+    pack_codes,
+    packed_dim,
+    quantize_codes,
+    unpack_codes,
+)
+
+__all__ = ["QuantSpec", "init_quantized_linear", "apply_quantized_linear",
+           "dequantize_weight", "linear_param_specs", "trainable_keys"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How to quantize (and adapt) one linear layer / a whole model."""
+
+    method: str = "lords"  # lords | blockwise | qlora | loftq | qpissa | none
+    codebook: str = "nf4"
+    block_size: int = 128  # equivalent block size (sets LoRDS parity rank)
+    rank: int | None = None  # explicit LoRDS rank override
+    extra_rank: int = 0  # +r_q for the parameter-aligned LoRDS†
+    mode: str = "frozen"  # frozen | peft | qat
+    adapter_rank: int = 32  # additive-adapter rank for qlora/loftq/qpissa
+    compute_dtype: Any = jnp.bfloat16
+    scale_dtype: Any = jnp.float32
+    ba_compute_dtype: Any = jnp.float32  # S=B·A product precision (perf knob)
+    loftq_iters: int = 5
+
+    def with_(self, **kw) -> "QuantSpec":
+        return dataclasses.replace(self, **kw)
+
+    def lords_rank(self, n: int, m: int) -> int:
+        if self.rank is not None:
+            return self.rank + self.extra_rank
+        return scaling.parity_rank(n, m, self.block_size, self.extra_rank)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_weight(key, n, m, dtype):
+    """LeCun-normal init used when no pretrained weight is supplied."""
+    std = 1.0 / jnp.sqrt(m)
+    return (jax.random.normal(key, (n, m), jnp.float32) * std).astype(dtype)
+
+
+def init_quantized_linear(
+    key: jax.Array,
+    n: int,
+    m: int,
+    spec: QuantSpec,
+    w: jnp.ndarray | None = None,
+    use_bias: bool = False,
+) -> dict:
+    """Build the param tree for one (n out × m in) quantized linear.
+
+    If ``w`` is None a fresh weight is drawn first (from-scratch QAT / tests).
+    For ``method='lords'`` this performs the paper's SVD initialization; the
+    iterative PTQ refinement lives in :mod:`repro.core.ptq`.
+    """
+    if w is None:
+        key, sub = jax.random.split(key)
+        w = _init_weight(sub, n, m, jnp.float32)
+    w = w.astype(jnp.float32)
+    params: dict[str, jnp.ndarray] = {}
+    method, mode = spec.method, spec.mode
+
+    if method == "none":
+        params["w"] = w.astype(spec.compute_dtype)
+    elif method == "lords":
+        b, a = scaling.lords_init_from_weight(
+            w, spec.block_size, rank=spec.rank, extra_rank=spec.extra_rank
+        )
+        s = scaling.scale_matrix(b, a)
+        params["b"] = b.astype(spec.scale_dtype)
+        params["a"] = a.astype(spec.scale_dtype)
+        if mode == "qat":
+            params["w"] = w
+        else:
+            codes = quantize_codes(w, s, spec.codebook)
+            params["q"] = pack_codes(codes, spec.codebook)
+    elif method in ("blockwise", "qlora", "loftq", "qpissa"):
+        from repro.core import baselines  # cycle-free: baselines imports us not
+
+        params = baselines.init_baseline_linear(key, n, m, spec, w)
+    else:
+        raise ValueError(f"unknown quant method {method!r}")
+
+    if use_bias:
+        params["bias"] = jnp.zeros((n,), spec.compute_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def dequantize_weight(params: dict, spec: QuantSpec, n: int, m: int) -> jnp.ndarray:
+    """Materialize Ŵ (compute dtype). Used by the pure-JAX (non-Pallas) path."""
+    method, mode = spec.method, spec.mode
+    if method == "none":
+        return params["w"].astype(spec.compute_dtype)
+    if method == "lords":
+        s = scaling.scale_matrix(
+            params["b"].astype(spec.ba_compute_dtype),
+            params["a"].astype(spec.ba_compute_dtype),
+        )
+        if mode == "qat":
+            return fake_quant_ste(spec.codebook, params["w"], s).astype(
+                spec.compute_dtype
+            )
+        codes = unpack_codes(params["q"], spec.codebook)
+        return dequantize_codes(codes, s, spec.codebook, dtype=spec.compute_dtype)
+    from repro.core import baselines
+
+    return baselines.dequantize_baseline_weight(params, spec, n, m)
+
+
+def apply_quantized_linear(
+    params: dict, x: jnp.ndarray, spec: QuantSpec, n: int, m: int
+) -> jnp.ndarray:
+    """y = x @ Ŵᵀ (+ additive adapter for qlora-family baselines)."""
+    w_hat = dequantize_weight(params, spec, n, m)
+    y = jnp.einsum("...k,nk->...n", x.astype(spec.compute_dtype), w_hat)
+    if spec.method in ("qlora", "loftq", "qpissa") and "lora_a" in params:
+        # unmergeable additive adapter path: y += x @ Aᵀ Bᵀ  (the extra cost
+        # the paper's Fig. 2 measures)
+        xa = jnp.einsum(
+            "...k,rk->...r", x.astype(spec.compute_dtype),
+            params["lora_a"].astype(spec.compute_dtype),
+        )
+        y = y + jnp.einsum(
+            "...r,nr->...n", xa, params["lora_b"].astype(spec.compute_dtype)
+        )
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding axes (consumed by repro.distributed.sharding)
+# ---------------------------------------------------------------------------
+
+
+def linear_param_specs(
+    spec: QuantSpec, out_axis: str, in_axis: str, use_bias: bool = False
+) -> dict:
+    """Logical axis names, mirroring the param tree of this linear.
+
+    ``out_axis`` / ``in_axis`` are logical names like 'mlp' / 'embed'.  The
+    packed-codes axis shares the in_axis name: packing divides the dim by a
+    constant, and the rule resolver checks divisibility on the *actual* dim.
+    """
+    method, mode = spec.method, spec.mode
+    axes: dict[str, tuple] = {}
+    if method == "none":
+        axes["w"] = (out_axis, in_axis)
+    elif method == "lords":
+        axes["b"] = (out_axis, "lords_rank")
+        axes["a"] = ("lords_rank", in_axis)
+        if mode == "qat":
+            axes["w"] = (out_axis, in_axis)
+        else:
+            axes["q"] = (out_axis, in_axis)
+    elif method == "blockwise":
+        if mode == "qat":
+            axes["w"] = (out_axis, in_axis)
+        else:
+            axes["q"] = (out_axis, in_axis)
+        axes["s_blk"] = (out_axis, in_axis)
+    elif method in ("qlora", "loftq", "qpissa"):
+        axes["q"] = (out_axis, in_axis)
+        axes["s_blk"] = (out_axis, in_axis)
+        axes["lora_b"] = (out_axis, "lords_rank")
+        axes["lora_a"] = ("lords_rank", in_axis)
+    if use_bias:
+        axes["bias"] = (out_axis,)
+    return axes
+
+
+def trainable_keys(spec: QuantSpec) -> tuple[str, ...]:
+    """Which param-tree keys receive gradients in the given mode/method."""
+    if spec.mode == "frozen":
+        return ()
+    if spec.method == "lords":
+        return ("b", "a", "w", "bias") if spec.mode == "qat" else ("b", "a", "bias")
+    if spec.method in ("qlora", "loftq", "qpissa"):
+        return ("lora_b", "lora_a", "bias")
+    if spec.method == "none":
+        return ("w", "bias")
+    if spec.method == "blockwise":
+        return ("s_blk", "w", "bias") if spec.mode == "qat" else ()
+    return ()

@@ -1,0 +1,48 @@
+"""Quantization-quality metrics used throughout the paper's tables.
+
+* quantization error      = ‖W − Ŵ‖_*  (nuclear norm of the residual; §4.1)
+* error reduction ratio   = 1 − ‖W − Ŵ‖_* / ‖W − nf4(W)‖_*  (Appendix B)
+* effective rank of ΔW    — Fig. 3 / Appendix C (PEFT expressivity)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "nuclear_norm",
+    "quant_error",
+    "error_reduction_ratio",
+    "singular_values",
+    "effective_rank",
+    "frobenius_error",
+]
+
+
+def singular_values(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.svd(x.astype(jnp.float32), compute_uv=False)
+
+
+def nuclear_norm(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(singular_values(x))
+
+
+def quant_error(w: jnp.ndarray, w_hat: jnp.ndarray) -> jnp.ndarray:
+    """‖W − Ŵ‖_* — the paper's QuantError (Table 2)."""
+    return nuclear_norm(w.astype(jnp.float32) - w_hat.astype(jnp.float32))
+
+
+def frobenius_error(w: jnp.ndarray, w_hat: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.norm(w.astype(jnp.float32) - w_hat.astype(jnp.float32))
+
+
+def error_reduction_ratio(
+    w: jnp.ndarray, w_hat: jnp.ndarray, w_hat_ref: jnp.ndarray
+) -> jnp.ndarray:
+    """1 − ‖W−Ŵ‖_*/‖W−Ŵ_ref‖_* ; ref is block-wise NF4 in the paper."""
+    return 1.0 - quant_error(w, w_hat) / quant_error(w, w_hat_ref)
+
+
+def effective_rank(x: jnp.ndarray, rel_tol: float = 1e-3) -> jnp.ndarray:
+    """# singular values above rel_tol × σ_max — ΔW rank analysis (Fig. 3)."""
+    s = singular_values(x)
+    return jnp.sum(s > rel_tol * s[0])

@@ -1,0 +1,77 @@
+"""Trainable/frozen parameter partitioning for the three lifecycle modes.
+
+PEFT (paper §3.4): only the scaling matrices (B, A) train — the multiplicative
+update ΔW = Q ⊙ (B'A' − BA).  QAT: everything trains (W via STE).  The
+partition is structural (by leaf path), so the optimizer/train-step never see
+frozen uint8 codes.
+
+``partition(params, quant)`` -> (trainable, frozen) trees with ``None`` holes;
+``combine(trainable, frozen)`` re-assembles.  Holes keep tree structure
+identical, so pytree transforms (grads, optimizer states) map 1:1.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.lords import QuantSpec
+
+__all__ = ["partition", "combine", "trainable_leaf"]
+
+# keys that belong to quantized-linear leaves
+_QUANT_KEYS = {"q", "b", "a", "s_blk", "w", "lora_b", "lora_a", "bias", "awq_s"}
+# never trainable regardless of mode
+_ALWAYS_FROZEN = {"q", "awq_s"}
+
+
+def trainable_leaf(path: tuple, quant: QuantSpec) -> bool:
+    """Decide trainability of a leaf from its tree path + the quant spec."""
+    key = None
+    for p in reversed(path):
+        name = getattr(p, "key", None) or getattr(p, "name", None)
+        if name is not None:
+            key = str(name)
+            break
+    if key is None:
+        return quant.mode != "frozen"
+    if key in _ALWAYS_FROZEN:
+        return False
+    mode, method = quant.mode, quant.method
+    if mode == "frozen":
+        return False
+    if mode == "qat":
+        return True  # everything: W (STE), B/A, norms, router, embeds
+    # mode == "peft"
+    if method == "lords":
+        return key in ("b", "a")
+    if method in ("qlora", "loftq", "qpissa"):
+        return key in ("lora_b", "lora_a")
+    if method == "none":
+        return True
+    if method == "blockwise":
+        return key == "s_blk"  # PEQA-style: tune scales only
+    return False
+
+
+def partition(params, quant: QuantSpec):
+    """-> (trainable, frozen); same structure, None holes in each."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    t_leaves, f_leaves = [], []
+    for path, leaf in flat:
+        if trainable_leaf(path, quant):
+            t_leaves.append(leaf)
+            f_leaves.append(None)
+        else:
+            t_leaves.append(None)
+            f_leaves.append(leaf)
+    trainable = jax.tree_util.tree_unflatten(treedef, t_leaves)
+    frozen = jax.tree_util.tree_unflatten(treedef, f_leaves)
+    return trainable, frozen
+
+
+def combine(trainable, frozen):
+    return jax.tree.map(
+        lambda t, f: t if t is not None else f,
+        trainable, frozen,
+        is_leaf=lambda x: x is None,
+    )

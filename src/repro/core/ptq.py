@@ -1,0 +1,98 @@
+"""LoRDS PTQ — Algorithm 1: iterative refinement of the scaling manifold.
+
+    min_{B,A,Q}  ‖ W − (B·A) ⊙ Q ‖_F²
+
+alternating (per step t):
+  1. Quantization step:  Q ← argmin_v (S·v − W)²  with S = BA fixed
+     (= nearest codebook level of W ⊘ S, exactly — the S² factor cancels),
+  2. Adaptation step:    one AdamW update of (B, A) on the MSE with Q fixed.
+
+The whole loop is one ``lax.scan`` → jit-compiles once and runs fast; the
+paper reports < 30 min for an 8B model on one A100 with T = 500, lr = 0.05.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut, scaling
+from repro.core.quantize import pack_codes, quantize_codes
+
+__all__ = ["ptq_refine", "PTQResult"]
+
+
+class PTQResult(NamedTuple):
+    b: jnp.ndarray
+    a: jnp.ndarray
+    q_packed: jnp.ndarray
+    loss_history: jnp.ndarray  # (T,) recon MSE per step
+
+
+class _AdamState(NamedTuple):
+    mu_b: jnp.ndarray
+    nu_b: jnp.ndarray
+    mu_a: jnp.ndarray
+    nu_a: jnp.ndarray
+
+
+def _adam_update(g, mu, nu, step, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    mu = b1 * mu + (1 - b1) * g
+    nu = b2 * nu + (1 - b2) * g * g
+    mu_hat = mu / (1 - b1**step)
+    nu_hat = nu / (1 - b2**step)
+    upd = lr * (mu_hat / (jnp.sqrt(nu_hat) + eps))
+    return upd, mu, nu
+
+
+@partial(jax.jit, static_argnames=("codebook_name", "steps", "block_size",
+                                   "rank", "extra_rank"))
+def ptq_refine(
+    w: jnp.ndarray,
+    codebook_name: str = "nf4",
+    block_size: int = 128,
+    rank: int | None = None,
+    extra_rank: int = 0,
+    steps: int = 500,
+    lr: float = 0.05,
+    weight_decay: float = 0.0,
+) -> PTQResult:
+    """Run Algorithm 1 on one weight matrix; returns refined (B, A, Q)."""
+    w = w.astype(jnp.float32)
+    b0, a0 = scaling.lords_init_from_weight(
+        w, block_size, rank=rank, extra_rank=extra_rank
+    )
+    levels = lut.codebook(codebook_name)
+
+    def recon_loss(ba, qv):
+        b, a = ba
+        s = scaling.scale_matrix(b, a)
+        return jnp.mean((w - s * qv) ** 2)
+
+    def step_fn(carry, t):
+        b, a, st = carry
+        # -- quantization step (Q fixed-point values, straight lookup) --
+        s = scaling.scale_matrix(b, a)
+        codes = quantize_codes(w, s, codebook_name)
+        qv = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+        # -- adaptation step: one AdamW update of (B, A) --
+        loss, (gb, ga) = jax.value_and_grad(recon_loss)((b, a), qv)
+        ub, mu_b, nu_b = _adam_update(gb, st.mu_b, st.nu_b, t + 1, lr)
+        ua, mu_a, nu_a = _adam_update(ga, st.mu_a, st.nu_a, t + 1, lr)
+        b = b * (1 - lr * weight_decay) - ub
+        a = a * (1 - lr * weight_decay) - ua
+        return (b, a, _AdamState(mu_b, nu_b, mu_a, nu_a)), loss
+
+    st0 = _AdamState(
+        jnp.zeros_like(b0), jnp.zeros_like(b0),
+        jnp.zeros_like(a0), jnp.zeros_like(a0),
+    )
+    (b, a, _), losses = jax.lax.scan(
+        step_fn, (b0, a0, st0), jnp.arange(steps, dtype=jnp.float32)
+    )
+    # final quantization with the refined manifold
+    s = scaling.scale_matrix(b, a)
+    codes = quantize_codes(w, s, codebook_name)
+    return PTQResult(b, a, pack_codes(codes, codebook_name), losses)

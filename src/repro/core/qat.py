@@ -1,0 +1,55 @@
+"""Quantization-aware training: fake quantization with straight-through grads.
+
+Paper §3.3:  ``Ŵ = ROUND(W ⊘ (BA)) ⊙ (BA)`` with STE gradients
+
+    ∇_W L ≈ ∂L/∂Ŵ                      (Eq. 4)
+    ∇_S L ≈ ∂L/∂Ŵ ⊙ (Q − W ⊘ S)       (Eq. 5), S = BA
+
+The custom_vjp below exposes exactly these two cotangents; the chain rule
+through ``S = B @ A`` (∇_B = ∇_S Aᵀ, ∇_A = Bᵀ ∇_S) is left to JAX autodiff by
+computing S outside the custom_vjp boundary.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+from repro.core.quantize import quantize_codes
+from repro.core.scaling import SCALE_EPS
+
+__all__ = ["fake_quant_ste"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fake_quant_ste(codebook_name: str, w: jnp.ndarray, s: jnp.ndarray):
+    """Differentiable fake quantization: returns ROUND(w ⊘ s) ⊙ s."""
+    q, _ = _round_terms(codebook_name, w, s)
+    return (q * s).astype(w.dtype)
+
+
+def _round_terms(codebook_name, w, s):
+    safe = jnp.where(jnp.abs(s) < SCALE_EPS, SCALE_EPS, s)
+    codes = quantize_codes(w, s, codebook_name)
+    levels = lut.codebook(codebook_name).astype(jnp.float32)
+    q = jnp.take(levels, codes.astype(jnp.int32), axis=0).astype(s.dtype)
+    resid = q - (w / safe).astype(s.dtype)  # Q - W ⊘ S, for Eq. 5
+    return q, resid
+
+
+def _fwd(codebook_name, w, s):
+    q, resid = _round_terms(codebook_name, w, s)
+    protos = (jnp.zeros((), w.dtype), jnp.zeros((), s.dtype))
+    return (q * s).astype(w.dtype), (resid, protos)
+
+
+def _bwd(codebook_name, residuals, g):
+    resid, (w_proto, s_proto) = residuals
+    dw = g.astype(w_proto.dtype)            # Eq. 4 (STE identity)
+    ds = (g * resid).astype(s_proto.dtype)  # Eq. 5
+    return dw, ds
+
+
+fake_quant_ste.defvjp(_fwd, _bwd)

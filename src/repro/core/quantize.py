@@ -1,0 +1,147 @@
+"""Quantize / dequantize primitives shared by block-wise and LoRDS paths.
+
+Storage format
+--------------
+Codes are indices into a codebook (``repro.core.lut``).  On disk / in HBM we
+pack them along the last axis:
+
+  * 4-bit codebooks (nf4/int4/fp4): 2 codes per uint8  (low nibble first)
+  * 2-bit codebooks (nf2/int2):     4 codes per uint8
+  * 3-bit / 8-bit:                  1 code  per uint8  (3-bit is only used in
+    mixed-precision schedules where layers are individually nf4 or nf2; an
+    nf3 codebook is available but stored unpacked)
+
+All functions are jit-friendly and differentiable where meaningful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+from repro.core.scaling import SCALE_EPS
+
+__all__ = [
+    "nearest_code",
+    "quantize_codes",
+    "dequantize_codes",
+    "pack_codes",
+    "unpack_codes",
+    "packed_dim",
+    "fake_quant",
+    "quantize_blockwise",
+    "dequantize_blockwise",
+]
+
+
+def nearest_code(x: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
+    """Index of the nearest codebook level for each element of ``x``.
+
+    Implemented with ``searchsorted`` over the level midpoints — exact
+    nearest-neighbour for a sorted 1-D codebook, O(log L) per element.
+    """
+    mids = lut.midpoints(codebook_name).astype(x.dtype)
+    return jnp.searchsorted(mids, x, side="left").astype(jnp.uint8)
+
+
+def quantize_codes(
+    w: jnp.ndarray, s: jnp.ndarray, codebook_name: str
+) -> jnp.ndarray:
+    """Paper Alg. 1 quantization step: Q_ij = argmin_v (S_ij * v - W_ij)^2.
+
+    For s != 0 this equals nearest-level rounding of w/s (the s^2 factor does
+    not change the argmin); for s < 0 the division flips the ordering, which
+    nearest-neighbour on w/s handles automatically.
+    """
+    safe = jnp.where(jnp.abs(s) < SCALE_EPS, SCALE_EPS, s)
+    ratio = (w / safe).astype(jnp.float32)
+    return nearest_code(ratio, codebook_name)
+
+
+def dequantize_codes(
+    codes: jnp.ndarray, s: jnp.ndarray, codebook_name: str, dtype=None
+) -> jnp.ndarray:
+    """W_hat = codebook[codes] * S."""
+    levels = lut.codebook(codebook_name)
+    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+    out = vals * s
+    return out.astype(dtype) if dtype is not None else out
+
+
+def _codes_per_byte(codebook_name: str) -> int:
+    bits = lut.codebook_bits(codebook_name)
+    return {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+
+
+def packed_dim(m: int, codebook_name: str) -> int:
+    cpb = _codes_per_byte(codebook_name)
+    if m % cpb:
+        raise ValueError(f"last dim {m} not divisible by pack factor {cpb}")
+    return m // cpb
+
+
+def pack_codes(codes: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
+    """Pack uint8 code indices along the last axis into uint8 bytes."""
+    cpb = _codes_per_byte(codebook_name)
+    if cpb == 1:
+        return codes.astype(jnp.uint8)
+    bits = 8 // cpb
+    *lead, m = codes.shape
+    if m % cpb:
+        raise ValueError(f"last dim {m} not divisible by pack factor {cpb}")
+    grp = codes.reshape(*lead, m // cpb, cpb).astype(jnp.uint32)
+    shifts = jnp.arange(cpb, dtype=jnp.uint32) * bits  # low nibble first
+    packed = jnp.sum(grp << shifts[None, :], axis=-1)
+    return packed.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`; returns uint8 code indices."""
+    cpb = _codes_per_byte(codebook_name)
+    if cpb == 1:
+        return packed.astype(jnp.uint8)
+    bits = 8 // cpb
+    mask = jnp.uint8(2**bits - 1)
+    *lead, mp = packed.shape
+    shifts = jnp.arange(cpb, dtype=jnp.uint32) * bits
+    grp = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    return grp.reshape(*lead, mp * cpb).astype(jnp.uint8)
+
+
+def fake_quant(w: jnp.ndarray, s: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
+    """Non-differentiable fake quantization (see qat.py for the STE version)."""
+    codes = quantize_codes(w, s, codebook_name)
+    return dequantize_codes(codes, s, codebook_name, dtype=w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-wise convenience wrappers (the NF4/INT4 baseline format)
+# ---------------------------------------------------------------------------
+
+
+def quantize_blockwise(
+    w: jnp.ndarray, block_size: int, codebook_name: str
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Standard block-wise quantization -> (packed codes, block scales)."""
+    from repro.core.scaling import blockwise_scales, eff_block, expand_block_scales
+
+    block_size = eff_block(w.shape[1], block_size)
+    s_blk = blockwise_scales(w, block_size)
+    s = expand_block_scales(s_blk, block_size)
+    codes = quantize_codes(w, s, codebook_name)
+    return pack_codes(codes, codebook_name), s_blk
+
+
+def dequantize_blockwise(
+    packed: jnp.ndarray,
+    s_blk: jnp.ndarray,
+    block_size: int,
+    codebook_name: str,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    from repro.core.scaling import expand_block_scales
+
+    codes = unpack_codes(packed, codebook_name)
+    block_size = codes.shape[-1] // s_blk.shape[-1]
+    s = expand_block_scales(s_blk, block_size).astype(dtype)
+    return dequantize_codes(codes, s, codebook_name, dtype=dtype)

@@ -1,0 +1,92 @@
+"""Scaling-matrix construction: block-wise scales and the LoRDS S = B·A init.
+
+Conventions (paper §3.1):
+  * weight ``W ∈ R^{n×m}`` (out_features × in_features),
+  * blocks are contiguous runs of ``block_size`` elements along the *rows*
+    (the in-features axis), matching bitsandbytes / QLoRA flattening,
+  * the global scaling matrix ``S ∈ R^{n×m}`` repeats each block scale:
+    ``S = s ⊗ 1_{1×B}`` with ``s ∈ R^{n×(m/B)}`` → ``rank(S) ≤ m/B``.
+
+The LoRDS initialization (paper Eq. 3) truncates the SVD of S:
+  ``S ≈ (U_r Σ_r^{1/2})(Σ_r^{1/2} V_rᵀ) = B·A``
+with the parameter-parity rank ``r = ⌊ n·m / (B·(n+m)) ⌋`` (Appendix A).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "parity_rank",
+    "blockwise_scales",
+    "eff_block",
+    "expand_block_scales",
+    "svd_init",
+    "lords_init_from_weight",
+    "scale_matrix",
+    "SCALE_EPS",
+]
+
+# Scales must stay away from zero: the quantization step divides by S.
+SCALE_EPS = 1e-8
+
+
+def parity_rank(n: int, m: int, block_size: int, extra_rank: int = 0) -> int:
+    """r = floor(n*m / (B*(n+m))) (+ r_q for the parameter-aligned LoRDS†)."""
+    r = (n * m) // (block_size * (n + m)) + extra_rank
+    return max(int(r), 1)
+
+
+def eff_block(m: int, block_size: int) -> int:
+    """Effective block size: clamped to the row length (tiny matrices)."""
+    return min(block_size, m)
+
+
+def blockwise_scales(w: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Symmetric absmax block scales, shape (n, m // block_size).
+
+    Each scale maps its block onto [-1, 1] so codebook levels (normalized to
+    [-1, 1]) dequantize as ``level * scale``.
+    """
+    n, m = w.shape
+    block_size = eff_block(m, block_size)
+    if m % block_size:
+        raise ValueError(f"in-features {m} not divisible by block {block_size}")
+    blocks = w.reshape(n, m // block_size, block_size)
+    return jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1), SCALE_EPS)
+
+
+def expand_block_scales(s: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """(n, m/B) block scales -> dense (n, m) piecewise-constant S."""
+    return jnp.repeat(s, block_size, axis=1)
+
+
+def svd_init(s_dense: jnp.ndarray, rank: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Truncated-SVD factorization S ≈ B·A with balanced sqrt(Σ) split."""
+    u, sig, vt = jnp.linalg.svd(s_dense, full_matrices=False)
+    r = min(rank, sig.shape[0])
+    root = jnp.sqrt(sig[:r])
+    b = u[:, :r] * root[None, :]
+    a = root[:, None] * vt[:r, :]
+    return b, a
+
+
+def lords_init_from_weight(
+    w: jnp.ndarray,
+    block_size: int,
+    rank: int | None = None,
+    extra_rank: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full LoRDS init: block scales -> dense S -> truncated SVD -> (B, A)."""
+    n, m = w.shape
+    if rank is None:
+        rank = parity_rank(n, m, block_size, extra_rank)
+    block_size = eff_block(m, block_size)
+    s = expand_block_scales(blockwise_scales(w, block_size), block_size)
+    return svd_init(s, rank)
+
+
+def scale_matrix(b: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """S = B·A, clamped away from zero (sign-preserving)."""
+    s = b @ a
+    sign = jnp.where(s >= 0, 1.0, -1.0).astype(s.dtype)
+    return jnp.where(jnp.abs(s) < SCALE_EPS, sign * SCALE_EPS, s)

@@ -1,0 +1,7 @@
+"""repro.data — restartable token pipeline + PTQ calibration."""
+from repro.data.calibration import synthetic_activations  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    BinTokenFile,
+    SyntheticLM,
+    make_batch_iterator,
+)

@@ -1,0 +1,14 @@
+"""repro.distributed — sharding rules, fault tolerance, elastic restarts."""
+from repro.distributed.fault_tolerance import (  # noqa: F401
+    PreemptionGuard,
+    StragglerMonitor,
+    elastic_mesh_shape,
+    retry_on_transient,
+)
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingPolicy,
+    estimate_quantized_gb,
+    make_rules,
+    resolve_spec,
+    tree_shardings,
+)

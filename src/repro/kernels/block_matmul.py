@@ -1,0 +1,98 @@
+"""Block-wise (bitsandbytes-style) dequant-matmul Pallas kernel — baseline.
+
+Same contract as :mod:`repro.kernels.lords_matmul` but with piecewise-constant
+block scales instead of the low-rank S = B·A.  Exists so the Fig.-2 style
+kernel comparison (bnb-NF4 vs QLoRA vs LoRDS) is apples-to-apples on TPU.
+
+y[M,N] = x[M,K] @ (lut[Q] ⊙ repeat(s_blk))ᵀ
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import lut as lut_mod
+from repro.kernels.lords_matmul import _lut_select, _unpack_tile
+
+__all__ = ["block_matmul_pallas"]
+
+
+def _kernel(x_ref, q_ref, s_ref, lut_ref, o_ref, *, pack, n_levels, reps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_tile(q_ref[...], pack)
+    vals = _lut_select(codes, lut_ref, n_levels)
+    s = s_ref[...]  # (bn, bk // block_size) or (bn, 1)
+    bn, nblk = s.shape
+    s_full = jnp.broadcast_to(s[:, :, None], (bn, nblk, reps)).reshape(
+        bn, nblk * reps
+    )
+    if s_full.shape[1] != vals.shape[1]:  # block spans multiple k tiles
+        s_full = jnp.broadcast_to(s, vals.shape)
+    w = (vals * s_full).astype(x_ref.dtype)
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "codebook_name", "bm", "bn", "bk",
+                     "interpret"),
+)
+def block_matmul_pallas(
+    x: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    s_blk: jnp.ndarray,
+    block_size: int,
+    codebook_name: str = "nf4",
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, kdim = x.shape
+    n = q_packed.shape[0]
+    bits = lut_mod.codebook_bits(codebook_name)
+    pack = {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    levels = lut_mod.codebook(codebook_name)
+    n_levels = levels.shape[0]
+
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    if m % bm or n % bn or kdim % bk:
+        raise ValueError(f"({m},{n},{kdim}) not divisible by ({bm},{bn},{bk})")
+    if not (bk % block_size == 0 or block_size % bk == 0):
+        raise ValueError(f"bk {bk} incompatible with block_size {block_size}")
+    grid = (m // bm, n // bn, kdim // bk)
+
+    if bk >= block_size:
+        s_cols, reps = bk // block_size, block_size
+        s_index = lambda i, j, k: (j, k)
+    else:
+        s_cols, reps = 1, bk
+        s_index = lambda i, j, k: (j, k // (block_size // bk))
+
+    lut_arr = levels.reshape(1, -1).astype(jnp.float32)
+    kern = functools.partial(_kernel, pack=pack, n_levels=n_levels, reps=reps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk // pack), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, s_cols), s_index),
+            pl.BlockSpec((1, n_levels), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, q_packed, s_blk.astype(jnp.float32), lut_arr)

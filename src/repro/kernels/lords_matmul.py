@@ -1,0 +1,141 @@
+"""Fused LoRDS dequant-matmul Pallas TPU kernel.
+
+Computes  y[M, N] = x[M, K] @ Ŵᵀ,   Ŵ[N, K] = lut[Q] ⊙ (B·A)
+
+with Q stored packed (2×4-bit or 4×2-bit codes per uint8) in HBM.  This is
+the TPU analogue of the paper's Triton kernel (§4.4): the low-rank scale
+product rides along with each weight tile, so dequantization adds no extra
+HBM traffic beyond the packed codes themselves — the entire reason LoRDS
+serving matches block-wise NF4 speed while QLoRA pays for an extra adapter
+GEMM.
+
+Tiling (all VMEM):
+  grid = (M/bm, N/bn, K/bk), K innermost for accumulation
+    x tile   (bm, bk)            input activations
+    q tile   (bn, bk/pack) uint8 packed codes
+    bT tile  (r, bn)             scale factor B, transposed so the tiny rank
+    a tile   (r, bk)             dim sits in sublanes (lane dim stays 128-al.)
+    lut      (1, L) f32          codebook levels
+    out tile (bm, bn) f32        accumulated across the K grid axis
+
+Per tile:  S = bTᵀ·a  (r-contraction, r ≤ 32), W = lut[q]⊙S, acc += x·Wᵀ.
+The MXU sees two matmuls: the tiny (bn×r)×(r×bk) scale product and the main
+(bm×bk)×(bk×bn) GEMM — dequant itself is pure VPU elementwise work.
+
+Weight-stationary layout note: with grid order (i, j, k) the q/bT/a tiles are
+re-fetched for every i; for decode (M small → one i) this is optimal
+(weights stream exactly once — the memory-roofline minimum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import lut as lut_mod
+
+__all__ = ["lords_matmul_pallas"]
+
+
+def _unpack_tile(q, pack: int):
+    """(bn, bkp) uint8 -> (bn, bkp*pack) int32 codes, low bits first."""
+    if pack == 1:
+        return q.astype(jnp.int32)
+    bits = 8 // pack
+    mask = (1 << bits) - 1
+    qi = q.astype(jnp.int32)
+    parts = [(qi >> (bits * i)) & mask for i in range(pack)]
+    stacked = jnp.stack(parts, axis=-1)  # (bn, bkp, pack)
+    return stacked.reshape(q.shape[0], q.shape[1] * pack)
+
+
+def _lut_select(codes, lut_ref, n_levels: int):
+    """Select-tree LUT gather: Mosaic-friendly (no dynamic gather)."""
+    out = jnp.zeros(codes.shape, jnp.float32)
+    for l in range(n_levels):
+        out = jnp.where(codes == l, lut_ref[0, l], out)
+    return out
+
+
+def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
+            eps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_tile(q_ref[...], pack)                    # (bn, bk)
+    vals = _lut_select(codes, lut_ref, n_levels)              # (bn, bk) f32
+    # low-rank scale tile: S = Bᵀᵀ·A  -> (bn, bk), r-contraction on the MXU
+    s = jax.lax.dot_general(
+        bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    sign = jnp.where(s >= 0, 1.0, -1.0)
+    s = jnp.where(jnp.abs(s) < eps, sign * eps, s)
+    w = (vals * s).astype(x_ref.dtype)                        # (bn, bk)
+    acc = jax.lax.dot_general(
+        x_ref[...], w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                          # (bm, bn)
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codebook_name", "bm", "bn", "bk", "interpret"),
+)
+def lords_matmul_pallas(
+    x: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """See module docstring.  x (M,K) · dequant(q (N,K/pack), b (N,r), a (r,K))ᵀ."""
+    from repro.core.scaling import SCALE_EPS
+
+    m, kdim = x.shape
+    n, r = b.shape
+    bits = lut_mod.codebook_bits(codebook_name)
+    pack = {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    levels = lut_mod.codebook(codebook_name)
+    n_levels = levels.shape[0]
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, kdim)
+    if m % bm or n % bn or kdim % bk or bk % pack:
+        raise ValueError(
+            f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+    grid = (m // bm, n // bn, kdim // bk)
+
+    bt = b.T  # (r, N): keep the tiny rank dim out of the lane dimension
+    lut_arr = levels.reshape(1, -1).astype(jnp.float32)
+
+    kern = functools.partial(
+        _kernel, pack=pack, n_levels=n_levels, eps=SCALE_EPS
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk // pack), lambda i, j, k: (j, k)),
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((1, n_levels), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, q_packed, bt, a, lut_arr)

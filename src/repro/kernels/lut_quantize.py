@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the LoRDS quantization step (Alg. 1, step 2.1).
+
+    codes[i, j] = argmin_{v ∈ L} (S_ij · v − W_ij)²,   S = B·A
+                = nearest-level( W_ij / S_ij )          (S² factors out)
+
+emitted *packed* (2×4-bit / 4×2-bit per uint8).  Used inside the PTQ
+refinement loop and the QAT fake-quant forward, where it fuses the S = B·A
+product, the division, the midpoint compare tree and the nibble packing into
+one VMEM pass over W.
+
+Tiling: grid = (N/bn, K/bk); W tile (bn, bk); bT (r, bn); a (r, bk);
+midpoints (1, L-1); out tile (bn, bk/pack) uint8.
+
+The nearest-level search is a static compare tree over the L−1 midpoints
+(code = Σ_l [ratio > mid_l]) — branch-free, VPU-only, no dynamic gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import lut as lut_mod
+
+__all__ = ["lut_quantize_pallas"]
+
+
+def _kernel(w_ref, bt_ref, a_ref, mids_ref, o_ref, *, pack, n_mids, eps):
+    s = jax.lax.dot_general(
+        bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    sign = jnp.where(s >= 0, 1.0, -1.0)
+    s = jnp.where(jnp.abs(s) < eps, sign * eps, s)
+    ratio = w_ref[...].astype(jnp.float32) / s
+    codes = jnp.zeros(ratio.shape, jnp.int32)
+    for l in range(n_mids):
+        codes += (ratio > mids_ref[0, l]).astype(jnp.int32)
+    if pack == 1:
+        o_ref[...] = codes.astype(jnp.uint8)
+        return
+    bits = 8 // pack
+    bn, bk = codes.shape
+    grp = codes.reshape(bn, bk // pack, pack)
+    packed = jnp.zeros((bn, bk // pack), jnp.int32)
+    for i in range(pack):
+        packed |= grp[:, :, i] << (bits * i)
+    o_ref[...] = packed.astype(jnp.uint8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("codebook_name", "bn", "bk", "interpret")
+)
+def lut_quantize_pallas(
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+    *,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    from repro.core.scaling import SCALE_EPS
+
+    n, kdim = w.shape
+    _, r = b.shape
+    bits = lut_mod.codebook_bits(codebook_name)
+    pack = {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    mids = lut_mod.midpoints(codebook_name).reshape(1, -1).astype(jnp.float32)
+    n_mids = mids.shape[1]
+
+    bn = min(bn, n)
+    bk = min(bk, kdim)
+    if n % bn or kdim % bk or bk % pack:
+        raise ValueError(f"({n},{kdim}) not divisible by ({bn},{bk})")
+    grid = (n // bn, kdim // bk)
+
+    kern = functools.partial(_kernel, pack=pack, n_mids=n_mids, eps=SCALE_EPS)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((r, bn), lambda i, k: (0, i)),
+            pl.BlockSpec((r, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((1, n_mids), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk // pack), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, kdim // pack), jnp.uint8
+        ),
+        interpret=interpret,
+    )(w, b.T, a, mids)

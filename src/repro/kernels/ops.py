@@ -1,0 +1,63 @@
+"""Public jit'd wrappers for the kernels with platform dispatch.
+
+On TPU the Pallas kernels run natively; everywhere else (CPU tests, the
+512-device dry-run) the pure-jnp oracles from :mod:`repro.kernels.ref` are
+used — numerically identical contract, so tests written against `ops` hold on
+both paths.  ``use_pallas`` can force either path (tests pass
+``use_pallas=True, interpret=True`` to execute the real kernel body on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_matmul import block_matmul_pallas
+from repro.kernels.lords_matmul import lords_matmul_pallas
+from repro.kernels.lut_quantize import lut_quantize_pallas
+
+__all__ = ["lords_matmul", "lut_quantize", "block_matmul", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto(use_pallas):
+    return on_tpu() if use_pallas is None else use_pallas
+
+
+def lords_matmul(
+    x, q_packed, b, a, codebook_name="nf4", *,
+    use_pallas=None, interpret=False, **blocks,
+):
+    """y = x @ (lut[Q] ⊙ (B·A))ᵀ — fused on TPU, oracle elsewhere."""
+    if _auto(use_pallas):
+        return lords_matmul_pallas(
+            x, q_packed, b, a, codebook_name, interpret=interpret, **blocks
+        )
+    return ref.lords_matmul_ref(x, q_packed, b, a, codebook_name)
+
+
+def lut_quantize(
+    w, b, a, codebook_name="nf4", *, use_pallas=None, interpret=False, **blocks
+):
+    """Packed nearest-level codes of W ⊘ (B·A)."""
+    if _auto(use_pallas):
+        return lut_quantize_pallas(
+            w, b, a, codebook_name, interpret=interpret, **blocks
+        )
+    return ref.lut_quantize_ref(w, b, a, codebook_name)
+
+
+def block_matmul(
+    x, q_packed, s_blk, block_size, codebook_name="nf4", *,
+    use_pallas=None, interpret=False, **blocks,
+):
+    """Block-wise baseline dequant-matmul."""
+    if _auto(use_pallas):
+        return block_matmul_pallas(
+            x, q_packed, s_blk, block_size, codebook_name,
+            interpret=interpret, **blocks,
+        )
+    return ref.block_matmul_ref(x, q_packed, s_blk, block_size, codebook_name)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references (tests assert_allclose kernels against
+them) *and* the CPU/dry-run execution path: ``ops.py`` dispatches here on
+non-TPU platforms, so the multi-pod dry-run lowers these exact graphs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lut
+from repro.core.quantize import unpack_codes
+from repro.core.scaling import SCALE_EPS, expand_block_scales
+
+__all__ = ["lords_matmul_ref", "lut_quantize_ref", "block_matmul_ref"]
+
+
+def _dequant_lords(q_packed, b, a, codebook_name, dtype):
+    codes = unpack_codes(q_packed, codebook_name)
+    levels = lut.codebook(codebook_name)
+    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+    s = b.astype(jnp.float32) @ a.astype(jnp.float32)
+    sign = jnp.where(s >= 0, 1.0, -1.0)
+    s = jnp.where(jnp.abs(s) < SCALE_EPS, sign * SCALE_EPS, s)
+    return (vals * s).astype(dtype)
+
+
+def lords_matmul_ref(
+    x: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """y = x @ (lut[Q] ⊙ (B·A))ᵀ.   x: (M, K); q: (N, K/pack); y: (M, N)."""
+    w_hat = _dequant_lords(q_packed, b, a, codebook_name, x.dtype)
+    return jnp.dot(x, w_hat.T, preferred_element_type=out_dtype).astype(out_dtype)
+
+
+def lut_quantize_ref(
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+) -> jnp.ndarray:
+    """Packed nearest-level codes of W ⊘ (B·A) (Alg. 1 quantization step)."""
+    from repro.core.quantize import pack_codes, quantize_codes
+
+    s = b.astype(jnp.float32) @ a.astype(jnp.float32)
+    codes = quantize_codes(w, s, codebook_name)
+    return pack_codes(codes, codebook_name)
+
+
+def block_matmul_ref(
+    x: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    s_blk: jnp.ndarray,
+    block_size: int,
+    codebook_name: str = "nf4",
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Block-wise (bitsandbytes-style) dequant matmul baseline."""
+    codes = unpack_codes(q_packed, codebook_name)
+    levels = lut.codebook(codebook_name)
+    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+    s = expand_block_scales(s_blk, block_size)
+    w_hat = (vals * s).astype(x.dtype)
+    return jnp.dot(x, w_hat.T, preferred_element_type=out_dtype).astype(out_dtype)

@@ -1,0 +1,1 @@
+"""repro.launch — mesh, step builders, dry-run, train/serve drivers."""

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * ``jax.jit(step).lower(**abstract).compile()`` must succeed on the 16×16
+    single-pod mesh AND the 2×16×16 multi-pod mesh for every cell,
+  * ``compiled.memory_analysis()`` -> bytes/device (fits-in-HBM evidence),
+  * ``compiled.cost_analysis()``  -> FLOPs & HBM bytes (roofline numerator),
+  * HLO text -> collective bytes (roofline collective term).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+
+NOTE: the device-count env var above MUST precede any jax import (jax locks
+the device count at first init) — hence the unconventional module layout.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    Roofline,
+    collective_bytes,
+    cpu_upcast_bytes,
+    model_flops,
+)
+from repro.launch.steps import build_plan
+
+# long_500k only runs for sub-quadratic archs (see DESIGN.md §Arch-applicability)
+LONG_CTX_ARCHS = {"xlstm-1.3b", "jamba-1.5-large-398b"}
+
+# archs over the single-device HBM budget at 1-D TP -> 2-D weight sharding
+HBM_BUDGET_GB = 8.0
+
+
+def cells(archs=None, shapes=None):
+    archs = archs or list_configs()
+    shapes = shapes or list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            if s == "long_500k" and a not in LONG_CTX_ARCHS:
+                continue
+            yield a, s
+
+
+def _compile_plan(cfg, mesh, shape_cfg, force_2d, plan_tweaks=None):
+    plan = build_plan(cfg, mesh, shape_cfg, budget_gb=HBM_BUDGET_GB,
+                      force_2d=force_2d, **(plan_tweaks or {}))
+    with mesh:
+        jitted = jax.jit(
+            plan.step_fn,
+            in_shardings=plan.in_shardings,
+            out_shardings=plan.out_shardings,
+            donate_argnums=plan.donate_argnums,
+        )
+        lowered = jitted.lower(*plan.abstract_args)
+        compiled = lowered.compile()
+    return plan, compiled
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    # remove CPU-emitter bf16->f32 operand upcasts (absent on the TPU target)
+    bytes_tpu = max(raw_bytes - cpu_upcast_bytes(hlo), raw_bytes * 0.1)
+    return (float(cost.get("flops", 0.0)), bytes_tpu,
+            float(coll["total"]), coll)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             force_2d: bool | None = None, verbose: bool = True,
+             plan_tweaks: dict | None = None, probes: bool = True,
+             cfg_mutate=None) -> dict:
+    """Compile the full scanned program (memory/sharding proof) plus two
+    unrolled probe programs (1 and 2 periods) whose linear extrapolation
+    gives true per-step FLOPs/bytes/collective-bytes — XLA's cost analysis
+    counts while-loop bodies once, so the scanned program alone undercounts.
+    """
+    from repro.distributed.sharding import estimate_quantized_gb
+
+    cfg = get_config(arch)
+    if cfg_mutate is not None:
+        cfg = cfg_mutate(cfg)
+    shape_cfg = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    model_par = mesh.shape.get("model", 1)
+    if force_2d is None:
+        force_2d = estimate_quantized_gb(cfg) / model_par > HBM_BUDGET_GB
+
+    t0 = time.time()
+    plan, compiled = _compile_plan(cfg, mesh, shape_cfg, force_2d, plan_tweaks)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    f_scan, b_scan, c_scan, coll = _cost_of(compiled)
+
+    # ---- unrolled probes -> extrapolated true per-step costs ----
+    if probes and cfg.num_periods > 1:
+        p = cfg.period
+        # probes run single-microbatch so per-step cost extrapolation is exact
+        # (they are compiled, never executed — probe memory doesn't matter)
+        ptweaks = dict(plan_tweaks or {}, num_microbatches=1)
+        cfg1 = cfg.with_(num_layers=p, scan_layers=False)
+        cfg2 = cfg.with_(num_layers=2 * p, scan_layers=False)
+        _, comp1 = _compile_plan(cfg1, mesh, shape_cfg, force_2d, ptweaks)
+        f1, b1, c1, _ = _cost_of(comp1)
+        _, comp2 = _compile_plan(cfg2, mesh, shape_cfg, force_2d, ptweaks)
+        f2, b2, c2, _ = _cost_of(comp2)
+        k = cfg.num_periods - 1
+        flops, bytes_hbm, coll_b = (f1 + (f2 - f1) * k,
+                                    b1 + (b2 - b1) * k,
+                                    c1 + (c2 - c1) * k)
+        probe_info = {"probe1": [f1, b1, c1], "probe2": [f2, b2, c2]}
+    else:
+        flops, bytes_hbm, coll_b = f_scan, b_scan, c_scan
+        probe_info = {"scan_only": [f_scan, b_scan, c_scan]}
+
+    tokens = (shape_cfg.global_batch * shape_cfg.seq_len
+              if shape_cfg.kind != "decode" else shape_cfg.global_batch)
+    values = plan.abstract_args[0] if shape_cfg.kind != "train" else None
+    if shape_cfg.kind == "train":
+        from repro.core import peft
+
+        values = peft.combine(plan.abstract_args[0], plan.abstract_args[1])
+    mf_total = model_flops(values, cfg, tokens, shape_cfg.kind == "train")
+
+    rl = Roofline(
+        flops=flops,
+        bytes_hbm=bytes_hbm,
+        bytes_collective=coll_b,
+        model_flops_per_dev=mf_total / n_dev,
+        n_devices=n_dev,
+    )
+
+    mem_dict = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_dict[attr] = int(v)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape_cfg.kind, "mode": cfg.quant.mode,
+        "status": "ok", "force_2d": bool(force_2d),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_dict,
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "probe_info": probe_info,
+        "sharding_fallbacks": plan.rules.dropped[:20],
+        "roofline": rl.to_dict(),
+    }
+    if verbose:
+        arg_gb = mem_dict.get("argument_size_in_bytes", 0) / 1e9
+        tmp_gb = mem_dict.get("temp_size_in_bytes", 0) / 1e9
+        print(f"[ok] {arch:24s} {shape:12s} mesh={rec['mesh']:8s} "
+              f"args={arg_gb:7.2f}GB temp={tmp_gb:7.2f}GB "
+              f"t_c={rl.t_compute:.3e}s t_m={rl.t_memory:.3e}s "
+              f"t_coll={rl.t_collective:.3e}s bound={rl.bottleneck:10s} "
+              f"frac={rl.model_fraction:.3f} (compile {t_compile:.0f}s)",
+              flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force-2d", action="store_true", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        todo = list(cells())
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        todo = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    failures = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            try:
+                records.append(run_cell(arch, shape, multi_pod=mp,
+                                        force_2d=args.force_2d,
+                                        probes=not mp))
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures += 1
+                traceback.print_exc()
+                records.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": f"FAIL: {type(e).__name__}: {e}"})
+                print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}",
+                      flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production meshes.
+
+Defined as functions (importing this module never touches jax device state).
+
+Single pod: 16×16 = 256 chips ('data', 'model').
+Multi-pod:  2×16×16 = 512 chips ('pod', 'data', 'model') — the 'pod' axis is
+the slow (DCN/inter-pod ICI) axis; batch shards over ('pod','data').
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh over the local device (CPU tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,209 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW   (serial lower bound)
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed out of the (per-device SPMD) HLO text — the sum of output-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (convention documented in EXPERIMENTS.md).
+
+MODEL_FLOPS uses the 6·N·D (train) / 2·N·D (forward) convention with N =
+matmul parameters (packed codes expanded to logical element counts; MoE
+counted active-only), so MODEL_FLOPS/HLO_FLOPs exposes remat & attention &
+dispatch overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s per link (serial lower bound; no multi-link model)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1, "s4": 0.5,
+    "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum of bytes over every 'dtype[dims]' shape literal in ``text``."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _executed_lines(hlo_text: str):
+    """Lines of computations XLA executes per-op (skip fusion interiors).
+
+    cost_analysis models a fusion's traffic as its operands+outputs, so ops
+    *inside* %fused_computation bodies must not be double-counted by our
+    text-level passes.
+    """
+    in_fusion = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not in_fusion and ls.startswith("%fused_") and ls.endswith("{"):
+            in_fusion = True
+            depth = 1
+            continue
+        if in_fusion:
+            depth += ls.count("{") - ls.count("}")
+            if depth <= 0:
+                in_fusion = False
+            continue
+        yield ls
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind output bytes summed over the per-device program."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for ls in _executed_lines(hlo_text):
+        if "=" not in ls:
+            continue
+        lhs, rhs = ls.split("=", 1)
+        rhs_s = rhs.strip()
+        # op name appears as e.g. 'bf16[128,4096] all-reduce(' — after shape
+        m = re.match(r"(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z0-9-]+)",
+                     rhs_s)
+        if not m:
+            continue
+        op = m.group(1)
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                # bytes = output shape(s) on the lhs-declared shape in rhs
+                shape_txt = rhs_s.split(op)[0]
+                out[kind] += _shape_bytes(shape_txt)
+                counts[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+_UPCAST_RE = re.compile(
+    r"=\s*f32\[([0-9,]*)\][^ ]*\s+convert\(\s*(?:[a-z0-9_.%-]+\s+)?bf16\[")
+
+
+def cpu_upcast_bytes(hlo_text: str) -> float:
+    """Bytes attributable to bf16->f32 operand upcasts the CPU emitter
+    inserts before dots (TPU MXUs consume bf16 natively — these converts do
+    not exist in the TPU program).  Counted as read(bf16) + write(f32) = 6
+    bytes/element, top-level ops only.
+    """
+    total = 0.0
+    for ls in _executed_lines(hlo_text):
+        m = _UPCAST_RE.search(ls)
+        if not m:
+            continue
+        n = 1
+        for d in m.group(1).split(","):
+            if d:
+                n *= int(d)
+        if n * 4 >= 1 << 20:  # ignore small converts
+            total += 6.0 * n
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_hbm: float
+    bytes_collective: float
+    model_flops_per_dev: float
+    n_devices: int
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.bytes_collective / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def model_fraction(self):
+        """useful-model-FLOPs time / bound time (upper bound on MFU)."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops_per_dev / PEAK_FLOPS) / self.t_bound
+
+    @property
+    def flops_ratio(self):
+        return self.model_flops_per_dev / self.flops if self.flops else 0.0
+
+    def to_dict(self):
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.bytes_hbm,
+            "collective_bytes_per_dev": self.bytes_collective,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_dev": self.model_flops_per_dev,
+            "model_flops_ratio": self.flops_ratio,
+            "model_fraction_of_roofline": self.model_fraction,
+        }
+
+
+def model_flops(values, cfg, tokens: int, training: bool) -> float:
+    """6·N·D (train) or 2·N·D (forward) with MoE active-only counting."""
+    import jax
+
+    from repro.core import lut
+
+    pack = {8: 1, 4: 2, 3: 1, 2: 4}[lut.codebook_bits(cfg.quant.codebook)]
+    flat = jax.tree_util.tree_flatten_with_path(values)[0]
+    n_active = 0.0
+    moe_frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        name = keys[-1] if keys else ""
+        if name == "q":
+            n = leaf.size * pack
+        elif name in ("w", "head", "router", "dt_proj", "lora_a", "lora_b", "r"):
+            n = leaf.size
+        else:
+            continue
+        # stacked expert FFNs: (layers, E, out, in) or (E, out, in)
+        is_expert = cfg.moe is not None and any(
+            k in ("w_gate", "w_up", "w_down") for k in keys) and "mlp" in keys
+        n_active += n * (moe_frac if is_expert else 1.0)
+    factor = 6.0 if training else 2.0
+    return factor * n_active * tokens

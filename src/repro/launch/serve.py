@@ -1,0 +1,112 @@
+"""Serving driver: batched prefill + decode with a quantized (LoRDS) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+
+Request flow: a batch of prompts is prefilled once (cache build), then
+decoded step by step with greedy sampling.  The model runs fully quantized
+(packed Q + B·A scales) — the zero-overhead inference the paper claims,
+since the PEFT-adapted scales live inside the dequant path.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+if jax.default_backend() == "cpu":
+    os.environ.setdefault("REPRO_CPU_EXEC", "1")
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_plan
+from repro.models import cache_init, model_init, split_tree
+
+
+def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
+                mesh=None, seed: int = 0, params=None, prompts=None) -> dict:
+    mesh = mesh or make_host_mesh()
+    capacity = prompt_len + gen
+    prefill_shape = ShapeCfg("serve_prefill", capacity, batch, "prefill")
+    decode_shape = ShapeCfg("serve_decode", capacity, batch, "decode")
+
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params, _ = split_tree(model_init(key, cfg))
+    cache, _ = split_tree(cache_init(cfg, batch, capacity))
+
+    pre_plan = build_plan(cfg, mesh, prefill_shape)
+    dec_plan = build_plan(cfg, mesh, decode_shape)
+
+    if prompts is None:
+        prompts = np.random.default_rng(seed).integers(
+            0, cfg.vocab_size, (batch, capacity)).astype(np.int32)
+    else:
+        pad = np.zeros((batch, capacity - prompts.shape[1]), np.int32)
+        prompts = np.concatenate([prompts, pad], axis=1).astype(np.int32)
+
+    with mesh:
+        prefill = jax.jit(pre_plan.step_fn, donate_argnums=(2,))
+        decode = jax.jit(dec_plan.step_fn, donate_argnums=(2,))
+
+        t0 = time.time()
+        if cfg.input_kind == "tokens":
+            batch_in = {"tokens": jnp.asarray(prompts)}
+        else:
+            batch_in = {"embeds": jax.random.normal(
+                key, (batch, capacity, cfg.d_model), jnp.bfloat16)}
+        logits, cache = prefill(params, batch_in, cache)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(
+            jnp.int32)
+        generated = [np.asarray(tok)]
+        t0 = time.time()
+        for i in range(gen - 1):
+            pos = jnp.full((batch,), prompt_len + i, jnp.int32)
+            if cfg.input_kind == "tokens":
+                step_in = {"tokens": tok}
+            else:
+                step_in = {"embeds": jax.random.normal(
+                    key, (batch, 1, cfg.d_model), jnp.bfloat16)}
+            logits, cache = decode(params, step_in, cache, pos)
+            tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(
+                jnp.int32)
+            generated.append(np.asarray(tok))
+        jax.block_until_ready(logits)
+        t_decode = time.time() - t0
+
+    toks = np.stack(generated, axis=1)
+    return {
+        "tokens": toks,
+        "prefill_tok_s": batch * prompt_len / max(t_prefill, 1e-9),
+        "decode_tok_s": batch * max(gen - 1, 1) / max(t_decode, 1e-9),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    out = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                      gen=args.gen)
+    print(f"[serve] prefill {out['prefill_tok_s']:.1f} tok/s, "
+          f"decode {out['decode_tok_s']:.1f} tok/s")
+    print("[serve] sample tokens:", out["tokens"][0][:16])
+
+
+if __name__ == "__main__":
+    main()

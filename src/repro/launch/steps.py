@@ -1,0 +1,239 @@
+"""pjit-able train / serve steps + the machinery to build their shardings.
+
+``build_plan(cfg, mesh, shape_cfg, ...)`` produces a StepPlan holding
+  * abstract state (ShapeDtypeStructs — nothing allocated),
+  * matching NamedSharding trees (in/out),
+  * the step callable (closed over cfg + activation rules),
+ready for ``jax.jit(...).lower(...).compile()`` (dry-run) or real execution.
+
+Modes:
+  * train: LoRDS-PEFT by default (trainable = B/A; frozen packed Q) — the
+    paper's regime and the only one that fits 1T params on 512 v5e chips;
+    ``cfg.quant.mode='qat'`` switches to full STE fake-quant training.
+  * prefill: full-sequence forward, fills KV/SSM caches, returns last logits.
+  * decode: one token with caches (the serve_step for decode shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core import peft
+from repro.distributed.sharding import make_rules, tree_shardings
+from repro.models import (
+    activation_rules,
+    cache_init,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    model_init,
+    split_tree,
+)
+from repro.optim import adamw_init, adamw_update
+
+__all__ = ["StepPlan", "build_plan"]
+
+
+@dataclasses.dataclass
+class StepPlan:
+    name: str
+    step_fn: Callable
+    abstract_args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    rules: Any          # ShardingPolicy
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _abstract_init(cfg, batch_example=None):
+    key = jax.random.PRNGKey(0)
+    ptree = jax.eval_shape(lambda k: model_init(k, cfg), key)
+    return ptree
+
+
+def _batch_specs(cfg, shape_cfg, mesh, rules, *, decode=False):
+    b = shape_cfg.global_batch
+    s = shape_cfg.seq_len
+    batch_rule = rules.act_rules.get("batch")
+    axes = tuple(a for a in ((batch_rule,) if isinstance(batch_rule, str)
+                             else (batch_rule or ())) if a in mesh.shape)
+    bsize = 1
+    for a in axes:
+        bsize *= mesh.shape[a]
+    bspec = (axes if len(axes) > 1 else (axes[0] if axes else None)) \
+        if (axes and b % max(bsize, 1) == 0) else None
+
+    def sd(shape, dtype, spec):
+        return (jax.ShapeDtypeStruct(shape, dtype),
+                NamedSharding(mesh, PartitionSpec(*spec)))
+
+    if decode:
+        if cfg.input_kind == "tokens":
+            tok, tok_sh = sd((b,), jnp.int32, (bspec,))
+            batch = {"tokens": tok}
+            bsh = {"tokens": tok_sh}
+        else:
+            e, e_sh = sd((b, 1, cfg.d_model), jnp.bfloat16, (bspec, None, None))
+            batch = {"embeds": e}
+            bsh = {"embeds": e_sh}
+        pos, pos_sh = sd((b,), jnp.int32, (bspec,))
+        return batch, bsh, pos, pos_sh
+
+    if cfg.input_kind == "tokens":
+        tok, tok_sh = sd((b, s), jnp.int32, (bspec, None))
+        lab, lab_sh = sd((b, s), jnp.int32, (bspec, None))
+        return {"tokens": tok, "labels": lab}, {"tokens": tok_sh, "labels": lab_sh}
+    e, e_sh = sd((b, s, cfg.d_model), jnp.bfloat16, (bspec, None, None))
+    lab, lab_sh = sd((b, s), jnp.int32, (bspec, None))
+    return {"embeds": e, "labels": lab}, {"embeds": e_sh, "labels": lab_sh}
+
+
+def _pick_microbatches(global_batch: int, dp: int, seq: int,
+                       target_tokens: int = 8192) -> int:
+    """Smallest divisor of the per-DP-shard batch that caps live tokens/device
+    at ~target_tokens per microbatch (bounds the remat carry footprint)."""
+    b_local = max(global_batch // max(dp, 1), 1)
+    want = -(-b_local * seq // target_tokens)
+    for n in range(1, b_local + 1):
+        if b_local % n == 0 and n >= want:
+            return n
+    return b_local
+
+
+def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
+               force_2d: bool | None = None, budget_gb: float = 8.0,
+               num_microbatches: int | None = None,
+               target_micro_tokens: int = 8192,
+               seq_parallel: bool = False) -> StepPlan:
+    kind = shape_cfg.kind
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    seq_shard = (kind == "decode" and shape_cfg.global_batch < dp)
+    rules = make_rules(cfg, mesh, kind, budget_gb=budget_gb,
+                       force_2d=force_2d, seq_shard_cache=seq_shard,
+                       seq_parallel=seq_parallel)
+    dropped: list = []
+
+    ptree = _abstract_init(cfg)
+    values, axes = split_tree(ptree)
+    shard_tree = tree_shardings(axes, values, rules.weight_rules, mesh, dropped)
+    rules.dropped.extend(dropped)
+
+    if kind == "train":
+        t_vals, f_vals = peft.partition(values, cfg.quant)
+        t_sh, f_sh = peft.partition(shard_tree, cfg.quant)
+        opt = jax.eval_shape(adamw_init, t_vals)
+        rep = NamedSharding(mesh, PartitionSpec())
+        opt_sh = type(opt)(mu=t_sh, nu=t_sh, step=rep)
+        tgt = min(target_micro_tokens, cfg.micro_tokens)
+        n_micro = (num_microbatches if num_microbatches is not None else
+                   _pick_microbatches(shape_cfg.global_batch, dp,
+                                      shape_cfg.seq_len, tgt))
+
+        def train_step(trainable, frozen, opt_state, batch):
+            with activation_rules(rules.act_rules):
+                def loss_fn(t, mb):
+                    params = peft.combine(t, frozen)
+                    loss, metrics = forward_train(params, cfg, mb)
+                    return loss, metrics
+
+                if n_micro == 1:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(trainable, batch)
+                else:
+                    # gradient accumulation over microbatches (memory: remat
+                    # carries scale with the microbatch, not the global batch)
+                    from repro.models.common import shard as shard_act
+
+                    def split(x):
+                        x = x.reshape(n_micro, x.shape[0] // n_micro,
+                                      *x.shape[1:])
+                        return shard_act(x, None, "batch")
+                    micro = jax.tree.map(split, batch)
+                    g0 = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), trainable)
+
+                    def mb_body(carry, mb):
+                        g_acc, loss_acc = carry
+                        (loss, _), grads = jax.value_and_grad(
+                            loss_fn, has_aux=True)(trainable, mb)
+                        g_acc = jax.tree.map(
+                            lambda a, g: a + g.astype(jnp.float32),
+                            g_acc, grads)
+                        return (g_acc, loss_acc + loss), None
+
+                    (grads, loss_sum), _ = jax.lax.scan(
+                        mb_body, (g0, jnp.zeros((), jnp.float32)), micro)
+                    grads = jax.tree.map(lambda g: g / n_micro, grads)
+                    loss = loss_sum / n_micro
+                    metrics = {"loss": loss}
+                new_t, new_opt, gnorm = adamw_update(
+                    trainable, grads, opt_state, lr)
+            metrics = dict(metrics, grad_norm=gnorm)
+            return new_t, new_opt, metrics
+
+        batch, batch_sh = _batch_specs(cfg, shape_cfg, mesh, rules)
+        return StepPlan(
+            name=f"train:{cfg.name}:{shape_cfg.name}",
+            step_fn=train_step,
+            abstract_args=(t_vals, f_vals, opt, batch),
+            in_shardings=(t_sh, f_sh, opt_sh, batch_sh),
+            out_shardings=(t_sh, opt_sh, None),
+            rules=rules,
+            donate_argnums=(0, 2),
+            meta={"mode": cfg.quant.mode, "kind": kind,
+                  "num_microbatches": n_micro},
+        )
+
+    # ---- serving ----
+    cap = shape_cfg.seq_len
+    cache_ptree = jax.eval_shape(
+        lambda: cache_init(cfg, shape_cfg.global_batch, cap))
+    cache_vals, cache_axes = split_tree(cache_ptree)
+    cache_sh = tree_shardings(cache_axes, cache_vals, rules.act_rules, mesh,
+                              dropped)
+
+    if kind == "prefill":
+        batch, batch_sh = _batch_specs(cfg, shape_cfg, mesh, rules)
+        batch.pop("labels"), batch_sh.pop("labels")
+
+        def prefill_step(params, batch, cache):
+            with activation_rules(rules.act_rules):
+                logits, new_cache = forward_prefill(params, cfg, batch, cache)
+            return logits, new_cache
+
+        return StepPlan(
+            name=f"prefill:{cfg.name}:{shape_cfg.name}",
+            step_fn=prefill_step,
+            abstract_args=(values, batch, cache_vals),
+            in_shardings=(shard_tree, batch_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+            rules=rules,
+            donate_argnums=(2,),
+            meta={"kind": kind},
+        )
+
+    # decode
+    batch, batch_sh, pos, pos_sh = _batch_specs(
+        cfg, shape_cfg, mesh, rules, decode=True)
+
+    def decode_step(params, batch, cache, pos):
+        with activation_rules(rules.act_rules):
+            logits, new_cache = forward_decode(params, cfg, batch, cache, pos)
+        return logits, new_cache
+
+    return StepPlan(
+        name=f"decode:{cfg.name}:{shape_cfg.name}",
+        step_fn=decode_step,
+        abstract_args=(values, batch, cache_vals, pos),
+        in_shardings=(shard_tree, batch_sh, cache_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        rules=rules,
+        donate_argnums=(2,),
+        meta={"kind": kind},
+    )

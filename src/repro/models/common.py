@@ -1,0 +1,216 @@
+"""Shared model plumbing: param leaves with logical axes, norms, RoPE,
+activation-sharding constraints.
+
+Params are plain nested dicts whose leaves are :class:`P` — an array (or
+ShapeDtypeStruct under ``jax.eval_shape``) tagged with *logical axis names*.
+``split_tree`` separates values from axes so the distributed layer can build
+PartitionSpecs without introspecting module code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "P",
+    "f32_einsum",
+    "split_tree",
+    "tree_axes",
+    "qlinear_init",
+    "qlinear_apply",
+    "dense_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope_freqs",
+    "apply_rope",
+    "shard",
+    "activation_rules",
+    "stack_periods",
+]
+
+
+def f32_einsum(subscripts, *args):
+    """einsum with f32 accumulation.
+
+    TPU path (default): bf16 operands + preferred_element_type=f32 — native
+    MXU mixed precision, no operand upcasts in HBM.
+    CPU-execution path (REPRO_CPU_EXEC=1, set by tests/drivers/benchmarks):
+    upcast operands — XLA:CPU cannot *execute* BF16×BF16→F32 dots.  The
+    dry-run compiles on CPU but never executes, so it keeps the TPU form.
+    """
+    import os
+
+    if os.environ.get("REPRO_CPU_EXEC") == "1":
+        args = tuple(a.astype(jnp.float32) for a in args)
+        return jnp.einsum(subscripts, *args)
+    return jnp.einsum(subscripts, *args,
+                      preferred_element_type=jnp.float32)
+
+
+class P(NamedTuple):
+    """A parameter leaf: array + logical axis names (one per dim)."""
+
+    value: Any
+    axes: tuple
+
+    # make jax.tree happy if leaves leak through untyped paths
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"P(shape={shape}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    P, lambda p: ((p.value,), p.axes), lambda axes, v: P(v[0], axes)
+)
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def split_tree(tree):
+    """tree-of-P -> (tree of arrays, tree of axis tuples)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_p)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_p)
+    return values, axes
+
+
+def tree_axes(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_p)
+
+
+def stack_periods(period_trees: list):
+    """Stack per-period param trees along a new leading 'layers' axis."""
+    def stack(*leaves):
+        vals = [l.value for l in leaves]
+        return P(jnp.stack(vals, axis=0), ("layers",) + leaves[0].axes)
+
+    return jax.tree.map(stack, *period_trees, is_leaf=_is_p)
+
+
+# ---------------------------------------------------------------------------
+# Quantized + dense linears as P-trees
+# ---------------------------------------------------------------------------
+
+
+def qlinear_init(key, n, m, quant_spec, out_axis, in_axis, w=None,
+                 use_bias=False):
+    """Quantized linear (repro.core) wrapped in P leaves with logical axes."""
+    from repro.core import init_quantized_linear, linear_param_specs
+
+    params = init_quantized_linear(key, n, m, quant_spec, w=w,
+                                   use_bias=use_bias)
+    axes = linear_param_specs(quant_spec, out_axis, in_axis, use_bias=use_bias)
+    return {k: P(v, axes[k]) for k, v in params.items()}
+
+
+def qlinear_apply(params, x, quant_spec, n, m):
+    from repro.core import apply_quantized_linear
+
+    return apply_quantized_linear(params, x, quant_spec, n, m)
+
+
+def dense_init(key, shape, axes, dtype=jnp.bfloat16, scale=None):
+    """Unquantized dense weight (router, embeddings, conv, gates...)."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(shape[-1])
+    w = jax.random.normal(key, shape, jnp.float32) * scale
+    return P(w.astype(dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, axis="embed"):
+    return P(jnp.ones((d,), jnp.float32), (axis,))
+
+
+def rmsnorm(g, x, eps=1e-5):
+    import os
+
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    if os.environ.get("REPRO_BF16_ELEMWISE") == "1":
+        # perf mode: variance in f32, application in the compute dtype —
+        # halves the (b,s,d)-sized elementwise traffic of every norm
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * g.astype(x.dtype)
+    return (g * xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def rope_freqs(head_dim, theta=10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+    return inv  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    import os
+
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., s, hd/2)
+    dt = x.dtype if os.environ.get("REPRO_BF16_ELEMWISE") == "1" else jnp.float32
+    cos = jnp.cos(ang)[..., None, :].astype(dt)
+    sin = jnp.sin(ang)[..., None, :].astype(dt)
+    x1, x2 = jnp.split(x.astype(dt), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (rules are ambient, set by the launcher)
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict | None):
+    """Context manager installing logical->mesh rules for ``shard``."""
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = prev
+
+
+def shard(x, *axes):
+    """with_sharding_constraint by logical axis names; no-op without rules."""
+    rules = getattr(_TLS, "rules", None)
+    if rules is None:
+        return x
+    mesh = rules.get("__mesh__")
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    spec, used = [], set()
+    for dim, name in zip(x.shape, axes):
+        mesh_axes = rules.get(name)
+        if mesh_axes is None:
+            spec.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        size = 1
+        ok = []
+        for ax in mesh_axes:
+            if ax in used or ax not in mesh.shape:
+                continue
+            size *= mesh.shape[ax]
+            ok.append(ax)
+        if ok and size > 1 and dim % size == 0:
+            spec.append(tuple(ok) if len(ok) > 1 else ok[0])
+            used.update(ok)
+        else:
+            spec.append(None)
+    sharding = NamedSharding(mesh, PartitionSpec(*spec))
+    return jax.lax.with_sharding_constraint(x, sharding)

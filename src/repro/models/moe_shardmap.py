@@ -1,0 +1,155 @@
+"""Explicit expert-parallel MoE dispatch via shard_map + all_to_all.
+
+The §Perf fix for collective-bound MoE training: the portable pjit path lets
+GSPMD partition a global scatter/gather over (tokens × experts), and at
+kimi-k2 scale the partitioner falls back to replication (~40 TB/step/device
+of collective traffic in the baseline dry-run).  This path makes the
+communication pattern explicit and minimal:
+
+  per device: route -> local slot assignment -> (E_pad, C_loc, d) buffer
+  all_to_all over the EP axes: each device receives its experts' tokens
+  local (quantized) expert FFN
+  inverse all_to_all -> local gate-weighted combine
+
+Requirements: experts (padded to ``pad_experts_to``) divisible by the EP
+axis product; tokens stay within their batch shard (no cross-DP traffic).
+Collective bytes/device/layer = 2 × t_loc·k·cf·d·2B — the theoretical
+minimum for capacity-based EP dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.common import _TLS  # ambient rules (mesh + axis mapping)
+
+__all__ = ["moe_apply_shard_map"]
+
+
+def _ep_axes(mesh, e_pad):
+    """Largest mesh-axis tuple (from fastest axes) that divides e_pad."""
+    for axes in (("pod", "data", "model"), ("data", "model"), ("model",)):
+        if all(a in mesh.shape for a in axes):
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if e_pad % size == 0:
+                return axes, size
+    return (), 1
+
+
+def _batch_axes(mesh, rules, b):
+    rule = rules.get("batch") or ()
+    if isinstance(rule, str):
+        rule = (rule,)
+    axes = tuple(a for a in rule if a in mesh.shape)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and b % size == 0 and size > 1:
+        return axes, size
+    return (), 1
+
+
+def moe_apply_shard_map(params, x, cfg, quant):
+    from repro.models.moe import (
+        _expert_ffn,
+        _n_experts_padded,
+        _ranks_within_expert,
+        _route,
+    )
+
+    mo, d = cfg.moe, cfg.d_model
+    e, k = mo.num_experts, mo.top_k
+    e_pad = _n_experts_padded(mo)
+    b, s, _ = x.shape
+
+    rules = getattr(_TLS, "rules", None) or {}
+    mesh = rules.get("__mesh__")
+    if mesh is None:  # no mesh (unit tests) -> portable path
+        from repro.models.moe import _moe_apply_pjit
+
+        return _moe_apply_pjit(params, x, cfg, quant)
+
+    ep_axes, n_ep = _ep_axes(mesh, e_pad)
+    b_axes, n_dp = _batch_axes(mesh, rules, b)
+    if n_ep == 1:
+        from repro.models.moe import _moe_apply_pjit
+
+        return _moe_apply_pjit(params, x, cfg, quant)
+
+    t_loc = (b // n_dp) * s
+    cap = int(mo.capacity_factor * t_loc * k / e + 0.5)
+    cap = max(8, -(-cap // 8) * 8)
+
+    x_spec = P(b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None),
+               None, None)
+    w_spec = jax.tree.map(lambda _: P(ep_axes if len(ep_axes) > 1 else
+                                      ep_axes[0]), params)
+    w_spec["router"] = P()  # replicated
+
+    # EP axes the batch is NOT sharded over hold replicated copies of x —
+    # each such rank dispatches a distinct token slice (else every model-rank
+    # would dispatch the same tokens: 16x duplicate all-to-all traffic and
+    # 16x oversized expert buffers, the refuted first version of this path)
+    rep_axes = tuple(a for a in ep_axes if a not in b_axes)
+    n_rep = 1
+    for a in rep_axes:
+        n_rep *= mesh.shape[a]
+
+    def body(x_loc, wr, wgate, wup, wdown):
+        lp = {"router": wr, "w_gate": wgate, "w_up": wup, "w_down": wdown}
+        bl, sl, _ = x_loc.shape
+        tl_full = bl * sl
+        xfull = x_loc.reshape(tl_full, d)
+        if rep_axes and tl_full % n_rep == 0:
+            ridx = jax.lax.axis_index(rep_axes)
+            tl = tl_full // n_rep
+            xf = jax.lax.dynamic_slice_in_dim(xfull, ridx * tl, tl, axis=0)
+        else:
+            ridx, tl, xf = None, tl_full, xfull
+
+        gates, idx, aux = _route(lp, xf, mo)
+        cap_l = max(8, -(-int(mo.capacity_factor * tl * k / e + 0.5) // 8) * 8)
+
+        flat_e = idx.reshape(-1)
+        ranks = _ranks_within_expert(flat_e, e, tl * k)
+        keep = ranks < cap_l
+        dest = jnp.where(keep, flat_e * cap_l + ranks, e_pad * cap_l)
+
+        src = jnp.repeat(xf, k, axis=0)
+        buf = jnp.zeros((e_pad * cap_l + 1, d), x_loc.dtype).at[dest].set(src)
+        send = buf[: e_pad * cap_l].reshape(e_pad, cap_l, d)
+
+        # EP all-to-all: experts split across devices, capacities concatenate
+        recv = jax.lax.all_to_all(send, ep_axes, split_axis=0, concat_axis=1,
+                                  tiled=True)  # (e_pad/n_ep, n_ep*cap_l, d)
+
+        y_loc = _expert_ffn(recv, lp, mo, d, quant)
+
+        back = jax.lax.all_to_all(y_loc, ep_axes, split_axis=1, concat_axis=0,
+                                  tiled=True)  # (e_pad, cap_l, d)
+        ybuf = jnp.concatenate(
+            [back.reshape(e_pad * cap_l, d),
+             jnp.zeros((1, d), back.dtype)], axis=0)
+        per_assign = ybuf[dest] * gates.reshape(-1)[:, None].astype(
+            back.dtype)
+        y = jnp.sum(per_assign.reshape(tl, k, d), axis=1)
+        if ridx is not None:  # reassemble the token slices
+            y = jax.lax.all_gather(y, rep_axes, axis=0, tiled=True)
+        # aux is a mean over local tokens; average across DP shards
+        aux = jax.lax.pmean(aux, b_axes + rep_axes) if (b_axes or rep_axes) \
+            else aux
+        return y.reshape(bl, sl, d).astype(x_loc.dtype), aux
+
+    y, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, w_spec["router"], w_spec["w_gate"],
+                  w_spec["w_up"], w_spec["w_down"]),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    return y, aux

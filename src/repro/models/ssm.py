@@ -1,0 +1,425 @@
+"""Recurrent mixers: Mamba (Jamba's SSM layer) and xLSTM (mLSTM / sLSTM).
+
+Training paths are parallel where the math allows:
+  * Mamba — chunked associative scan over the discretized diagonal SSM
+    (chunk length cfg.mamba.chunk bounds the (chunk, d_inner, d_state)
+    working set; the inter-chunk recurrence is a cheap sequential scan),
+  * mLSTM — stabilized parallel (quadratic) form, q-chunked exactly like
+    chunked attention; decay matrix from cumulative log-forget-gates,
+  * sLSTM — inherently sequential (recurrent R matrices): lax.scan over time.
+
+Decode paths are O(1)-state single-step recurrences; their states are the
+`long_500k` story — no KV growth.
+
+All projections are quantized linears (LoRDS applies to every matmul weight;
+convs / gates / A_log stay fp — they are vectors or tiny).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    P,
+    dense_init,
+    f32_einsum,
+    qlinear_apply,
+    qlinear_init,
+    shard,
+)
+
+__all__ = [
+    "mamba_init", "mamba_train", "mamba_decode", "mamba_cache_init",
+    "mlstm_init", "mlstm_train", "mlstm_decode", "mlstm_cache_init",
+    "slstm_init", "slstm_train", "slstm_decode", "slstm_cache_init",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, Gu & Dao 2023), as used by Jamba
+# ---------------------------------------------------------------------------
+
+
+def _mamba_dims(cfg):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_in, dt_rank
+
+
+def mamba_init(key, cfg, quant):
+    mc, d_in, dt_rank = _mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (d_in, mc.d_state)))
+    return {
+        "in_proj": qlinear_init(ks[0], 2 * d_in, d, quant, "mamba_in", "embed"),
+        "conv_w": dense_init(ks[1], (mc.d_conv, d_in), (None, "mamba_in"),
+                             dtype=jnp.float32, scale=0.5),
+        "conv_b": P(jnp.zeros((d_in,), jnp.float32), ("mamba_in",)),
+        "x_proj": qlinear_init(ks[2], dt_rank + 2 * mc.d_state, d_in, quant,
+                               "dt_rank", "mamba_in"),
+        "dt_proj": dense_init(ks[3], (d_in, dt_rank), ("mamba_in", "dt_rank"),
+                              dtype=jnp.float32),
+        "dt_bias": P(jnp.log(jnp.exp(
+            jax.random.uniform(ks[4], (d_in,), jnp.float32, 1e-3, 0.1)) - 1.0
+        ), ("mamba_in",)),
+        "a_log": P(a_init, ("mamba_in", "state")),
+        "d_skip": P(jnp.ones((d_in,), jnp.float32), ("mamba_in",)),
+        "out_proj": qlinear_init(ks[5], d, d_in, quant, "embed", "mamba_in"),
+    }
+
+
+def _ssm_scan_chunked(a_bar, bx, h0, chunk):
+    """h_t = a_t * h_{t-1} + bx_t over time axis 1.
+
+    a_bar, bx: (b, s, d_in, n); h0: (b, d_in, n).  Returns (h_all, h_last).
+    """
+    b, s, d_in, n = a_bar.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        import math
+        chunk = math.gcd(chunk, s) or s
+    nc = s // chunk
+    a_c = a_bar.reshape(b, nc, chunk, d_in, n)
+    bx_c = bx.reshape(b, nc, chunk, d_in, n)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_body(h, inp):
+        ac, bc = inp  # (b, chunk, d_in, n)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = b_cum + a_cum * h[:, None]
+        return h_all[:, -1], h_all
+
+    h_last, h_stack = jax.lax.scan(
+        chunk_body, h0, (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(bx_c, 1, 0))
+    )
+    h_all = jnp.moveaxis(h_stack, 0, 1).reshape(b, s, d_in, n)
+    return h_all, h_last
+
+
+def _causal_conv(u, w, bias, state=None):
+    """u (b,s,d_in); w (k,d_in); left-pad causal depthwise conv."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)  # (b, k-1, d_in)
+    ext = jnp.concatenate([pad, u], axis=1)
+    out = sum(
+        ext[:, i : i + u.shape[1], :] * w[i][None, None, :].astype(u.dtype)
+        for i in range(k)
+    )
+    new_state = ext[:, -(k - 1):, :] if k > 1 else pad
+    return out + bias[None, None, :].astype(u.dtype), new_state
+
+
+def mamba_train(params, x, cfg, quant, positions=None):
+    mc, d_in, dt_rank = _mamba_dims(cfg)
+    d = cfg.d_model
+    b, s, _ = x.shape
+    zu = qlinear_apply(params["in_proj"], x, quant, 2 * d_in, d)
+    z, u = jnp.split(zu, 2, axis=-1)
+    u, _ = _causal_conv(u, params["conv_w"], params["conv_b"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    u = shard(u, "batch", "seq", "mamba_act")
+
+    proj = qlinear_apply(params["x_proj"], u, quant, dt_rank + 2 * mc.d_state,
+                         d_in)
+    dt_r = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank : dt_rank + mc.d_state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + mc.d_state :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,dr->bsd", dt_r.astype(jnp.float32),
+                   params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"][None, None]
+    )  # (b,s,d_in)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (d_in, n)
+    da = jnp.exp(dt[..., None] * a[None, None])  # (b,s,d_in,n)
+    dbu = (dt * u.astype(jnp.float32))[..., None] * b_t[:, :, None, :]
+    h0 = jnp.zeros((b, d_in, mc.d_state), jnp.float32)
+    h_all, _ = _ssm_scan_chunked(da, dbu, h0, mc.chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, c_t)
+    y = y + params["d_skip"][None, None] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return qlinear_apply(params["out_proj"], y, quant, d, d_in)
+
+
+def mamba_cache_init(cfg, batch, dtype=jnp.float32):
+    mc, d_in, _ = _mamba_dims(cfg)
+    return {
+        "h": P(jnp.zeros((batch, d_in, mc.d_state), jnp.float32),
+               ("batch", "mamba_act", "state")),
+        "conv": P(jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+                  ("batch", None, "mamba_act")),
+    }
+
+
+def mamba_decode(params, x, cfg, quant, cache, pos=None):
+    mc, d_in, dt_rank = _mamba_dims(cfg)
+    d = cfg.d_model
+    b = x.shape[0]
+    zu = qlinear_apply(params["in_proj"], x, quant, 2 * d_in, d)  # (b,1,2di)
+    z, u = jnp.split(zu, 2, axis=-1)
+    u, conv_state = _causal_conv(u, params["conv_w"], params["conv_b"],
+                                 state=cache["conv"])
+    u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+    proj = qlinear_apply(params["x_proj"], u, quant, dt_rank + 2 * mc.d_state,
+                         d_in)
+    dt_r = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank : dt_rank + mc.d_state].astype(jnp.float32)
+    c_t = proj[..., dt_rank + mc.d_state :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,dr->bsd", dt_r.astype(jnp.float32),
+                   params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"][None, None]
+    )[:, 0]  # (b,d_in)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * a[None])  # (b,d_in,n)
+    dbu = (dt * u[:, 0].astype(jnp.float32))[..., None] * b_t[:, 0, None, :]
+    h = da * cache["h"] + dbu
+    y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])
+    y = y + params["d_skip"][None] * u[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32)))[:, None].astype(x.dtype)
+    out = qlinear_apply(params["out_proj"], y, quant, d, d_in)
+    return out, {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM; Beck et al. 2024) — matrix memory, parallel training form
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    xc = cfg.xlstm
+    d_in = int(xc.proj_factor * cfg.d_model)
+    nh = cfg.num_heads
+    dh = d_in // nh
+    return xc, d_in, nh, dh
+
+
+def mlstm_init(key, cfg, quant):
+    xc, d_in, nh, dh = _mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": qlinear_init(ks[0], 2 * d_in, d, quant, "mlstm_in", "embed"),
+        "conv_w": dense_init(ks[1], (xc.conv_k, d_in), (None, "mlstm_in"),
+                             dtype=jnp.float32, scale=0.5),
+        "conv_b": P(jnp.zeros((d_in,), jnp.float32), ("mlstm_in",)),
+        "wq": qlinear_init(ks[2], d_in, d_in, quant, "mlstm_in", "mlstm_in"),
+        "wk": qlinear_init(ks[3], d_in, d_in, quant, "mlstm_in", "mlstm_in"),
+        "wv": qlinear_init(ks[4], d_in, d_in, quant, "mlstm_in", "mlstm_in"),
+        "w_i": dense_init(ks[5], (nh, d_in), ("heads", "mlstm_in"),
+                          dtype=jnp.float32),
+        "b_i": P(jnp.zeros((nh,), jnp.float32), ("heads",)),
+        "w_f": dense_init(ks[6], (nh, d_in), ("heads", "mlstm_in"),
+                          dtype=jnp.float32),
+        "b_f": P(3.0 * jnp.ones((nh,), jnp.float32), ("heads",)),
+        "down_proj": qlinear_init(ks[7], d, d_in, quant, "embed", "mlstm_in"),
+    }
+
+
+def _mlstm_gates(params, xc_feats):
+    """xc_feats (b,s,d_in) -> log input gate, log forget gate (b,s,nh)."""
+    i_pre = jnp.einsum("bsd,hd->bsh", xc_feats.astype(jnp.float32),
+                       params["w_i"]) + params["b_i"]
+    f_pre = jnp.einsum("bsd,hd->bsh", xc_feats.astype(jnp.float32),
+                       params["w_f"]) + params["b_f"]
+    logf = jax.nn.log_sigmoid(f_pre)
+    return i_pre, logf
+
+
+def mlstm_train(params, x, cfg, quant, positions=None, chunk=512):
+    xc, d_in, nh, dh = _mlstm_dims(cfg)
+    d = cfg.d_model
+    b, s, _ = x.shape
+    xz = qlinear_apply(params["up_proj"], x, quant, 2 * d_in, d)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xconv, _ = _causal_conv(xm, params["conv_w"], params["conv_b"])
+    xconv = jax.nn.silu(xconv.astype(jnp.float32)).astype(x.dtype)
+
+    q = qlinear_apply(params["wq"], xconv, quant, d_in, d_in)
+    k = qlinear_apply(params["wk"], xconv, quant, d_in, d_in)
+    v = qlinear_apply(params["wv"], xm, quant, d_in, d_in)
+    q = q.reshape(b, s, nh, dh)
+    k = k.reshape(b, s, nh, dh) / jnp.sqrt(dh)
+    v = v.reshape(b, s, nh, dh)
+
+    i_pre, logf = _mlstm_gates(params, xconv)  # (b,s,nh)
+    bcum = jnp.cumsum(logf, axis=1)  # (b,s,nh)
+
+    chunk = min(chunk, s)
+    if s % chunk:
+        import math
+        chunk = math.gcd(chunk, s) or s
+    nc = s // chunk
+    qg = jnp.moveaxis(q.reshape(b, nc, chunk, nh, dh), 1, 0)
+    # decay weights: log w_ij = bcum_i - bcum_j + i_j   (j <= i)
+    kv_logw = i_pre - bcum  # (b,s,nh): the j-dependent part
+    kpos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, inp):
+        qc, ci = inp
+        qpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        bq = jax.lax.dynamic_slice_in_dim(bcum, ci * chunk, chunk, axis=1)
+        logw = bq[:, :, None, :] + kv_logw[:, None, :, :]  # (b,cq,s,nh)
+        mask = (qpos[:, None] >= kpos[None, :])[None, :, :, None]
+        logw = jnp.where(mask, logw, -jnp.inf)
+        m = jnp.max(logw, axis=2, keepdims=True)  # (b,cq,1,nh)
+        m = jnp.maximum(m, -60.0)
+        wmat = jnp.exp(logw - m)  # (b,cq,s,nh)
+        scores = f32_einsum("bchd,bshd->bchs", qc, k)
+        sw = scores * wmat.transpose(0, 1, 3, 2)  # (b, cq, nh, s)
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(sw, axis=-1)), jnp.exp(-m[:, :, 0, :])
+        )  # (b,cq,nh)
+        out = jnp.einsum("bchs,bshd->bchd", sw, v.astype(jnp.float32))
+        out = out / denom[..., None]
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None,
+                           (qg, jnp.arange(nc, dtype=jnp.int32)))
+    h = jnp.moveaxis(outs, 0, 1).reshape(b, s, d_in)
+    h = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return qlinear_apply(params["down_proj"], h, quant, d, d_in)
+
+
+def mlstm_cache_init(cfg, batch, dtype=jnp.float32):
+    xc, d_in, nh, dh = _mlstm_dims(cfg)
+    return {
+        "c": P(jnp.zeros((batch, nh, dh, dh), jnp.float32),
+               ("batch", "heads", None, None)),
+        "n": P(jnp.zeros((batch, nh, dh), jnp.float32),
+               ("batch", "heads", None)),
+        "m": P(jnp.full((batch, nh), -1e30, jnp.float32), ("batch", "heads")),
+        "conv": P(jnp.zeros((batch, xc.conv_k - 1, d_in), dtype),
+                  ("batch", None, "mlstm_in")),
+    }
+
+
+def mlstm_decode(params, x, cfg, quant, cache, pos=None):
+    xc, d_in, nh, dh = _mlstm_dims(cfg)
+    d = cfg.d_model
+    b = x.shape[0]
+    xz = qlinear_apply(params["up_proj"], x, quant, 2 * d_in, d)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xconv, conv_state = _causal_conv(xm, params["conv_w"], params["conv_b"],
+                                     state=cache["conv"])
+    xconv = jax.nn.silu(xconv.astype(jnp.float32)).astype(x.dtype)
+    q = qlinear_apply(params["wq"], xconv, quant, d_in, d_in).reshape(b, nh, dh)
+    k = qlinear_apply(params["wk"], xconv, quant, d_in, d_in).reshape(b, nh, dh)
+    k = k / jnp.sqrt(dh)
+    v = qlinear_apply(params["wv"], xm, quant, d_in, d_in).reshape(b, nh, dh)
+
+    i_pre, logf = _mlstm_gates(params, xconv)  # (b,1,nh)
+    i_pre, logf = i_pre[:, 0], logf[:, 0]  # (b,nh)
+    m_new = jnp.maximum(logf + cache["m"], i_pre)
+    decay = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    inp = jnp.exp(i_pre - m_new)[..., None]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    c_new = decay[..., None] * cache["c"] + (inp[..., None]
+                                             * kf[..., :, None] * vf[..., None, :])
+    n_new = decay * cache["n"] + inp * kf
+    num = jnp.einsum("bhij,bhi->bhj", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, d_in)
+    h = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = qlinear_apply(params["down_proj"], h, quant, d, d_in)
+    return out, {"c": c_new, "n": n_new, "m": m_new,
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory variant; sequential)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg, quant):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    ks = jax.random.split(key, 6)
+    p = {}
+    for i, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = qlinear_init(ks[i], d, d, quant, "slstm_in", "embed")
+    p["r"] = dense_init(ks[4], (nh, dh, dh), ("heads", None, None),
+                        dtype=jnp.float32, scale=1.0 / jnp.sqrt(dh))
+    p["b_z"] = P(jnp.zeros((d,), jnp.float32), ("slstm_in",))
+    p["b_i"] = P(jnp.zeros((d,), jnp.float32), ("slstm_in",))
+    p["b_f"] = P(3.0 * jnp.ones((d,), jnp.float32), ("slstm_in",))
+    p["b_o"] = P(jnp.zeros((d,), jnp.float32), ("slstm_in",))
+    return p
+
+
+def _slstm_step(params, xz, xi, xf, xo, state, nh, dh):
+    """One recurrence step; x* are pre-projected gate inputs (b, d)."""
+    h, c, n, m = state
+    b = h.shape[0]
+    hh = h.reshape(b, nh, dh)
+    rz = jnp.einsum("bhi,hij->bhj", hh, params["r"]).reshape(b, nh * dh)
+    z = jnp.tanh(xz + rz + params["b_z"])
+    i_pre = xi + rz + params["b_i"]
+    f_pre = xf + rz + params["b_f"]
+    o = jax.nn.sigmoid(xo + rz + params["b_o"])
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    c_new = jnp.exp(logf + m - m_new) * c + jnp.exp(i_pre - m_new) * z
+    n_new = jnp.exp(logf + m - m_new) * n + jnp.exp(i_pre - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_train(params, x, cfg, quant, positions=None):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    b, s, _ = x.shape
+    xz = qlinear_apply(params["w_z"], x, quant, d, d).astype(jnp.float32)
+    xi = qlinear_apply(params["w_i"], x, quant, d, d).astype(jnp.float32)
+    xf = qlinear_apply(params["w_f"], x, quant, d, d).astype(jnp.float32)
+    xo = qlinear_apply(params["w_o"], x, quant, d, d).astype(jnp.float32)
+
+    def body(state, t_in):
+        tz, ti, tf, to = t_in
+        h, c, n, m = _slstm_step(params, tz, ti, tf, to, state, nh, dh)
+        return (h, c, n, m), h
+
+    zero = jnp.zeros((b, d), jnp.float32)
+    init = (zero, zero, zero, jnp.full((b, d), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(xz, 1, 0), jnp.moveaxis(xi, 1, 0),
+         jnp.moveaxis(xf, 1, 0), jnp.moveaxis(xo, 1, 0)),
+    )
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+
+def slstm_cache_init(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    zero = jnp.zeros((batch, d), jnp.float32)
+    return {
+        "h": P(zero, ("batch", "slstm_in")),
+        "c": P(zero, ("batch", "slstm_in")),
+        "n": P(zero, ("batch", "slstm_in")),
+        "m": P(jnp.full((batch, d), -1e30, jnp.float32), ("batch", "slstm_in")),
+    }
+
+
+def slstm_decode(params, x, cfg, quant, cache, pos=None):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    xz = qlinear_apply(params["w_z"], x, quant, d, d)[:, 0].astype(jnp.float32)
+    xi = qlinear_apply(params["w_i"], x, quant, d, d)[:, 0].astype(jnp.float32)
+    xf = qlinear_apply(params["w_f"], x, quant, d, d)[:, 0].astype(jnp.float32)
+    xo = qlinear_apply(params["w_o"], x, quant, d, d)[:, 0].astype(jnp.float32)
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_step(params, xz, xi, xf, xo, state, nh, dh)
+    return h[:, None].astype(x.dtype), {"h": h, "c": c, "n": n, "m": m}

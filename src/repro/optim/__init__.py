@@ -1,0 +1,8 @@
+"""repro.optim — AdamW, schedules, gradient accumulation & compression."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    ef_compress,
+    ef_decompress,
+    ef_state_init,
+)
+from repro.optim.schedule import constant, cosine_warmup, linear_warmup  # noqa: F401

@@ -1,0 +1,74 @@
+"""AdamW (decoupled weight decay) over pytrees — handles None holes from
+``repro.core.peft.partition`` (holes are empty subtrees; maps skip them).
+
+State layout mirrors the param tree: {mu, nu, step}.  All moments f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip_norm: float | None = 1.0,
+):
+    """-> (new_params, new_state).  ``lr`` may be a scalar or traced value."""
+    step = state.step + 1
+
+    if grad_clip_norm is not None:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        ) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip_norm / gnorm)
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    else:
+        gnorm = jnp.zeros(())
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g
+        nu_n = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu_n / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu_n / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps)
+        p32 = p.astype(jnp.float32)
+        p_n = p32 - lr * (delta + weight_decay * p32)
+        return p_n.astype(p.dtype), mu_n, nu_n
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    # out is a tree of 3-tuples; unzip
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(new_mu, new_nu, step), gnorm

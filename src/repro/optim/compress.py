@@ -1,0 +1,47 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+Beyond-paper distributed optimization: with LoRDS-PEFT the DP gradient
+payload is only (B, A) — already ~1-3% of a full model — and this shrinks the
+cross-pod (slowest-link) traffic another 4× by all-reducing int8-quantized
+gradients with per-tensor scales and local error feedback (residual carried
+to the next step, so compression noise doesn't bias the optimizer:
+Seide et al. 2014 / Karimireddy et al. 2019 semantics).
+
+Usage inside a pjit step (SPMD-visible compression):
+    g_q, scale, new_resid = compress(g + resid)
+    g_sync = psum(g_q * scale) / n      # int8 payload crosses the pod axis
+Here we expose the quantize/dequantize halves; the collective itself is
+whatever GSPMD inserts for the sharded->replicated transition of the packed
+tensor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_compress", "ef_decompress", "ef_state_init"]
+
+
+def ef_state_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _q_one(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress(grads, resid):
+    """-> (int8 tree, scale tree, new residual tree)."""
+    acc = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, resid)
+    qs = jax.tree.map(_q_one, acc, is_leaf=lambda x: hasattr(x, "shape"))
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, s)
+    new_resid = jax.tree.map(lambda a, d: a - d, acc, deq)
+    return q, s, new_resid
+
+
+def ef_decompress(q, s):
+    return jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, s)

@@ -1,0 +1,38 @@
+"""LR schedules (paper: cosine+linear-warmup for QAT, linear for PEFT)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup", "linear_warmup", "constant"]
+
+
+def constant(peak_lr: float):
+    return lambda step: jnp.asarray(peak_lr, jnp.float32)
+
+
+def linear_warmup(peak_lr: float, total_steps: int, warmup_ratio: float = 0.0):
+    warm = max(int(total_steps * warmup_ratio), 1)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        wu = jnp.minimum(step / warm, 1.0)
+        decay = jnp.maximum(0.0, 1.0 - jnp.maximum(step - warm, 0.0)
+                            / max(total_steps - warm, 1))
+        return peak_lr * wu * decay
+
+    return fn
+
+
+def cosine_warmup(peak_lr: float, total_steps: int, warmup_ratio: float = 0.3,
+                  final_frac: float = 0.0):
+    """Paper's QAT recipe: cosine schedule with linear warmup (ratio 0.3)."""
+    warm = max(int(total_steps * warmup_ratio), 1)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        wu = jnp.minimum(step / warm, 1.0)
+        prog = jnp.clip((step - warm) / max(total_steps - warm, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * wu * cos
+
+    return fn

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single host CPU device (the 512-device override lives ONLY
+# in repro.launch.dryrun, which tests exercise via subprocess).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("REPRO_CPU_EXEC", "1")  # executable bf16 dots on XLA:CPU
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,86 @@
+"""Every baseline the paper compares against must work & behave as published."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, apply_quantized_linear, init_quantized_linear
+from repro.core import baselines, metrics, quantize
+from repro.data import synthetic_activations
+
+
+@pytest.fixture(scope="module")
+def wx(key):
+    w = jax.random.normal(key, (96, 256)) * 0.02
+    x = jnp.asarray(synthetic_activations(128, 256, seed=1))
+    return w, x
+
+
+@pytest.mark.parametrize("method", ["blockwise", "qlora", "loftq", "qpissa"])
+def test_baseline_linear_forward(method, wx, key):
+    w, x = wx
+    spec = QuantSpec(method=method, block_size=64, adapter_rank=8,
+                     loftq_iters=2)
+    params = init_quantized_linear(key, 96, 256, spec, w=w)
+    y = apply_quantized_linear(params, x[:4], spec, 96, 256)
+    assert y.shape == (4, 96)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_qlora_starts_at_base_model(wx, key):
+    """LoRA B=0 init: the adapter contributes nothing initially."""
+    w, x = wx
+    spec = QuantSpec(method="qlora", block_size=64, adapter_rank=8)
+    params = init_quantized_linear(key, 96, 256, spec, w=w)
+    y_full = apply_quantized_linear(params, x[:4], spec, 96, 256)
+    spec_b = QuantSpec(method="blockwise", block_size=64)
+    params_b = {"q": params["q"], "s_blk": params["s_blk"]}
+    y_base = apply_quantized_linear(params_b, x[:4], spec_b, 96, 256)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_base),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_loftq_reduces_quant_error(wx, key):
+    """LoftQ's whole point: adapter absorbs quantization residual."""
+    w, x = wx
+    qb, sb = quantize.quantize_blockwise(w, 64, "nf4")
+    w_nf4 = quantize.dequantize_blockwise(qb, sb, 64, "nf4")
+    q, s_blk, lb, la = baselines.loftq_init(w, 64, "nf4", r=8, iters=4)
+    w_loftq = quantize.dequantize_blockwise(q, s_blk, 64, "nf4") + lb @ la
+    ratio = float(metrics.error_reduction_ratio(w, w_loftq, w_nf4))
+    assert ratio > 0.02, f"LoftQ error-reduction ratio {ratio} too small"
+
+
+def test_qpissa_reduces_quant_error(wx, key):
+    w, x = wx
+    qb, sb = quantize.quantize_blockwise(w, 64, "nf4")
+    w_nf4 = quantize.dequantize_blockwise(qb, sb, 64, "nf4")
+    q, s_blk, lb, la = baselines.qpissa_init(w, 64, "nf4", r=8)
+    w_q = quantize.dequantize_blockwise(q, s_blk, 64, "nf4") + lb @ la
+    assert float(metrics.error_reduction_ratio(w, w_q, w_nf4)) > 0.02
+
+
+def test_gptq_beats_blockwise_on_calibration_mse(wx):
+    w, x = wx
+    qg, sg = baselines.gptq_quantize(w, x, 64, "nf4")
+    w_g = quantize.dequantize_blockwise(qg, sg, 64, "nf4")
+    qb, sb = quantize.quantize_blockwise(w, 64, "nf4")
+    w_b = quantize.dequantize_blockwise(qb, sb, 64, "nf4")
+    y = x @ w.T
+    e_g = float(jnp.mean((x @ w_g.T - y) ** 2))
+    e_b = float(jnp.mean((x @ w_b.T - y) ** 2))
+    assert e_g < e_b
+
+
+def test_awq_protects_outlier_channels(wx):
+    """With outlier-heavy activations AWQ must pick alpha > 0 and win."""
+    w, x = wx
+    qa, sa, sc = baselines.awq_quantize(w, x, 64, "nf4", n_grid=12)
+    w_a = quantize.dequantize_blockwise(qa, sa, 64, "nf4") / sc[None, :]
+    qb, sb = quantize.quantize_blockwise(w, 64, "nf4")
+    w_b = quantize.dequantize_blockwise(qb, sb, 64, "nf4")
+    y = x @ w.T
+    e_a = float(jnp.mean((x @ w_a.T - y) ** 2))
+    e_b = float(jnp.mean((x @ w_b.T - y) ** 2))
+    assert e_a <= e_b * 1.0001
+    assert not np.allclose(np.asarray(sc), 1.0)  # non-trivial smoothing

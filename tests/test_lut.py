@@ -1,0 +1,68 @@
+"""Codebook properties + nearest-code correctness (incl. property tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import lut
+from repro.core.quantize import nearest_code
+
+CANON_NF4 = np.array([
+    -1.0, -0.6962, -0.5251, -0.3949, -0.2844, -0.1848, -0.0911, 0.0,
+    0.0796, 0.1609, 0.2461, 0.3379, 0.4407, 0.5626, 0.7230, 1.0,
+])
+
+
+@pytest.mark.parametrize("name", lut.CODEBOOKS)
+def test_codebook_sorted_normalized(name):
+    cb = np.asarray(lut.codebook(name))
+    assert np.all(np.diff(cb) > 0), "levels must be strictly increasing"
+    assert np.isclose(np.abs(cb).max(), 1.0)
+    assert len(cb) <= 2 ** lut.codebook_bits(name)
+
+
+@pytest.mark.parametrize("name", ["nf4", "nf3", "nf2"])
+def test_nf_codebooks_have_exact_zero(name):
+    cb = np.asarray(lut.codebook(name))
+    assert 0.0 in cb
+
+
+def test_nf4_matches_qlora_table():
+    cb = np.asarray(lut.codebook("nf4"))
+    np.testing.assert_allclose(cb, CANON_NF4, atol=2e-3)
+
+
+def test_midpoints_between_levels():
+    for name in lut.CODEBOOKS:
+        cb = np.asarray(lut.codebook(name))
+        mids = np.asarray(lut.midpoints(name))
+        assert len(mids) == len(cb) - 1
+        assert np.all(mids > cb[:-1]) and np.all(mids < cb[1:])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-3, 3, allow_nan=False), min_size=1, max_size=64),
+       st.sampled_from(["nf4", "nf2", "int4", "fp4"]))
+def test_nearest_code_is_argmin(xs, name):
+    x = jnp.asarray(xs, jnp.float32)
+    cb = lut.codebook(name)
+    codes = nearest_code(x, name)
+    brute = jnp.argmin(jnp.abs(x[:, None] - cb[None, :]), axis=1)
+    picked = jnp.take(cb, codes.astype(jnp.int32))
+    best = jnp.take(cb, brute)
+    # ties can pick either neighbour; distances must match exactly
+    np.testing.assert_allclose(np.abs(np.asarray(picked - x)),
+                               np.abs(np.asarray(best - x)), rtol=1e-6)
+
+
+def test_mixed_precision_schedule_fractions():
+    # Table 3: 3-bit = 50% nf4 + 50% nf2; 2.5 = 25%; 2.25 = 12.5%
+    sched = lut.mixed_precision_schedule(32, 3.0)
+    assert sched.count("nf4") == 16 and sched.count("nf2") == 16
+    sched = lut.mixed_precision_schedule(32, 2.5)
+    assert sched.count("nf4") == 8
+    sched = lut.mixed_precision_schedule(32, 2.25)
+    assert sched.count("nf4") == 4
+    with pytest.raises(ValueError):
+        lut.mixed_precision_schedule(32, 5.0)

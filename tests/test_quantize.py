@@ -1,0 +1,79 @@
+"""Quantize/dequantize/pack invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import lut, quantize, scaling
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 16),
+       st.sampled_from(["nf4", "nf2", "int8", "nf3", "fp4"]),
+       st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(rows, groups, name, seed):
+    cpb = {8: 1, 4: 2, 3: 1, 2: 4}[lut.codebook_bits(name)]
+    cols = groups * cpb
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, len(lut.codebook(name)),
+                         (rows, cols)).astype(np.uint8)
+    packed = quantize.pack_codes(jnp.asarray(codes), name)
+    assert packed.shape == (rows, cols // cpb)
+    out = quantize.unpack_codes(packed, name)
+    np.testing.assert_array_equal(codes, np.asarray(out))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["nf4", "nf2", "int4"]))
+def test_blockwise_error_bounded_by_half_gap(seed, name):
+    """|w - dequant(quant(w))| <= scale * max_half_gap, elementwise."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((8, 64)).astype(np.float32))
+    q, s_blk = quantize.quantize_blockwise(w, 32, name)
+    w_hat = quantize.dequantize_blockwise(q, s_blk, 32, name)
+    cb = np.asarray(lut.codebook(name))
+    half_gap = np.max(np.diff(cb)) / 2
+    bound = np.repeat(np.asarray(s_blk), 32, axis=1) * half_gap + 1e-6
+    assert np.all(np.abs(np.asarray(w - w_hat)) <= bound)
+
+
+def test_blockwise_idempotent():
+    """Quantizing an already-dequantized weight is a fixed point."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 128)) * 0.1
+    q1, s1 = quantize.quantize_blockwise(w, 64, "nf4")
+    w1 = quantize.dequantize_blockwise(q1, s1, 64, "nf4")
+    q2, s2 = quantize.quantize_blockwise(w1, 64, "nf4")
+    w2 = quantize.dequantize_blockwise(q2, s2, 64, "nf4")
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+
+
+def test_quantize_codes_negative_scale_argmin():
+    """Alg.1 quantization step must be exact for negative scales too."""
+    w = jnp.asarray([[0.5, -0.5, 0.2]], jnp.float32)
+    s = jnp.asarray([[-1.0, -1.0, -0.5]], jnp.float32)
+    codes = quantize.quantize_codes(w, s, "nf4")
+    cb = np.asarray(lut.codebook("nf4"))
+    picked = cb[np.asarray(codes, np.int32)[0]]
+    for j in range(3):
+        errs = (float(s[0, j]) * cb - float(w[0, j])) ** 2
+        assert np.isclose((float(s[0, j]) * picked[j] - float(w[0, j])) ** 2,
+                          errs.min(), atol=1e-10)
+
+
+def test_fake_quant_matches_two_step():
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 64)) * 0.05
+    b, a = scaling.lords_init_from_weight(w, 32, rank=2)
+    s = scaling.scale_matrix(b, a)
+    fq = quantize.fake_quant(w, s, "nf4")
+    codes = quantize.quantize_codes(w, s, "nf4")
+    two = quantize.dequantize_codes(codes, s, "nf4", dtype=w.dtype)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(two), atol=1e-7)
+
+
+@pytest.mark.parametrize("m,bs", [(16, 32), (64, 128), (128, 128)])
+def test_eff_block_clamps(m, bs):
+    w = jax.random.normal(jax.random.PRNGKey(3), (4, m))
+    s_blk = scaling.blockwise_scales(w, bs)
+    assert s_blk.shape == (4, m // min(bs, m))

@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the system: training improves the model,
+checkpoint-resume is exact, serving works, and the dry-run machinery holds
+together on a subprocess with forced multi-device CPU."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.launch.train import run_training
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_peft_training_reduces_loss(key, tmp_path):
+    """A reduced llama3-8b must LEARN under LoRDS-PEFT: loss decreases on the
+    synthetic (structured) stream over a few dozen steps."""
+    cfg = smoke_variant(get_config("llama3-8b")).with_(
+        num_layers=2, d_model=64)
+    shape = ShapeCfg("t", 64, 8, "train")
+    out = run_training(cfg, shape, steps=30, lr=3e-3, log_every=1000)
+    first = float(np.mean(out["losses"][:5]))
+    last = float(np.mean(out["losses"][-5:]))
+    assert last < first - 0.05, f"no learning: {first:.3f} -> {last:.3f}"
+
+
+def test_checkpoint_resume_is_exact(tmp_path):
+    """Train 6 steps straight vs 3 + resume + 3: identical final params."""
+    cfg = smoke_variant(get_config("llama3-8b")).with_(
+        num_layers=2, d_model=64)
+    shape = ShapeCfg("t", 32, 4, "train")
+
+    out_a = run_training(cfg, shape, steps=6, lr=1e-3, log_every=1000)
+
+    ck = str(tmp_path / "ck")
+    run_training(cfg, shape, steps=3, lr=1e-3, ckpt_dir=ck, ckpt_every=3,
+                 log_every=1000)
+    out_b = run_training(cfg, shape, steps=3, lr=1e-3, ckpt_dir=ck,
+                         ckpt_every=100, log_every=1000)
+
+    la = jax.tree.leaves(out_a["trainable"])
+    lb = jax.tree.leaves(out_b["trainable"])
+    for xa, xb in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(xa), np.asarray(xb),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_serve_generates(key):
+    from repro.launch.serve import serve_batch
+
+    cfg = smoke_variant(get_config("qwen3-4b"))
+    out = serve_batch(cfg, batch=2, prompt_len=16, gen=4)
+    assert out["tokens"].shape == (2, 4)
+    assert out["tokens"].min() >= 0
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    """The required dry-run machinery on a real multi-device (forced) mesh —
+    smallest arch, probes off, single cell; asserts compile + roofline keys."""
+    code = (
+        "from repro.launch.dryrun import run_cell; import json;"
+        "rec = run_cell('musicgen-medium','decode_32k',multi_pod=False,"
+        "verbose=False,probes=False); print(json.dumps(rec['status']));"
+        "assert rec['status']=='ok';"
+        "assert rec['roofline']['t_memory_s'] > 0"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert '"ok"' in out.stdout

@@ -1,0 +1,22 @@
+# Convenience targets mirroring CI. PYTHONPATH is optional on pytest>=7
+# (pyproject pythonpath), kept for older runners.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-interpret bench serve-smoke
+
+test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
+	$(PY) -m pytest -x -q
+
+# every qmatmul forced through the Pallas interpreter: executes the fused
+# kernel bodies on CPU
+test-interpret:  ## kernel + dispatch suites in interpret mode
+	REPRO_KERNEL_BACKEND=interpret $(PY) -m pytest -x -q \
+		tests/test_dispatch.py tests/test_kernels.py
+
+bench:           ## kernel-level fused-vs-oracle benchmark (Fig. 2 analogue)
+	$(PY) -m benchmarks.run kernels
+
+serve-smoke:     ## end-to-end quantized serving smoke run
+	$(PY) -m repro.launch.serve --arch llama3-8b --smoke \
+		--batch 2 --prompt-len 16 --gen 8

@@ -27,6 +27,7 @@ from repro.core.quantize import (
 __all__ = [
     "init_baseline_linear",
     "dequantize_baseline_weight",
+    "baseline_block_operands",
     "loftq_init",
     "qpissa_init",
     "gptq_quantize",
@@ -96,6 +97,18 @@ def dequantize_baseline_weight(params, spec, n, m):
     if "awq_s" in params:  # AWQ: un-fold the per-input-channel smoothing
         w_hat = w_hat / params["awq_s"][None, :].astype(spec.compute_dtype)
     return w_hat
+
+
+def baseline_block_operands(params, m):
+    """Fused-kernel operands for the frozen block-quantized base weight.
+
+    Returns ``(q_packed, s_blk, effective_block_size)``.  The block size is
+    recovered from the stored scale columns rather than ``spec.block_size``
+    so the ``eff_block`` clamp (rows shorter than the nominal block) is
+    honored.  Only valid when the base is frozen and un-smoothed — callers
+    (repro.kernels.dispatch) must keep AWQ/QAT variants on the dense path.
+    """
+    return params["q"], params["s_blk"], m // params["s_blk"].shape[-1]
 
 
 # ---------------------------------------------------------------------------

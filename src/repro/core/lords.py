@@ -155,22 +155,15 @@ def dequantize_weight(params: dict, spec: QuantSpec, n: int, m: int) -> jnp.ndar
 def apply_quantized_linear(
     params: dict, x: jnp.ndarray, spec: QuantSpec, n: int, m: int
 ) -> jnp.ndarray:
-    """y = x @ Ŵᵀ (+ additive adapter for qlora-family baselines)."""
-    w_hat = dequantize_weight(params, spec, n, m)
-    y = jnp.einsum("...k,nk->...n", x.astype(spec.compute_dtype), w_hat)
-    if spec.method in ("qlora", "loftq", "qpissa") and "lora_a" in params:
-        # unmergeable additive adapter path: y += x @ Aᵀ Bᵀ  (the extra cost
-        # the paper's Fig. 2 measures)
-        xa = jnp.einsum(
-            "...k,rk->...r", x.astype(spec.compute_dtype),
-            params["lora_a"].astype(spec.compute_dtype),
-        )
-        y = y + jnp.einsum(
-            "...r,nr->...n", xa, params["lora_b"].astype(spec.compute_dtype)
-        )
-    if "bias" in params:
-        y = y + params["bias"].astype(y.dtype)
-    return y
+    """y = x @ Ŵᵀ (+ additive adapter for qlora-family baselines).
+
+    Routed through :mod:`repro.kernels.dispatch`: fused Pallas kernels on
+    TPU / in interpret mode, pure-jnp oracles elsewhere — Ŵ is only
+    materialized on the explicit ``dense`` fallback backend.
+    """
+    from repro.kernels.dispatch import qmatmul  # lazy: kernels import core
+
+    return qmatmul(params, x, spec, n, m)
 
 
 # ---------------------------------------------------------------------------

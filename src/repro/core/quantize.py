@@ -28,6 +28,7 @@ __all__ = [
     "pack_codes",
     "unpack_codes",
     "packed_dim",
+    "codes_per_byte",
     "fake_quant",
     "quantize_blockwise",
     "dequantize_blockwise",
@@ -68,13 +69,14 @@ def dequantize_codes(
     return out.astype(dtype) if dtype is not None else out
 
 
-def _codes_per_byte(codebook_name: str) -> int:
+def codes_per_byte(codebook_name: str) -> int:
+    """Pack factor per uint8 — the single source of the bits->pack map."""
     bits = lut.codebook_bits(codebook_name)
     return {8: 1, 4: 2, 3: 1, 2: 4}[bits]
 
 
 def packed_dim(m: int, codebook_name: str) -> int:
-    cpb = _codes_per_byte(codebook_name)
+    cpb = codes_per_byte(codebook_name)
     if m % cpb:
         raise ValueError(f"last dim {m} not divisible by pack factor {cpb}")
     return m // cpb
@@ -82,7 +84,7 @@ def packed_dim(m: int, codebook_name: str) -> int:
 
 def pack_codes(codes: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
     """Pack uint8 code indices along the last axis into uint8 bytes."""
-    cpb = _codes_per_byte(codebook_name)
+    cpb = codes_per_byte(codebook_name)
     if cpb == 1:
         return codes.astype(jnp.uint8)
     bits = 8 // cpb
@@ -97,7 +99,7 @@ def pack_codes(codes: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
 
 def unpack_codes(packed: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
     """Inverse of :func:`pack_codes`; returns uint8 code indices."""
-    cpb = _codes_per_byte(codebook_name)
+    cpb = codes_per_byte(codebook_name)
     if cpb == 1:
         return packed.astype(jnp.uint8)
     bits = 8 // cpb

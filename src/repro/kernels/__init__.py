@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Fused dequant-matmul kernels (lords_matmul, block_matmul, lut_quantize),
+# their pure-jnp oracles (ref), thin platform wrappers (ops), and the
+# QuantSpec-aware dispatch layer every quantized linear routes through
+# (dispatch.qmatmul).  Import dispatch lazily from repro.core to keep the
+# kernels<->core dependency one-directional at import time.

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import lut as lut_mod
+from repro.core import quantize as quantize_mod
 from repro.kernels.lords_matmul import _lut_select, _unpack_tile
 
 __all__ = ["block_matmul_pallas"]
@@ -62,8 +63,7 @@ def block_matmul_pallas(
 ) -> jnp.ndarray:
     m, kdim = x.shape
     n = q_packed.shape[0]
-    bits = lut_mod.codebook_bits(codebook_name)
-    pack = {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    pack = quantize_mod.codes_per_byte(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 

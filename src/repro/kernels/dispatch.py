@@ -1,0 +1,524 @@
+"""Unified, differentiable kernel dispatch for every quantized matmul.
+
+``qmatmul(params, x, spec, n, m)`` is the single entry point all quantized
+linears go through (core/lords, models/*, launch/serve, benchmarks).  It
+replaces the old "always materialize Ŵ, then einsum" forward with a
+QuantSpec-aware dispatch over four backends:
+
+  * ``pallas``    — fused Pallas TPU kernels (``lords_matmul``,
+                    ``block_matmul``, ``lut_quantize``): the low-rank scale
+                    product S = B·A rides along with each weight tile, so Ŵ
+                    never exists in HBM (paper §4.4 serving claim).
+  * ``interpret`` — the same kernel bodies under the Pallas interpreter, so
+                    CPU CI executes the real fused code paths.
+  * ``ref``       — the pure-jnp oracles from :mod:`repro.kernels.ref`
+                    (default off-TPU: numerically identical contract).
+  * ``dense``     — the legacy dequantize-then-einsum path, kept as the
+                    universal fallback (blockwise QAT, AWQ-smoothed weights,
+                    any method/mode combination the fused kernels don't cover).
+
+Selection: explicit ``backend=`` argument > :func:`backend_scope` context >
+``REPRO_KERNEL_BACKEND`` env > ``REPRO_INTERPRET_KERNELS=1`` env (tests/CI) >
+platform default (pallas on TPU, ref elsewhere).
+
+Padding: the raw Pallas kernels require tile-divisible (M, N, K) and raise
+otherwise.  The dispatcher instead zero-pads every operand up to the active
+tile multiples and slices the result — K-padding is exact because x is
+zero-padded along K, and padded N rows / M columns are sliced off.  Padded
+scale entries hit the kernels' |S| >= eps clamp, never a divide-by-zero.
+
+Differentiability: fused lords forwards carry ``jax.custom_vjp``s —
+``peft`` mode backpropagates to (B, A) through the multiplicative scale
+(the clamp-masked ∂S rule autodiff would produce on the dense path), and
+``qat`` mode implements the paper's STE cotangents (Eq. 4/5: ∇W = ∂L/∂Ŵ,
+∇S = ∂L/∂Ŵ ⊙ (Q − W⊘S)) so training never materializes Ŵ in the forward.
+
+Autotuning: per-(method, M-bucket, N, K, codebook, dtype) tile choices live
+in a small in-process table.  ``autotune_qmatmul`` times candidate tilings
+through the public entry point and registers the winner; subsequent
+``qmatmul`` traces consult the table (lookups happen at trace time).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_mod
+from repro.kernels import ref
+from repro.kernels.block_matmul import block_matmul_pallas
+from repro.kernels.lords_matmul import lords_matmul_pallas
+from repro.kernels.lut_quantize import lut_quantize_pallas
+
+__all__ = [
+    "BACKENDS",
+    "qmatmul",
+    "default_backend",
+    "backend_scope",
+    "tile_for",
+    "lookup_tiles",
+    "register_tiles",
+    "autotune_qmatmul",
+    "autotune_table",
+]
+
+BACKENDS = ("pallas", "interpret", "ref", "dense")
+_FUSED = ("pallas", "interpret")
+
+_TLS = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# Backend selection
+# ---------------------------------------------------------------------------
+
+
+def default_backend() -> str:
+    """Resolve the active backend (see module docstring for precedence)."""
+    scoped = getattr(_TLS, "backend", None)
+    forced = scoped or os.environ.get("REPRO_KERNEL_BACKEND")
+    if forced:
+        if forced not in BACKENDS:
+            raise ValueError(
+                f"unknown kernel backend {forced!r}; expected one of {BACKENDS}"
+            )
+        return forced
+    if os.environ.get("REPRO_INTERPRET_KERNELS") == "1":
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@contextlib.contextmanager
+def backend_scope(backend: str | None):
+    """Pin the dispatch backend for everything traced inside the scope.
+
+    ``None`` leaves the ambient selection untouched (so launchers can thread
+    an optional CLI flag straight through).
+    """
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}"
+        )
+    prev = getattr(_TLS, "backend", None)
+    _TLS.backend = backend if backend is not None else prev
+    try:
+        yield
+    finally:
+        _TLS.backend = prev
+
+
+def _resolve(backend: str | None) -> str:
+    return backend if backend is not None else default_backend()
+
+
+# ---------------------------------------------------------------------------
+# Tile selection + autotune table
+# ---------------------------------------------------------------------------
+
+# (method, M-bucket, N, K, codebook, dtype-name, block_size) -> (bm, bn, bk)
+_AUTOTUNE: dict[tuple, tuple[int, int, int]] = {}
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _pack_of(codebook_name: str) -> int:
+    from repro.core.quantize import codes_per_byte
+
+    return codes_per_byte(codebook_name)
+
+
+def _m_bucket(m: int) -> int:
+    """Power-of-two token bucket so decode (M=1..8) and prefill share keys."""
+    return 1 << max(3, (max(m, 1) - 1).bit_length())
+
+
+def autotune_key(method: str, m: int, n: int, k: int, codebook: str,
+                 dtype, block_size: int | None = None) -> tuple:
+    # block_size is part of the key: same-(N, K) layers with different
+    # effective block sizes need bk-compatible tilings (bk % bs or bs % bk)
+    return (method, _m_bucket(m), n, k, codebook, jnp.dtype(dtype).name,
+            block_size)
+
+
+def lookup_tiles(method, m, n, k, codebook, dtype, block_size=None):
+    return _AUTOTUNE.get(
+        autotune_key(method, m, n, k, codebook, dtype, block_size))
+
+
+def register_tiles(method, m, n, k, codebook, dtype,
+                   tiles: tuple[int, int, int],
+                   block_size: int | None = None) -> None:
+    key = autotune_key(method, m, n, k, codebook, dtype, block_size)
+    _AUTOTUNE[key] = tuple(tiles)
+
+
+def autotune_table() -> dict:
+    """Read-only snapshot of the autotune table (for benchmarks/reports)."""
+    return dict(_AUTOTUNE)
+
+
+def tile_for(method: str, m: int, n: int, k: int, codebook: str, dtype,
+             block_size: int | None = None) -> tuple[int, int, int]:
+    """Tile choice: autotune-table hit, else a lane-aligned heuristic.
+
+    Defaults follow the kernel docstrings (bm 128 / bn 256 / bk 512), shrunk
+    to the (padded) problem: bm to a sublane multiple, bn/bk to lane
+    multiples, bk additionally to a pack multiple and — for blockwise — to a
+    block_size-compatible value (bk % bs == 0 or bs % bk == 0).
+    """
+    hit = lookup_tiles(method, m, n, k, codebook, dtype, block_size)
+    if hit is not None:
+        return hit
+    pack = _pack_of(codebook)
+    bm = min(128, _round_up(m, 8))
+    bn = min(256, _round_up(n, 128))
+    bk = min(512, _round_up(k, 128 * pack))
+    if block_size is not None:
+        if bk >= block_size:
+            bk = max(block_size, (bk // block_size) * block_size)
+        elif block_size % bk:
+            bk = math.gcd(bk, block_size) or block_size
+    return bm, bn, bk
+
+
+def _pad2(arr, rows, cols):
+    pr, pc = rows - arr.shape[0], cols - arr.shape[1]
+    if pr == 0 and pc == 0:
+        return arr
+    return jnp.pad(arr, ((0, pr), (0, pc)))
+
+
+# ---------------------------------------------------------------------------
+# Fused lords forward (frozen / peft): y = x @ (lut[Q] ⊙ (B·A))ᵀ
+# ---------------------------------------------------------------------------
+
+
+def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
+    if backend == "ref":
+        return ref.lords_matmul_ref(x2d, q_packed, b, a, codebook)
+    m, k = x2d.shape
+    n = q_packed.shape[0]
+    pack = _pack_of(codebook)
+    bm, bn, bk = tiles or tile_for("lords", m, n, k, codebook, x2d.dtype)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    y = lords_matmul_pallas(
+        _pad2(x2d, mp, kp),
+        _pad2(q_packed, np_, kp // pack),
+        _pad2(b, np_, b.shape[1]),
+        _pad2(a, a.shape[0], kp),
+        codebook,
+        bm=bm, bn=bn, bk=bk,
+        interpret=(backend == "interpret"),
+    )
+    return y[:m, :n]
+
+
+def _lords_dequant_f32(q_packed, b, a, codebook):
+    """Backward-path Ŵ (f32) + the clamp mask ∂S needs. Never runs forward."""
+    from repro.core.quantize import unpack_codes
+    from repro.core.scaling import SCALE_EPS
+
+    codes = unpack_codes(q_packed, codebook)
+    levels = lut_mod.codebook(codebook)
+    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+    s_raw = b.astype(jnp.float32) @ a.astype(jnp.float32)
+    mask = (jnp.abs(s_raw) >= SCALE_EPS).astype(jnp.float32)
+    sign = jnp.where(s_raw >= 0, 1.0, -1.0)
+    s = jnp.where(mask == 1.0, s_raw, sign * SCALE_EPS)
+    return vals, s, mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _lords_qmatmul(x2d, q_packed, b, a, codebook, backend, tiles):
+    return _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles)
+
+
+def _lords_fwd(x2d, q_packed, b, a, codebook, backend, tiles):
+    y = _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles)
+    return y, (x2d, q_packed, b, a)
+
+
+def _lords_bwd(codebook, backend, tiles, res, g):
+    x2d, q_packed, b, a = res
+    vals, s, mask = _lords_dequant_f32(q_packed, b, a, codebook)
+    g32 = g.astype(jnp.float32)
+    x32 = x2d.astype(jnp.float32)
+    w_hat = vals * s                                   # (N, K) f32
+    dx = (g32 @ w_hat).astype(x2d.dtype)
+    ds = (g32.T @ x32) * vals * mask                   # ∂L/∂S, clamp-masked
+    db = (ds @ a.astype(jnp.float32).T).astype(b.dtype)
+    da = (b.astype(jnp.float32).T @ ds).astype(a.dtype)
+    dq = np.zeros(q_packed.shape, jax.dtypes.float0)   # int codes: no grad
+    return dx, dq, db, da
+
+
+_lords_qmatmul.defvjp(_lords_fwd, _lords_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused lords QAT: y = x @ (ROUND(W ⊘ BA) ⊙ BA)ᵀ with STE cotangents
+# ---------------------------------------------------------------------------
+
+
+def _lords_qat_forward(x2d, w, b, a, codebook, backend, tiles):
+    """Returns (y, q_packed).  Fused backends run the lut_quantize kernel and
+    feed its packed codes straight into the fused matmul — Ŵ never exists."""
+    if backend == "ref":
+        q_packed = ref.lut_quantize_ref(w, b, a, codebook)
+        return ref.lords_matmul_ref(x2d, q_packed, b, a, codebook), q_packed
+    m, k = x2d.shape
+    n = w.shape[0]
+    pack = _pack_of(codebook)
+    bm, bn, bk = tiles or tile_for("lords", m, n, k, codebook, x2d.dtype)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    interp = backend == "interpret"
+    bp = _pad2(b, np_, b.shape[1])
+    ap = _pad2(a, a.shape[0], kp)
+    qp = lut_quantize_pallas(
+        _pad2(w, np_, kp), bp, ap, codebook, bn=bn, bk=bk, interpret=interp
+    )
+    y = lords_matmul_pallas(
+        _pad2(x2d, mp, kp), qp, bp, ap, codebook,
+        bm=bm, bn=bn, bk=bk, interpret=interp,
+    )
+    return y[:m, :n], qp[:n, : k // pack]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _lords_qat_qmatmul(x2d, w, b, a, codebook, backend, tiles):
+    y, _ = _lords_qat_forward(x2d, w, b, a, codebook, backend, tiles)
+    return y
+
+
+def _lords_qat_fwd(x2d, w, b, a, codebook, backend, tiles):
+    y, q_packed = _lords_qat_forward(x2d, w, b, a, codebook, backend, tiles)
+    return y, (x2d, w, b, a, q_packed)
+
+
+def _lords_qat_bwd(codebook, backend, tiles, res, g):
+    x2d, w, b, a, q_packed = res
+    vals, s, mask = _lords_dequant_f32(q_packed, b, a, codebook)
+    g32 = g.astype(jnp.float32)
+    x32 = x2d.astype(jnp.float32)
+    w_hat = vals * s
+    dx = (g32 @ w_hat).astype(x2d.dtype)
+    dw_hat = g32.T @ x32                               # ∂L/∂Ŵ  (N, K)
+    dw = dw_hat.astype(w.dtype)                        # Eq. 4 (STE identity)
+    resid = vals - w.astype(jnp.float32) / s           # Q − W ⊘ S
+    ds = dw_hat * resid * mask                         # Eq. 5, clamp-masked
+    db = (ds @ a.astype(jnp.float32).T).astype(b.dtype)
+    da = (b.astype(jnp.float32).T @ ds).astype(a.dtype)
+    return dx, dw, db, da
+
+
+_lords_qat_qmatmul.defvjp(_lords_qat_fwd, _lords_qat_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused block-wise baseline: y = x @ (lut[Q] ⊙ repeat(s_blk))ᵀ
+# ---------------------------------------------------------------------------
+
+
+def _block_forward(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
+    if backend == "ref":
+        return ref.block_matmul_ref(x2d, q_packed, s_blk, block_size, codebook)
+    m, k = x2d.shape
+    n = q_packed.shape[0]
+    pack = _pack_of(codebook)
+    bm, bn, bk = tiles or tile_for(
+        "blockwise", m, n, k, codebook, x2d.dtype, block_size=block_size)
+    kmult = bk * block_size // math.gcd(bk, block_size)  # lcm: tiles + blocks
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, kmult)
+    s_pad = jnp.pad(
+        s_blk,
+        ((0, np_ - n), (0, kp // block_size - s_blk.shape[1])),
+        constant_values=1.0,
+    )
+    y = block_matmul_pallas(
+        _pad2(x2d, mp, kp),
+        _pad2(q_packed, np_, kp // pack),
+        s_pad,
+        block_size,
+        codebook,
+        bm=bm, bn=bn, bk=bk,
+        interpret=(backend == "interpret"),
+    )
+    return y[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _block_qmatmul(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
+    return _block_forward(x2d, q_packed, s_blk, block_size, codebook, backend,
+                          tiles)
+
+
+def _block_fwd(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
+    y = _block_forward(x2d, q_packed, s_blk, block_size, codebook, backend,
+                       tiles)
+    return y, (x2d, q_packed, s_blk)
+
+
+def _block_bwd(block_size, codebook, backend, tiles, res, g):
+    from repro.core.quantize import unpack_codes
+    from repro.core.scaling import expand_block_scales
+
+    x2d, q_packed, s_blk = res
+    codes = unpack_codes(q_packed, codebook)
+    vals = jnp.take(lut_mod.codebook(codebook), codes.astype(jnp.int32), axis=0)
+    s = expand_block_scales(s_blk.astype(jnp.float32), block_size)
+    g32 = g.astype(jnp.float32)
+    dx = (g32 @ (vals * s)).astype(x2d.dtype)
+    ds_full = (g32.T @ x2d.astype(jnp.float32)) * vals
+    n = s_blk.shape[0]
+    ds_blk = ds_full.reshape(n, s_blk.shape[1], block_size).sum(-1)
+    dq = np.zeros(q_packed.shape, jax.dtypes.float0)
+    return dx, dq, ds_blk.astype(s_blk.dtype)
+
+
+_block_qmatmul.defvjp(_block_fwd, _block_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Dense fallback — the legacy materialize-Ŵ path
+# ---------------------------------------------------------------------------
+
+
+def _dense_base(params, x2d, spec, n, m):
+    from repro.core.lords import dequantize_weight
+
+    w_hat = dequantize_weight(params, spec, n, m)
+    return jnp.einsum("tk,nk->tn", x2d.astype(spec.compute_dtype), w_hat)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+
+def _fused_supported(params: dict, spec) -> bool:
+    method, mode = spec.method, spec.mode
+    if "awq_s" in params:  # per-channel smoothing must be un-folded densely
+        return False
+    if method == "lords":
+        return True
+    if method == "blockwise":
+        return mode != "qat"  # blockwise QAT trains s_blk through STE: dense
+    if method in ("qlora", "loftq", "qpissa"):
+        return True  # frozen block-quantized base + additive adapter
+    return False
+
+
+def _block_operands(params: dict, m: int):
+    from repro.core.baselines import baseline_block_operands
+
+    return baseline_block_operands(params, m)
+
+
+def qmatmul(params: dict, x: jnp.ndarray, spec, n: int, m: int, *,
+            backend: str | None = None,
+            tiles: tuple[int, int, int] | None = None) -> jnp.ndarray:
+    """y = x @ Ŵᵀ (+ additive adapter + bias) for any QuantSpec.
+
+    ``x`` may carry arbitrary leading batch dims over the in-features axis
+    ``m``; the result replaces that axis with ``n``.  Backend selection,
+    padding, and differentiability are described in the module docstring.
+    """
+    backend = _resolve(backend)
+    method, mode = spec.method, spec.mode
+    cd = spec.compute_dtype
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, m)
+
+    if backend == "dense" or not _fused_supported(params, spec):
+        # also the 'none' method: a plain einsum on the unquantized weight
+        y2d = _dense_base(params, x2d, spec, n, m)
+    elif method == "lords":
+        xc = x2d.astype(cd)
+        b = params["b"].astype(spec.ba_compute_dtype)
+        a = params["a"].astype(spec.ba_compute_dtype)
+        if mode == "qat":
+            y2d = _lords_qat_qmatmul(
+                xc, params["w"], b, a, spec.codebook, backend, tiles)
+        else:
+            y2d = _lords_qmatmul(
+                xc, params["q"], b, a, spec.codebook, backend, tiles)
+        y2d = y2d.astype(cd)
+    else:  # blockwise base (also the qlora/loftq/qpissa frozen base)
+        q_packed, s_blk, bs = _block_operands(params, m)
+        y2d = _block_qmatmul(
+            x2d.astype(cd), q_packed, s_blk, bs, spec.codebook,
+            backend, tiles,
+        ).astype(cd)
+
+    if method in ("qlora", "loftq", "qpissa") and "lora_a" in params:
+        # unmergeable additive adapter: y += x @ Aᵀ Bᵀ (the extra GEMM the
+        # paper's Fig. 2 measures against LoRDS)
+        xa = jnp.einsum("tk,rk->tr", x2d.astype(cd),
+                        params["lora_a"].astype(cd))
+        y2d = y2d + jnp.einsum("tr,nr->tn", xa, params["lora_b"].astype(cd))
+    if "bias" in params:
+        y2d = y2d + params["bias"].astype(y2d.dtype)
+    return y2d.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner (consulted by benchmarks/bench_kernels.py)
+# ---------------------------------------------------------------------------
+
+_DEFAULT_CANDIDATES = (
+    (128, 256, 512), (128, 128, 512), (128, 256, 256),
+    (64, 128, 256), (32, 128, 512), (8, 128, 256),
+)
+
+
+def autotune_qmatmul(params, x, spec, n, m, *, backend=None,
+                     candidates=None, iters: int = 3):
+    """Time candidate tilings through :func:`qmatmul`, register the winner.
+
+    Returns ``(best_tiles, {tiles: seconds})``.  On the ``ref``/``dense``
+    backends there is nothing to tune — returns ``(None, {})``.  Lookups are
+    trace-time: autotune before jitting the consumer of the table.
+    """
+    backend = _resolve(backend)
+    if backend not in _FUSED or not _fused_supported(params, spec):
+        return None, {}  # nothing fused to tune (dense/ref path ignores tiles)
+    method = "blockwise" if spec.method != "lords" else "lords"
+    kdim = x.shape[-1]
+    bs = None
+    if method == "blockwise":
+        bs = _block_operands(params, m)[2]
+    timings: dict[tuple, float] = {}
+    mdim = int(np.prod(x.shape[:-1]))
+    # fused forwards run (and look tiles up) in compute dtype, not x.dtype
+    key_dtype = jnp.dtype(spec.compute_dtype)
+    for cand in candidates or _DEFAULT_CANDIDATES:
+        bm, bn, bk = cand
+        if bs is not None and bk % bs and bs % bk:
+            continue
+        fn = jax.jit(lambda xx, c=cand: qmatmul(
+            params, xx, spec, n, m, backend=backend, tiles=c))
+        try:
+            fn(x).block_until_ready()  # compile + warm
+        except (ValueError, jax.errors.JaxRuntimeError):
+            # tiling rejected by the kernel's shape checks (ValueError) or by
+            # the Mosaic/XLA compiler-runtime on device: skip this candidate
+            continue
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(x).block_until_ready()
+        timings[cand] = (time.perf_counter() - t0) / iters
+    if not timings:
+        return None, {}
+    best = min(timings, key=timings.get)
+    register_tiles(method, mdim, n, kdim, spec.codebook, key_dtype, best,
+                   block_size=bs)
+    return best, timings

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import lut as lut_mod
+from repro.core import quantize as quantize_mod
 
 __all__ = ["lords_matmul_pallas"]
 
@@ -105,8 +106,7 @@ def lords_matmul_pallas(
 
     m, kdim = x.shape
     n, r = b.shape
-    bits = lut_mod.codebook_bits(codebook_name)
-    pack = {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    pack = quantize_mod.codes_per_byte(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 

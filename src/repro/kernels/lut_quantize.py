@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import lut as lut_mod
+from repro.core import quantize as quantize_mod
 
 __all__ = ["lut_quantize_pallas"]
 
@@ -67,8 +68,7 @@ def lut_quantize_pallas(
 
     n, kdim = w.shape
     _, r = b.shape
-    bits = lut_mod.codebook_bits(codebook_name)
-    pack = {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    pack = quantize_mod.codes_per_byte(codebook_name)
     mids = lut_mod.midpoints(codebook_name).reshape(1, -1).astype(jnp.float32)
     n_mids = mids.shape[1]
 

@@ -186,9 +186,9 @@ def model_flops(values, cfg, tokens: int, training: bool) -> float:
     """6·N·D (train) or 2·N·D (forward) with MoE active-only counting."""
     import jax
 
-    from repro.core import lut
+    from repro.core.quantize import codes_per_byte
 
-    pack = {8: 1, 4: 2, 3: 1, 2: 4}[lut.codebook_bits(cfg.quant.codebook)]
+    pack = codes_per_byte(cfg.quant.codebook)
     flat = jax.tree_util.tree_flatten_with_path(values)[0]
     n_active = 0.0
     moe_frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0

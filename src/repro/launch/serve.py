@@ -28,7 +28,11 @@ from repro.models import cache_init, model_init, split_tree
 
 
 def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
-                mesh=None, seed: int = 0, params=None, prompts=None) -> dict:
+                mesh=None, seed: int = 0, params=None, prompts=None,
+                kernel_backend: str | None = None) -> dict:
+    """``kernel_backend`` selects the quantized-matmul path (pallas /
+    interpret / ref / dense); None = platform default via the dispatch
+    layer — fused Pallas kernels on TPU, oracles elsewhere."""
     mesh = mesh or make_host_mesh()
     capacity = prompt_len + gen
     prefill_shape = ShapeCfg("serve_prefill", capacity, batch, "prefill")
@@ -39,8 +43,10 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
         params, _ = split_tree(model_init(key, cfg))
     cache, _ = split_tree(cache_init(cfg, batch, capacity))
 
-    pre_plan = build_plan(cfg, mesh, prefill_shape)
-    dec_plan = build_plan(cfg, mesh, decode_shape)
+    pre_plan = build_plan(cfg, mesh, prefill_shape,
+                          kernel_backend=kernel_backend)
+    dec_plan = build_plan(cfg, mesh, decode_shape,
+                          kernel_backend=kernel_backend)
 
     if prompts is None:
         prompts = np.random.default_rng(seed).integers(
@@ -86,6 +92,7 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
         "tokens": toks,
         "prefill_tok_s": batch * prompt_len / max(t_prefill, 1e-9),
         "decode_tok_s": batch * max(gen - 1, 1) / max(t_decode, 1e-9),
+        "kernel_backend": pre_plan.meta["kernel_backend"],
     }
 
 
@@ -96,14 +103,19 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["pallas", "interpret", "ref", "dense"],
+                    help="quantized-matmul dispatch backend "
+                         "(default: fused pallas on TPU, ref elsewhere)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
     out = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                      gen=args.gen)
-    print(f"[serve] prefill {out['prefill_tok_s']:.1f} tok/s, "
+                      gen=args.gen, kernel_backend=args.kernel_backend)
+    print(f"[serve] backend={out['kernel_backend']} "
+          f"prefill {out['prefill_tok_s']:.1f} tok/s, "
           f"decode {out['decode_tok_s']:.1f} tok/s")
     print("[serve] sample tokens:", out["tokens"][0][:16])
 

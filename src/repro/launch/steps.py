@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import peft
 from repro.distributed.sharding import make_rules, tree_shardings
+from repro.kernels import dispatch
 from repro.models import (
     activation_rules,
     cache_init,
@@ -37,6 +38,12 @@ from repro.models import (
 from repro.optim import adamw_init, adamw_update
 
 __all__ = ["StepPlan", "build_plan"]
+
+
+def _meta_backend(kernel_backend: str | None) -> str:
+    """Honest meta label: an explicit backend is pinned into the step via
+    backend_scope; None re-resolves at trace time, so report it as auto."""
+    return kernel_backend or f"auto:{dispatch.default_backend()}"
 
 
 @dataclasses.dataclass
@@ -110,7 +117,11 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
                force_2d: bool | None = None, budget_gb: float = 8.0,
                num_microbatches: int | None = None,
                target_micro_tokens: int = 8192,
-               seq_parallel: bool = False) -> StepPlan:
+               seq_parallel: bool = False,
+               kernel_backend: str | None = None) -> StepPlan:
+    """``kernel_backend`` pins the quantized-matmul dispatch backend for
+    everything traced inside the produced step (None = ambient default:
+    fused Pallas on TPU, interpret/ref per env flags elsewhere)."""
     kind = shape_cfg.kind
     dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     seq_shard = (kind == "decode" and shape_cfg.global_batch < dp)
@@ -136,7 +147,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
                                       shape_cfg.seq_len, tgt))
 
         def train_step(trainable, frozen, opt_state, batch):
-            with activation_rules(rules.act_rules):
+            with activation_rules(rules.act_rules), \
+                    dispatch.backend_scope(kernel_backend):
                 def loss_fn(t, mb):
                     params = peft.combine(t, frozen)
                     loss, metrics = forward_train(params, cfg, mb)
@@ -187,7 +199,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
             rules=rules,
             donate_argnums=(0, 2),
             meta={"mode": cfg.quant.mode, "kind": kind,
-                  "num_microbatches": n_micro},
+                  "num_microbatches": n_micro,
+                  "kernel_backend": _meta_backend(kernel_backend)},
         )
 
     # ---- serving ----
@@ -203,7 +216,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         batch.pop("labels"), batch_sh.pop("labels")
 
         def prefill_step(params, batch, cache):
-            with activation_rules(rules.act_rules):
+            with activation_rules(rules.act_rules), \
+                    dispatch.backend_scope(kernel_backend):
                 logits, new_cache = forward_prefill(params, cfg, batch, cache)
             return logits, new_cache
 
@@ -215,7 +229,7 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
             out_shardings=(None, cache_sh),
             rules=rules,
             donate_argnums=(2,),
-            meta={"kind": kind},
+            meta={"kind": kind, "kernel_backend": _meta_backend(kernel_backend)},
         )
 
     # decode
@@ -223,7 +237,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         cfg, shape_cfg, mesh, rules, decode=True)
 
     def decode_step(params, batch, cache, pos):
-        with activation_rules(rules.act_rules):
+        with activation_rules(rules.act_rules), \
+                dispatch.backend_scope(kernel_backend):
             logits, new_cache = forward_decode(params, cfg, batch, cache, pos)
         return logits, new_cache
 
@@ -235,5 +250,5 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         out_shardings=(None, cache_sh),
         rules=rules,
         donate_argnums=(2,),
-        meta={"kind": kind},
+        meta={"kind": kind, "kernel_backend": _meta_backend(kernel_backend)},
     )

@@ -9,19 +9,20 @@ Pure-JAX implementations built for three regimes:
     compressed c_kv + shared RoPE key only (kv_lora + rope floats per token
     instead of 2·nh·hd) — the paper-native cache-compression win.
 
-All linear projections go through the quantized-linear core (LoRDS / any
-baseline), so the paper's technique applies uniformly.
+All linear projections (fused QKV/O, MLA down/up) go through the unified
+kernel-dispatch layer (:func:`repro.kernels.dispatch.qmatmul`), so LoRDS /
+any baseline runs its fused dequant-matmul on TPU and its oracle elsewhere.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import qmatmul
 from repro.models.common import (
     P,
     apply_rope,
     f32_einsum,
-    qlinear_apply,
     qlinear_init,
     rmsnorm,
     rmsnorm_init,
@@ -126,9 +127,9 @@ def gqa_init(key, cfg, quant):
 def _gqa_qkv(params, x, cfg, quant, positions):
     b, s, d = x.shape
     hd, nh, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
-    q = qlinear_apply(params["wq"], x, quant, nh * hd, d).reshape(b, s, nh, hd)
-    k = qlinear_apply(params["wk"], x, quant, nkv * hd, d).reshape(b, s, nkv, hd)
-    v = qlinear_apply(params["wv"], x, quant, nkv * hd, d).reshape(b, s, nkv, hd)
+    q = qmatmul(params["wq"], x, quant, nh * hd, d).reshape(b, s, nh, hd)
+    k = qmatmul(params["wk"], x, quant, nkv * hd, d).reshape(b, s, nkv, hd)
+    v = qmatmul(params["wv"], x, quant, nkv * hd, d).reshape(b, s, nkv, hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     q = shard(q, "batch", "seq", "heads", "head_dim")
@@ -143,7 +144,7 @@ def gqa_train(params, x, cfg, quant, positions, chunk=512):
     q, k, v = _gqa_qkv(params, x, cfg, quant, positions)
     out = chunked_causal_attention(q, k, v, chunk=chunk)
     out = out.reshape(b, s, nh * hd)
-    return qlinear_apply(params["wo"], out, quant, d, nh * hd)
+    return qmatmul(params["wo"], out, quant, d, nh * hd)
 
 
 def gqa_cache_init(cfg, batch, capacity, dtype=jnp.bfloat16):
@@ -167,16 +168,16 @@ def gqa_prefill(params, x, cfg, quant, positions, cache, chunk=512):
         "v": jax.lax.dynamic_update_slice(
             cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
     }
-    return qlinear_apply(params["wo"], out, quant, d, nh * hd), new_cache
+    return qmatmul(params["wo"], out, quant, d, nh * hd), new_cache
 
 
 def gqa_decode(params, x, cfg, quant, cache, pos):
     """x (b,1,d); pos (b,) current position; cache dict of (b,S,nkv,hd)."""
     b, _, d = x.shape
     nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    q = qlinear_apply(params["wq"], x, quant, nh * hd, d).reshape(b, 1, nh, hd)
-    k = qlinear_apply(params["wk"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
-    v = qlinear_apply(params["wv"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
+    q = qmatmul(params["wq"], x, quant, nh * hd, d).reshape(b, 1, nh, hd)
+    k = qmatmul(params["wk"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
+    v = qmatmul(params["wv"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k = apply_rope(k, pos[:, None], cfg.rope_theta)
     # scatter the new kv at position pos (uniform across batch -> use pos[0])
@@ -188,7 +189,7 @@ def gqa_decode(params, x, cfg, quant, cache, pos):
     v_cache = shard(v_cache, "batch", "cache_seq", "kv_heads", "head_dim")
     out = decode_attention(q, k_cache, v_cache, pos)
     out = out.reshape(b, 1, nh * hd)
-    y = qlinear_apply(params["wo"], out, quant, d, nh * hd)
+    y = qmatmul(params["wo"], out, quant, d, nh * hd)
     return y, {"k": k_cache, "v": v_cache}
 
 
@@ -220,9 +221,9 @@ def _mla_q(params, x, cfg, quant, positions):
     m, d, nh = cfg.mla, cfg.d_model, cfg.num_heads
     b, s, _ = x.shape
     qk = m.qk_nope_dim + m.qk_rope_dim
-    ql = qlinear_apply(params["q_down"], x, quant, m.q_lora_rank, d)
+    ql = qmatmul(params["q_down"], x, quant, m.q_lora_rank, d)
     ql = rmsnorm(params["q_norm"], ql, cfg.norm_eps)
-    q = qlinear_apply(params["q_up"], ql, quant, nh * qk, m.q_lora_rank)
+    q = qmatmul(params["q_up"], ql, quant, nh * qk, m.q_lora_rank)
     q = q.reshape(b, s, nh, qk)
     q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -231,7 +232,7 @@ def _mla_q(params, x, cfg, quant, positions):
 
 def _mla_latents(params, x, cfg, quant, positions):
     m, d = cfg.mla, cfg.d_model
-    ckv = qlinear_apply(
+    ckv = qmatmul(
         params["kv_down"], x, quant, m.kv_lora_rank + m.qk_rope_dim, d)
     c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
     c = rmsnorm(params["kv_norm"], c, cfg.norm_eps)
@@ -244,10 +245,10 @@ def mla_train(params, x, cfg, quant, positions, chunk=512):
     b, s, _ = x.shape
     q_nope, q_rope = _mla_q(params, x, cfg, quant, positions)
     c, k_rope = _mla_latents(params, x, cfg, quant, positions)
-    k_nope = qlinear_apply(
+    k_nope = qmatmul(
         params["k_up"], c, quant, nh * m.qk_nope_dim, m.kv_lora_rank
     ).reshape(b, s, nh, m.qk_nope_dim)
-    v = qlinear_apply(
+    v = qmatmul(
         params["v_up"], c, quant, nh * m.v_head_dim, m.kv_lora_rank
     ).reshape(b, s, nh, m.v_head_dim)
     k = jnp.concatenate(
@@ -258,7 +259,7 @@ def mla_train(params, x, cfg, quant, positions, chunk=512):
     scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     out = chunked_causal_attention(q, k, v, chunk=chunk, logit_scale=scale)
     out = out.reshape(b, s, nh * m.v_head_dim)
-    return qlinear_apply(params["wo"], out, quant, d, nh * m.v_head_dim)
+    return qmatmul(params["wo"], out, quant, d, nh * m.v_head_dim)
 
 
 def mla_cache_init(cfg, batch, capacity, dtype=jnp.bfloat16):
@@ -311,7 +312,7 @@ def mla_decode(params, x, cfg, quant, cache, pos):
     w_vup = w_vup.reshape(nh, m.v_head_dim, m.kv_lora_rank)
     out = f32_einsum("bthl,hvl->bthv", lat.astype(w_vup.dtype), w_vup)
     out = out.reshape(b, 1, nh * m.v_head_dim).astype(x.dtype)
-    y = qlinear_apply(params["wo"], out, quant, d, nh * m.v_head_dim)
+    y = qmatmul(params["wo"], out, quant, d, nh * m.v_head_dim)
     return y, {"c": c_cache, "k_rope": r_cache}
 
 

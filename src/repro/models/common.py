@@ -109,9 +109,10 @@ def qlinear_init(key, n, m, quant_spec, out_axis, in_axis, w=None,
 
 
 def qlinear_apply(params, x, quant_spec, n, m):
-    from repro.core import apply_quantized_linear
+    """Quantized matmul through the unified kernel-dispatch layer."""
+    from repro.kernels.dispatch import qmatmul
 
-    return apply_quantized_linear(params, x, quant_spec, n, m)
+    return qmatmul(params, x, quant_spec, n, m)
 
 
 def dense_init(key, shape, axes, dtype=jnp.bfloat16, scale=None):

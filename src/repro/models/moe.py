@@ -73,9 +73,17 @@ def _qlinear_stack_init(key, e, n, m, quant):
     }
 
 
-def _qlinear_stack_dequant(ptree, quant, n, m):
-    """(E, ...) stacked params -> (E, n, m) dequantized weights."""
-    return jax.vmap(lambda p: lords.dequantize_weight(p, quant, n, m))(ptree)
+def _qlinear_stack_apply(ptree, xd, quant, n, m, e_here):
+    """Batched per-expert quantized matmul: (E, C, m) -> (E, C, n).
+
+    vmaps the kernel-dispatch entry point over the expert axis, so each
+    expert's fused dequant-matmul runs as one batched kernel invocation —
+    the (E, n, m) dequantized weight stack is never materialized.
+    """
+    from repro.kernels.dispatch import qmatmul
+
+    sliced = jax.tree.map(lambda v: v[:e_here], ptree)
+    return jax.vmap(lambda p, xe: qmatmul(p, xe, quant, n, m))(sliced, xd)
 
 
 def _n_experts_padded(mo):
@@ -123,14 +131,11 @@ def _ranks_within_expert(flat_e, e_total, tk):
 def _expert_ffn(xd, params, mo, d, quant):
     """SwiGLU over (E_local, C, d) with stacked (possibly padded) experts."""
     e_here = xd.shape[0]
-    wg = _qlinear_stack_dequant(params["w_gate"], quant, mo.d_ff, d)[:e_here]
-    wu = _qlinear_stack_dequant(params["w_up"], quant, mo.d_ff, d)[:e_here]
-    wd = _qlinear_stack_dequant(params["w_down"], quant, d, mo.d_ff)[:e_here]
-    g = jnp.einsum("ecd,efd->ecf", xd, wg)
-    u = jnp.einsum("ecd,efd->ecf", xd, wu)
+    g = _qlinear_stack_apply(params["w_gate"], xd, quant, mo.d_ff, d, e_here)
+    u = _qlinear_stack_apply(params["w_up"], xd, quant, mo.d_ff, d, e_here)
     h = (jax.nn.silu(g.astype(jnp.float32))
          * u.astype(jnp.float32)).astype(xd.dtype)
-    return jnp.einsum("ecf,edf->ecd", h, wd)
+    return _qlinear_stack_apply(params["w_down"], h, quant, d, mo.d_ff, e_here)
 
 
 def moe_apply(params, x, cfg, quant):

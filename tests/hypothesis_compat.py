@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim for the property-based test cases.
+
+``from hypothesis_compat import given, settings, st`` gives the real
+hypothesis decorators when the package is installed; otherwise stand-ins
+that turn each ``@given`` case into a single skipped test (with a clear
+reason) so deterministic cases in the same module still collect and run.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Strategy stubs: only evaluated at decoration time, never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            @pytest.mark.skip(
+                reason="hypothesis not installed: property-based case skipped"
+            )
+            def skipped():
+                pass
+
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+
+        return deco

@@ -1,0 +1,243 @@
+"""Unified kernel-dispatch layer: backend parity, padding, custom VJPs.
+
+The fused interpret backend executes the *real* Pallas kernel bodies on CPU,
+so these tests cover the code that serves on TPU — including the
+pad-to-tile path for non-tile-aligned shapes (the raw kernels raise on
+those) and the custom-VJP gradients the peft/qat training modes rely on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantSpec, init_quantized_linear
+from repro.kernels import dispatch
+from repro.kernels.dispatch import qmatmul
+
+# deliberately NOT tile-aligned: M odd/small, N/K off the 128/256/512 grid
+SHAPES = [(5, 96, 160), (33, 200, 96), (1, 130, 320)]
+
+
+def _lords_setup(n, m, mode="frozen", seed=0, cd=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n, m)) * 0.02
+    spec = QuantSpec(method="lords", block_size=32, rank=3, mode=mode,
+                     compute_dtype=cd)
+    return init_quantized_linear(key, n, m, spec, w=w, use_bias=True), spec
+
+
+# ---------------------------------------------------------------------------
+# forward parity: fused interpret == ref oracle == legacy dense
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mtok,n,m", SHAPES)
+def test_lords_fused_interpret_matches_ref_nonaligned(mtok, n, m):
+    params, spec = _lords_setup(n, m)
+    x = jax.random.normal(jax.random.PRNGKey(1), (mtok, m))
+    y_ref = qmatmul(params, x, spec, n, m, backend="ref")
+    y_int = qmatmul(params, x, spec, n, m, backend="interpret")
+    y_dense = qmatmul(params, x, spec, n, m, backend="dense")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("mtok,n,m", SHAPES)
+@pytest.mark.parametrize("method", ["blockwise", "qlora"])
+def test_block_fused_interpret_matches_ref_nonaligned(mtok, n, m, method):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (n, m)) * 0.02
+    spec = QuantSpec(method=method, block_size=32, adapter_rank=4,
+                     compute_dtype=jnp.float32)
+    params = init_quantized_linear(key, n, m, spec, w=w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (mtok, m))
+    y_ref = qmatmul(params, x, spec, n, m, backend="ref")
+    y_int = qmatmul(params, x, spec, n, m, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_leading_batch_dims_and_bias():
+    params, spec = _lords_setup(96, 160)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 160))
+    y = qmatmul(params, x, spec, 96, 160, backend="interpret")
+    assert y.shape == (2, 3, 96)
+    y_flat = qmatmul(params, x.reshape(6, 160), spec, 96, 160,
+                     backend="interpret")
+    np.testing.assert_allclose(np.asarray(y.reshape(6, 96)),
+                               np.asarray(y_flat), rtol=1e-6, atol=1e-6)
+
+
+def test_qat_fused_forward_matches_dense():
+    params, spec = _lords_setup(96, 160, mode="qat")
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, 160))
+    y_dense = qmatmul(params, x, spec, 96, 160, backend="dense")
+    y_int = qmatmul(params, x, spec, 96, 160, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_dense),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# gradient parity: custom-VJP fused path vs dequantize-then-einsum autodiff
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_peft_gradients_match_dense_path(backend):
+    n, m = 96, 160
+    params, spec = _lords_setup(n, m, mode="peft")
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, m))
+
+    def loss(ba, bk):
+        p = dict(params, b=ba[0], a=ba[1])
+        return jnp.sum(qmatmul(p, x, spec, n, m, backend=bk) ** 2)
+
+    g_dense = jax.grad(loss)((params["b"], params["a"]), "dense")
+    g_fused = jax.grad(loss)((params["b"], params["a"]), backend)
+    for gd, gf in zip(g_dense, g_fused):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gd),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_qat_ste_gradients_match_dense_path(backend):
+    """STE cotangents (paper Eq. 4/5) through the fused forward must equal
+    autodiff through fake_quant_ste + einsum on the dense path."""
+    n, m = 96, 160
+    params, spec = _lords_setup(n, m, mode="qat")
+    x = jax.random.normal(jax.random.PRNGKey(5), (5, m))
+
+    def loss(t, bk):
+        p = dict(params, w=t[0], b=t[1], a=t[2])
+        return jnp.sum(qmatmul(p, x, spec, n, m, backend=bk) ** 2)
+
+    t0 = (params["w"], params["b"], params["a"])
+    g_dense = jax.grad(loss)(t0, "dense")
+    g_fused = jax.grad(loss)(t0, backend)
+    for name, gd, gf in zip("wba", g_dense, g_fused):
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gd),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"grad wrt {name}")
+
+
+def test_gradient_flows_to_x_through_fused_path():
+    n, m = 96, 160
+    params, spec = _lords_setup(n, m, mode="peft")
+    x = jax.random.normal(jax.random.PRNGKey(6), (5, m))
+    f = lambda xx, bk: jnp.sum(qmatmul(params, xx, spec, n, m, backend=bk))
+    gx_dense = jax.grad(f)(x, "dense")
+    gx_fused = jax.grad(f)(x, "interpret")
+    np.testing.assert_allclose(np.asarray(gx_fused), np.asarray(gx_dense),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch plumbing: vmapped experts, backend scope, autotune table
+# ---------------------------------------------------------------------------
+
+
+def test_vmapped_expert_stack_matches_per_expert():
+    """The MoE path vmaps qmatmul over a stacked-expert param tree."""
+    spec = QuantSpec(method="lords", block_size=32, rank=2,
+                     compute_dtype=jnp.float32)
+    e, n, m = 3, 64, 96
+    keys = jax.random.split(jax.random.PRNGKey(7), e)
+    stack = jax.vmap(lambda k: init_quantized_linear(k, n, m, spec))(keys)
+    xd = jax.random.normal(jax.random.PRNGKey(8), (e, 16, m))
+    y = jax.vmap(
+        lambda p, xe: qmatmul(p, xe, spec, n, m, backend="interpret")
+    )(stack, xd)
+    for i in range(e):
+        yi = qmatmul(jax.tree.map(lambda v: v[i], stack), xd[i], spec, n, m,
+                     backend="ref")
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yi),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_backend_scope_and_env_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_INTERPRET_KERNELS", raising=False)
+    assert dispatch.default_backend() in ("ref", "pallas")
+    with dispatch.backend_scope("dense"):
+        assert dispatch.default_backend() == "dense"
+        with dispatch.backend_scope(None):  # None inherits the outer scope
+            assert dispatch.default_backend() == "dense"
+    monkeypatch.setenv("REPRO_INTERPRET_KERNELS", "1")
+    assert dispatch.default_backend() == "interpret"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    assert dispatch.default_backend() == "ref"
+    with pytest.raises(ValueError):
+        dispatch.backend_scope("nope").__enter__()
+
+
+def test_autotune_registers_and_qmatmul_consults():
+    n, m = 96, 160
+    params, spec = _lords_setup(n, m)
+    x = jax.random.normal(jax.random.PRNGKey(9), (5, m))
+    tiles, timings = dispatch.autotune_qmatmul(
+        params, x, spec, n, m, backend="interpret",
+        candidates=[(8, 128, 256), (8, 128, 512)], iters=1)
+    assert tiles in timings and len(timings) >= 1
+    # registered under compute_dtype — the dtype the fused forward traces in
+    assert dispatch.lookup_tiles("lords", 5, n, m, spec.codebook,
+                                 spec.compute_dtype) == tiles
+    assert dispatch.tile_for("lords", 5, n, m, spec.codebook,
+                             spec.compute_dtype) == tiles
+    # the registered tiling must produce the same numerics
+    y = qmatmul(params, x, spec, n, m, backend="interpret")
+    y_ref = qmatmul(params, x, spec, n, m, backend="ref")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_autotune_key_separates_block_sizes():
+    """Tiles tuned for one block size must not be handed to a same-shaped
+    layer with an incompatible block size (bk 512 vs bs 96 would raise)."""
+    key = jax.random.PRNGKey(14)
+    n, m = 128, 192
+    w = jax.random.normal(key, (n, m)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(15), (8, m))
+    s64 = QuantSpec(method="blockwise", block_size=64,
+                    compute_dtype=jnp.float32)
+    s96 = QuantSpec(method="blockwise", block_size=96,
+                    compute_dtype=jnp.float32)
+    p64 = init_quantized_linear(key, n, m, s64, w=w)
+    p96 = init_quantized_linear(key, n, m, s96, w=w)
+    dispatch.autotune_qmatmul(p64, x, s64, n, m, backend="interpret",
+                              candidates=[(8, 128, 512)], iters=1)
+    y = dispatch.qmatmul(p96, x, s96, n, m, backend="interpret")
+    y_ref = dispatch.qmatmul(p96, x, s96, n, m, backend="ref")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_autotune_noop_for_dense_only_specs():
+    """Specs with no fused path (blockwise QAT, AWQ-smoothed) must not crash
+    or register noise-tuned tiles — qmatmul ignores tiles on the dense path."""
+    key = jax.random.PRNGKey(12)
+    w = jax.random.normal(key, (64, 128)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(13), (4, 128))
+    spec = QuantSpec(method="blockwise", block_size=32, mode="qat",
+                     compute_dtype=jnp.float32)
+    params = init_quantized_linear(key, 64, 128, spec, w=w)
+    assert dispatch.autotune_qmatmul(
+        params, x, spec, 64, 128, backend="interpret") == (None, {})
+    awq_params = dict(params, awq_s=jnp.ones((128,)))
+    assert dispatch.autotune_qmatmul(
+        awq_params, x, spec, 64, 128, backend="interpret") == (None, {})
+
+
+def test_ref_backend_equals_legacy_dense_for_all_methods():
+    key = jax.random.PRNGKey(10)
+    w = jax.random.normal(key, (64, 128)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, 128))
+    for method in ("lords", "blockwise", "qlora", "loftq", "qpissa", "none"):
+        spec = QuantSpec(method=method, block_size=32, rank=2, adapter_rank=4,
+                         compute_dtype=jnp.float32)
+        params = init_quantized_linear(key, 64, 128, spec, w=w)
+        y_ref = qmatmul(params, x, spec, 64, 128, backend="ref")
+        y_dense = qmatmul(params, x, spec, 64, 128, backend="dense")
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_dense),
+                                   rtol=3e-5, atol=3e-5, err_msg=method)

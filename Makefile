@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-interpret bench serve-smoke
+.PHONY: test test-interpret bench bench-serve serve-smoke serve-smoke-interpret
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -17,6 +17,16 @@ test-interpret:  ## kernel + dispatch suites in interpret mode
 bench:           ## kernel-level fused-vs-oracle benchmark (Fig. 2 analogue)
 	$(PY) -m benchmarks.run kernels
 
-serve-smoke:     ## end-to-end quantized serving smoke run
+bench-serve:     ## decode fast path: prefill/decode timings + bytes/token roofline -> BENCH_serve.json
+	$(PY) -m benchmarks.bench_serve
+
+serve-smoke:     ## end-to-end quantized serving smoke run (on-device decode loop)
 	$(PY) -m repro.launch.serve --arch llama3-8b --smoke \
 		--batch 2 --prompt-len 16 --gen 8
+
+# decode path through the Pallas interpreter: the fused decode GEMV kernel
+# bodies execute on CPU inside the jitted generation loop
+serve-smoke-interpret:  ## serve smoke with fused kernels in interpret mode + int8 KV
+	$(PY) -m repro.launch.serve --arch llama3-8b --smoke \
+		--batch 2 --prompt-len 8 --gen 4 \
+		--kernel-backend interpret --kv-cache int8

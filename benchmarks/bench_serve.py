@@ -1,0 +1,149 @@
+"""Serving benchmark — decode fast path (§4.4 analogue).
+
+Measures the end-to-end serve driver (prefill + single jitted on-device
+generation loop) for both KV-cache formats and derives the analytic decode
+roofline (HBM bytes per generated token: every weight byte streams once,
+plus the live KV cache), then writes ``BENCH_serve.json``:
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--arch llama3-8b]
+        [--batch 2] [--prompt-len 16] [--gen 8] [--backend interpret]
+
+Also runnable via ``python -m benchmarks.run serve``.  CPU numbers are for
+plumbing (CI smoke), not speed — the roofline section is the
+hardware-independent content.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import benchmarks.common  # noqa: F401  (sets REPRO_CPU_EXEC before jax use)
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core.quantize import codes_per_byte
+from repro.models import cache_init, model_init
+
+_SCALE_LEAVES = ("b", "a", "s_blk")  # fold into Ŵ on the dense path
+
+
+def _leaf_name(path) -> str:
+    return str(path[-1].key) if path else ""
+
+
+def weight_stream_bytes(cfg) -> dict:
+    """Per-decode-token weight HBM traffic: packed (as stored: uint8 codes +
+    low-rank/block scales) vs dense (bf16 Ŵ).  The embedding table is
+    excluded (decode gathers one row); a separate head counts (it's a full
+    matmul every token)."""
+    pack = codes_per_byte(cfg.quant.codebook)
+    ptree = jax.eval_shape(
+        lambda k: model_init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    leaves = jax.tree_util.tree_flatten_with_path(ptree)[0]
+    packed = dense = 0
+    for path, leaf in leaves:
+        name = _leaf_name(path)
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if any(str(p.key) == "embed" for p in path if hasattr(p, "key")):
+            continue
+        if leaf.dtype == jnp.uint8:      # packed codes
+            packed += nbytes
+            dense += leaf.size * pack * 2
+        elif name in _SCALE_LEAVES:      # rides along only on the fused path
+            packed += nbytes
+        else:                            # norms, head, dense convs, biases
+            packed += nbytes
+            dense += nbytes
+    return {"packed": packed, "dense": dense}
+
+
+def cache_bytes(cfg, batch: int, capacity: int) -> int:
+    """Live-cache HBM bytes read per decode step at capacity."""
+    ctree = jax.eval_shape(lambda: cache_init(cfg, batch, capacity))
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree.leaves(ctree))
+
+
+def bench(arch: str = "llama3-8b", *, smoke: bool = True, batch: int = 2,
+          prompt_len: int = 16, gen: int = 8,
+          backend: str | None = None) -> dict:
+    from repro.launch.serve import serve_batch
+
+    cfg = get_config(arch)
+    if smoke:
+        cfg = smoke_variant(cfg)
+    capacity = prompt_len + gen
+    wb = weight_stream_bytes(cfg)
+    roofline = {
+        "weight_bytes_packed": wb["packed"],
+        "weight_bytes_dense": wb["dense"],
+        "cache_bytes_bf16": cache_bytes(
+            cfg.with_(kv_cache_dtype="bf16"), batch, capacity),
+        "cache_bytes_int8": cache_bytes(
+            cfg.with_(kv_cache_dtype="int8"), batch, capacity),
+    }
+    roofline["bytes_per_token"] = {
+        "packed_kv_bf16": wb["packed"] + roofline["cache_bytes_bf16"],
+        "packed_kv_int8": wb["packed"] + roofline["cache_bytes_int8"],
+        "dense_kv_bf16": wb["dense"] + roofline["cache_bytes_bf16"],
+    }
+    runs = {}
+    for kv in ("bf16", "int8"):
+        out = serve_batch(cfg, batch=batch, prompt_len=prompt_len, gen=gen,
+                          kernel_backend=backend, kv_cache=kv)
+        runs[kv] = {
+            "prefill_ms": round(out["prefill_ms"], 3),
+            "decode_tok_s": round(out["decode_tok_s"], 3),
+            "decode_loop": out["decode_loop"],
+            "kernel_backend": out["kernel_backend"],
+        }
+    return {
+        "arch": cfg.name, "smoke": smoke, "batch": batch,
+        "prompt_len": prompt_len, "gen": gen, "capacity": capacity,
+        "roofline": roofline, "runs": runs,
+    }
+
+
+def run(report):
+    """benchmarks.run entry point: smoke-scale serve + BENCH_serve.json."""
+    rec = bench()
+    rl = rec["roofline"]
+    for kv, r in rec["runs"].items():
+        report(f"serve/decode_tok_s/kv_{kv}", r["decode_tok_s"],
+               f"prefill_ms={r['prefill_ms']} loop={r['decode_loop']} "
+               f"backend={r['kernel_backend']}")
+    for name, byts in rl["bytes_per_token"].items():
+        report(f"serve/bytes_per_token/{name}", float(byts),
+               f"roofline_us_v5e={byts/819e3:.2f}")
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    report("serve/json", 0.0, "wrote BENCH_serve.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-smoke) config")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "interpret", "ref", "dense"])
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    rec = bench(args.arch, smoke=not args.full, batch=args.batch,
+                prompt_len=args.prompt_len, gen=args.gen,
+                backend=args.backend)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    rl = rec["roofline"]["bytes_per_token"]
+    print(json.dumps(rec["runs"], indent=1))
+    print(f"[bench_serve] bytes/token: packed+bf16kv={rl['packed_kv_bf16']} "
+          f"packed+int8kv={rl['packed_kv_int8']} "
+          f"dense+bf16kv={rl['dense_kv_bf16']} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
   rank         Fig. 3   — ΔW singular spectrum
   kernels      Fig. 2/Table 6 — kernel cost comparison
   error_ratio  Table 8  — per-module error reduction (incl. LoRDS†)
+  serve        §4.4     — decode fast path (prefill ms, decode tok/s,
+                          bytes/token roofline) -> BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import sys
 import time
 
 TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
-          "error_ratio"]
+          "error_ratio", "serve"]
 
 
 def main() -> None:

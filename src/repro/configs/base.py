@@ -82,6 +82,9 @@ class ModelConfig:
     input_kind: str = "tokens"     # tokens | embeddings (vlm/audio stubs)
     quant: QuantSpec = QuantSpec(method="lords", codebook="nf4",
                                  block_size=128, mode="peft")
+    # decode KV-cache storage: 'bf16' (dense) or 'int8' (per-head symmetric
+    # int8 + f32 scales — ~2x less cache HBM traffic per decoded token)
+    kv_cache_dtype: str = "bf16"
     scan_layers: bool = True
     remat: bool = True
     remat_policy: str = "nothing"  # nothing | dots (checkpoint dot outputs)

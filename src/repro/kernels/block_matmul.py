@@ -3,6 +3,8 @@
 Same contract as :mod:`repro.kernels.lords_matmul` but with piecewise-constant
 block scales instead of the low-rank S = B·A.  Exists so the Fig.-2 style
 kernel comparison (bnb-NF4 vs QLoRA vs LoRDS) is apples-to-apples on TPU.
+Shares ``_lut_select`` with the lords kernels, so the LUT gather here is the
+same one-hot × lut MXU matmul (select-chain only for wide int8 tables).
 
 y[M,N] = x[M,K] @ (lut[Q] ⊙ repeat(s_blk))ᵀ
 """

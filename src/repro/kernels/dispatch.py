@@ -33,15 +33,25 @@ Differentiability: fused lords forwards carry ``jax.custom_vjp``s —
 ``qat`` mode implements the paper's STE cotangents (Eq. 4/5: ∇W = ∂L/∂Ŵ,
 ∇S = ∂L/∂Ŵ ⊙ (Q − W⊘S)) so training never materializes Ŵ in the forward.
 
+Decode fast path: fused lords forwards with M ≤ 8 flattened tokens route to
+the weight-stationary GEMV kernel (:mod:`repro.kernels.lords_decode`) —
+weights stream exactly once per call, the memory-roofline minimum for
+autoregressive decoding.  The routing is by trace-time shape, so a jitted
+serve step picks the decode kernel automatically.
+
 Autotuning: per-(method, M-bucket, N, K, codebook, dtype) tile choices live
 in a small in-process table.  ``autotune_qmatmul`` times candidate tilings
 through the public entry point and registers the winner; subsequent
-``qmatmul`` traces consult the table (lookups happen at trace time).
+``qmatmul`` traces consult the table (lookups happen at trace time).  Set
+``REPRO_AUTOTUNE_CACHE=/path/to/table.json`` to persist the table across
+processes: it is loaded on import and saved after every successful
+``autotune_qmatmul``, so benchmark-found tiles survive into serving runs.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
+import json
 import math
 import os
 import threading
@@ -54,6 +64,7 @@ import numpy as np
 from repro.core import lut as lut_mod
 from repro.kernels import ref
 from repro.kernels.block_matmul import block_matmul_pallas
+from repro.kernels.lords_decode import DECODE_M_MAX, lords_decode_pallas
 from repro.kernels.lords_matmul import lords_matmul_pallas
 from repro.kernels.lut_quantize import lut_quantize_pallas
 
@@ -67,6 +78,8 @@ __all__ = [
     "register_tiles",
     "autotune_qmatmul",
     "autotune_table",
+    "load_autotune_table",
+    "save_autotune_table",
 ]
 
 BACKENDS = ("pallas", "interpret", "ref", "dense")
@@ -166,6 +179,74 @@ def autotune_table() -> dict:
     return dict(_AUTOTUNE)
 
 
+# ---------------------------------------------------------------------------
+# Autotune persistence (REPRO_AUTOTUNE_CACHE=<json path>)
+# ---------------------------------------------------------------------------
+
+_AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def _autotune_cache_path(path: str | None = None) -> str | None:
+    return path or os.environ.get(_AUTOTUNE_CACHE_ENV) or None
+
+
+def save_autotune_table(path: str | None = None) -> str | None:
+    """Write the in-process table to JSON (``path`` or the env default).
+
+    Returns the path written, or None when no destination is configured —
+    callers can treat persistence as strictly optional.
+    """
+    path = _autotune_cache_path(path)
+    if not path:
+        return None
+    # merge-then-write narrows (not closes) the lost-update window between
+    # concurrent shards sharing one cache file: a shard that replaces the
+    # file between this load and our rename below still loses its entries.
+    # Best-effort is fine for a tuning cache — a dropped entry only costs
+    # a re-autotune; correctness never depends on the file.
+    load_autotune_table(path)
+    entries = [{"key": list(k), "tiles": list(v)}
+               for k, v in sorted(_AUTOTUNE.items(), key=str)]
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=1)
+    os.replace(tmp, path)  # atomic rename: readers never see a torn file
+    return path
+
+
+def load_autotune_table(path: str | None = None, *,
+                        overwrite: bool = False) -> int:
+    """Merge a persisted table into the process (in-process entries win
+    unless ``overwrite``).  Missing/corrupt files are ignored — a stale
+    cache must never break serving.  Returns the number of entries merged.
+    """
+    path = _autotune_cache_path(path)
+    if not path or not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        entries = data["entries"]
+    except (OSError, ValueError, KeyError, TypeError):
+        return 0
+    n = 0
+    for e in entries:
+        try:
+            key = tuple(e["key"])
+            tiles = tuple(int(t) for t in e["tiles"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if len(tiles) != 3:
+            continue
+        if overwrite or key not in _AUTOTUNE:
+            _AUTOTUNE[key] = tiles
+            n += 1
+    return n
+
+
+load_autotune_table()  # import-time: benchmark-found tiles from prior runs
+
+
 def tile_for(method: str, m: int, n: int, k: int, codebook: str, dtype,
              block_size: int | None = None) -> tuple[int, int, int]:
     """Tile choice: autotune-table hit, else a lane-aligned heuristic.
@@ -209,6 +290,21 @@ def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
     n = q_packed.shape[0]
     pack = _pack_of(codebook)
     bm, bn, bk = tiles or tile_for("lords", m, n, k, codebook, x2d.dtype)
+    interp = backend == "interpret"
+    if m <= DECODE_M_MAX:
+        # decode fast path: weight-stationary GEMV kernel, M padded to the
+        # sublane tile inside the kernel (bm from the tile table is moot)
+        np_, kp = _round_up(n, bn), _round_up(k, bk)
+        y = lords_decode_pallas(
+            _pad2(x2d, m, kp),
+            _pad2(q_packed, np_, kp // pack),
+            _pad2(b, np_, b.shape[1]),
+            _pad2(a, a.shape[0], kp),
+            codebook,
+            bn=bn, bk=bk,
+            interpret=interp,
+        )
+        return y[:, :n]
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
     y = lords_matmul_pallas(
         _pad2(x2d, mp, kp),
@@ -217,7 +313,7 @@ def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
         _pad2(a, a.shape[0], kp),
         codebook,
         bm=bm, bn=bn, bk=bk,
-        interpret=(backend == "interpret"),
+        interpret=interp,
     )
     return y[:m, :n]
 
@@ -521,4 +617,5 @@ def autotune_qmatmul(params, x, spec, n, m, *, backend=None,
     best = min(timings, key=timings.get)
     register_tiles(method, mdim, n, kdim, spec.codebook, key_dtype, best,
                    block_size=bs)
+    save_autotune_table()  # no-op unless REPRO_AUTOTUNE_CACHE is set
     return best, timings

@@ -52,12 +52,49 @@ def _unpack_tile(q, pack: int):
     return stacked.reshape(q.shape[0], q.shape[1] * pack)
 
 
+# One-hot tensors above this LUT width would dwarf the codes tile in VMEM
+# (L× the f32 tile) — int8's 256-level table stays on the select chain.
+_ONE_HOT_MAX_LEVELS = 32
+# Column slab for the one-hot: bounds the live (bn, slab, L) f32 intermediate
+# to ~2 MiB at bn=256/L=16 regardless of bk, so default prefill tiles
+# (bn 256 × bk 512, which would be an 8 MiB one-hot in one shot) still fit
+# VMEM next to the double-buffered operand tiles and the accumulator.
+_ONE_HOT_SLAB = 128
+
+
 def _lut_select(codes, lut_ref, n_levels: int):
-    """Select-tree LUT gather: Mosaic-friendly (no dynamic gather)."""
-    out = jnp.zeros(codes.shape, jnp.float32)
-    for l in range(n_levels):
-        out = jnp.where(codes == l, lut_ref[0, l], out)
-    return out
+    """LUT gather as one-hot × lut matmul: the L-way gather becomes
+    (bn, slab, L) · (L,) contractions the MXU executes, instead of the O(L)
+    compare-select chain the VPU had to walk per element.  The K dimension
+    is processed in lane slabs so the one-hot intermediate stays a bounded
+    VMEM transient.  Wide tables (int8: L=256) keep the chain — their
+    one-hot would be L× the tile.  No dynamic gather either way
+    (Mosaic-friendly)."""
+    if n_levels > _ONE_HOT_MAX_LEVELS:
+        out = jnp.zeros(codes.shape, jnp.float32)
+        for l in range(n_levels):
+            out = jnp.where(codes == l, lut_ref[0, l], out)
+        return out
+
+    def slab_vals(slab):
+        iota = jax.lax.broadcasted_iota(
+            jnp.int32, (*slab.shape, n_levels), slab.ndim)
+        one_hot = (slab[..., None] == iota).astype(jnp.float32)
+        out = jax.lax.dot_general(
+            one_hot, lut_ref[...],  # lut (1, L): contract L, drop the 1
+            (((slab.ndim,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return out[..., 0]
+
+    kdim = codes.shape[-1]
+    if kdim <= _ONE_HOT_SLAB:
+        return slab_vals(codes)
+    # non-multiple K tiles get a short trailing slab — the bound must hold
+    # for every bk the kernels accept, not just the 128-multiple defaults
+    slabs = [slab_vals(codes[..., i : i + _ONE_HOT_SLAB])
+             for i in range(0, kdim, _ONE_HOT_SLAB)]
+    return jnp.concatenate(slabs, axis=-1)
 
 
 def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,

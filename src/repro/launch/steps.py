@@ -12,6 +12,11 @@ Modes:
     ``cfg.quant.mode='qat'`` switches to full STE fake-quant training.
   * prefill: full-sequence forward, fills KV/SSM caches, returns last logits.
   * decode: one token with caches (the serve_step for decode shapes).
+
+``build_generate_plan`` wraps the decode step in an on-device
+``jax.lax.scan`` over the whole generation budget: one jit, one dispatch,
+donated cache — decode cost becomes kernel-bound instead of paying a host
+round-trip per token (the decode fast path the paper's §4.4 speedup needs).
 """
 from __future__ import annotations
 
@@ -37,7 +42,7 @@ from repro.models import (
 )
 from repro.optim import adamw_init, adamw_update
 
-__all__ = ["StepPlan", "build_plan"]
+__all__ = ["StepPlan", "build_plan", "build_generate_plan", "sample_token"]
 
 
 def _meta_backend(kernel_backend: str | None) -> str:
@@ -113,6 +118,34 @@ def _pick_microbatches(global_batch: int, dp: int, seq: int,
     return b_local
 
 
+def _plan_state(cfg, mesh, shape_cfg, kind, *, budget_gb, force_2d,
+                seq_parallel=False):
+    """Shared plan setup: sharding rules + abstract weights and their
+    shardings (one code path for train / prefill / decode / generate, so
+    the scan generation loop can never drift from the host-loop decode
+    shardings it is parity-tested against)."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    seq_shard = (kind == "decode" and shape_cfg.global_batch < dp)
+    rules = make_rules(cfg, mesh, kind, budget_gb=budget_gb,
+                       force_2d=force_2d, seq_shard_cache=seq_shard,
+                       seq_parallel=seq_parallel)
+    dropped: list = []
+    values, axes = split_tree(_abstract_init(cfg))
+    shard_tree = tree_shardings(axes, values, rules.weight_rules, mesh, dropped)
+    rules.dropped.extend(dropped)
+    return rules, values, shard_tree
+
+
+def _cache_state(cfg, mesh, shape_cfg, rules):
+    """Abstract decode cache + its shardings (serving kinds only)."""
+    cache_ptree = jax.eval_shape(
+        lambda: cache_init(cfg, shape_cfg.global_batch, shape_cfg.seq_len))
+    cache_vals, cache_axes = split_tree(cache_ptree)
+    cache_sh = tree_shardings(cache_axes, cache_vals, rules.act_rules, mesh,
+                              rules.dropped)
+    return cache_vals, cache_sh
+
+
 def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
                force_2d: bool | None = None, budget_gb: float = 8.0,
                num_microbatches: int | None = None,
@@ -124,16 +157,9 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
     fused Pallas on TPU, interpret/ref per env flags elsewhere)."""
     kind = shape_cfg.kind
     dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
-    seq_shard = (kind == "decode" and shape_cfg.global_batch < dp)
-    rules = make_rules(cfg, mesh, kind, budget_gb=budget_gb,
-                       force_2d=force_2d, seq_shard_cache=seq_shard,
-                       seq_parallel=seq_parallel)
-    dropped: list = []
-
-    ptree = _abstract_init(cfg)
-    values, axes = split_tree(ptree)
-    shard_tree = tree_shardings(axes, values, rules.weight_rules, mesh, dropped)
-    rules.dropped.extend(dropped)
+    rules, values, shard_tree = _plan_state(
+        cfg, mesh, shape_cfg, kind, budget_gb=budget_gb, force_2d=force_2d,
+        seq_parallel=seq_parallel)
 
     if kind == "train":
         t_vals, f_vals = peft.partition(values, cfg.quant)
@@ -204,12 +230,7 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         )
 
     # ---- serving ----
-    cap = shape_cfg.seq_len
-    cache_ptree = jax.eval_shape(
-        lambda: cache_init(cfg, shape_cfg.global_batch, cap))
-    cache_vals, cache_axes = split_tree(cache_ptree)
-    cache_sh = tree_shardings(cache_axes, cache_vals, rules.act_rules, mesh,
-                              dropped)
+    cache_vals, cache_sh = _cache_state(cfg, mesh, shape_cfg, rules)
 
     if kind == "prefill":
         batch, batch_sh = _batch_specs(cfg, shape_cfg, mesh, rules)
@@ -251,4 +272,78 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         rules=rules,
         donate_argnums=(2,),
         meta={"kind": kind, "kernel_backend": _meta_backend(kernel_backend)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# On-device generation loop (single jit over the whole decode budget)
+# ---------------------------------------------------------------------------
+
+
+def sample_token(logits, key, temperature: float):
+    """Greedy (temperature <= 0) or temperature sampling over (b, V) logits."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+def build_generate_plan(cfg, mesh, shape_cfg, *, gen: int,
+                        temperature: float = 0.0,
+                        force_2d: bool | None = None, budget_gb: float = 8.0,
+                        kernel_backend: str | None = None) -> StepPlan:
+    """A StepPlan whose step runs ``gen`` decode steps as one on-device
+    ``lax.scan`` — the caller dispatches once, the cache never leaves the
+    device, and per-token cost is the decode kernels, not Python.
+
+    step_fn(params, tok0, cache, pos0, key, embeds0) -> (tokens (b, gen),
+    cache).  ``tok0`` (b,) seeds the loop (usually argmax of the prefill
+    logits); ``pos0`` (b,) may be ragged per sequence.  ``embeds0`` is the
+    fixed per-step input for ``input_kind='embeddings'`` archs (frontends
+    are stubbed) and None for token models.  Donate the cache (argnums 2)
+    when jitting.
+    """
+    rules, values, shard_tree = _plan_state(
+        cfg, mesh, shape_cfg, "decode", budget_gb=budget_gb,
+        force_2d=force_2d)
+    cache_vals, cache_sh = _cache_state(cfg, mesh, shape_cfg, rules)
+    batch, batch_sh, pos, pos_sh = _batch_specs(
+        cfg, shape_cfg, mesh, rules, decode=True)
+    b = shape_cfg.global_batch
+    tok0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+    key_arg = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    embeds0 = batch.get("embeds")
+
+    def generate_step(params, tok0, cache, pos0, key, embeds0=None):
+        with activation_rules(rules.act_rules), \
+                dispatch.backend_scope(kernel_backend):
+            def body(carry, _):
+                tok, cache, pos, key = carry
+                if cfg.input_kind == "tokens":
+                    step_in = {"tokens": tok}
+                else:
+                    step_in = {"embeds": embeds0}
+                logits, cache = forward_decode(params, cfg, step_in, cache,
+                                               pos)
+                key, sub = jax.random.split(key)
+                nxt = sample_token(logits[:, -1, : cfg.vocab_size], sub,
+                                   temperature)
+                return (nxt, cache, pos + 1, key), nxt
+
+            (_, cache, _, _), toks = jax.lax.scan(
+                body, (tok0, cache, pos0, key), None, length=gen)
+        return jnp.moveaxis(toks, 0, 1), cache  # (b, gen)
+
+    return StepPlan(
+        name=f"generate:{cfg.name}:{shape_cfg.name}:g{gen}",
+        step_fn=generate_step,
+        abstract_args=(values, tok0, cache_vals, pos, key_arg, embeds0),
+        in_shardings=(shard_tree, pos_sh, cache_sh, pos_sh, None,
+                      batch_sh.get("embeds")),
+        out_shardings=(None, cache_sh),
+        rules=rules,
+        donate_argnums=(2,),
+        meta={"kind": "generate", "gen": gen, "temperature": temperature,
+              "kernel_backend": _meta_backend(kernel_backend)},
     )

@@ -23,6 +23,8 @@ from repro.models.common import (
     P,
     apply_rope,
     f32_einsum,
+    kv_dequantize,
+    kv_quantize,
     qlinear_init,
     rmsnorm,
     rmsnorm_init,
@@ -90,12 +92,40 @@ def chunked_causal_attention(q, k, v, *, chunk=512, logit_scale=None):
     return out.astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, pos, *, logit_scale=None):
-    """q (b,1,nh,hd) vs cache (b,S,nkv,hd); positions<=pos are live."""
+def _scatter_token(cache_arr, new, pos):
+    """Write per-sequence entries ``new`` (b, 1, ...) into ``cache_arr``
+    (b, S, ...) at per-sequence positions ``pos`` (b,) int32.
+
+    Ragged-safe: each batch row scatters at its own position (the old code
+    used pos[0] for the whole batch, silently corrupting ragged batches).
+    """
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(
+            c, u, (p,) + (0,) * (c.ndim - 1))
+    )(cache_arr, new, pos)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, logit_scale=None,
+                     k_scale=None, v_scale=None):
+    """q (b,1,nh,hd) vs cache (b,S,nkv,hd); positions<=pos are live.
+
+    With ``k_scale``/``v_scale`` (b,S,nkv) the caches hold per-head int8
+    codes; dequantization happens here, right at the score/output einsums.
+    The guaranteed win is cache *footprint* (~2x more capacity per HBM
+    byte); the per-token *traffic* win additionally needs the
+    convert-multiply fused into the attention reads — XLA may materialize
+    a bf16 temp on this portable einsum path, so the full roofline number
+    (int8 codes + one f32 scale per (token, head), reported by
+    bench_serve) is the target for a fused decode-attention kernel.
+    """
     b, _, nh, hd = q.shape
     nkv = k_cache.shape[2]
     g = nh // nkv
     cap = k_cache.shape[1]
+    if k_scale is not None:
+        k_cache = kv_dequantize(k_cache, k_scale, dtype=q.dtype)
+    if v_scale is not None:
+        v_cache = kv_dequantize(v_cache, v_scale, dtype=q.dtype)
     scale = logit_scale if logit_scale is not None else 1.0 / jnp.sqrt(hd)
     qg = q.reshape(b, nkv, g, hd)
     scores = f32_einsum(
@@ -151,8 +181,47 @@ def gqa_cache_init(cfg, batch, capacity, dtype=jnp.bfloat16):
     hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
     shape = (batch, capacity, nkv, hd)
     axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        s_axes = ("batch", "cache_seq", "kv_heads")
+        return {
+            "k": P(jnp.zeros(shape, jnp.int8), axes),
+            "v": P(jnp.zeros(shape, jnp.int8), axes),
+            "k_scale": P(jnp.zeros(shape[:3], jnp.float32), s_axes),
+            "v_scale": P(jnp.zeros(shape[:3], jnp.float32), s_axes),
+        }
     return {"k": P(jnp.zeros(shape, dtype), axes),
             "v": P(jnp.zeros(shape, dtype), axes)}
+
+
+def _kv_store(cache, name, new, pos=None):
+    """Store ``new`` (b, s, nkv, hd) into cache slot ``name``, quantizing to
+    the cache's storage format.  pos None = prefill (write at 0); pos (b,)
+    = decode (ragged per-sequence scatter)."""
+    quantized = f"{name}_scale" in cache
+    if quantized:
+        codes, scale = kv_quantize(new)
+        if pos is None:
+            out = {
+                name: jax.lax.dynamic_update_slice(
+                    cache[name], codes, (0,) * cache[name].ndim),
+                f"{name}_scale": jax.lax.dynamic_update_slice(
+                    cache[f"{name}_scale"], scale,
+                    (0,) * cache[f"{name}_scale"].ndim),
+            }
+        else:
+            out = {
+                name: _scatter_token(cache[name], codes, pos),
+                f"{name}_scale": _scatter_token(
+                    cache[f"{name}_scale"], scale, pos),
+            }
+    elif pos is None:
+        out = {name: jax.lax.dynamic_update_slice(
+            cache[name], new.astype(cache[name].dtype),
+            (0,) * cache[name].ndim)}
+    else:
+        out = {name: _scatter_token(
+            cache[name], new.astype(cache[name].dtype), pos)}
+    return out
 
 
 def gqa_prefill(params, x, cfg, quant, positions, cache, chunk=512):
@@ -162,17 +231,16 @@ def gqa_prefill(params, x, cfg, quant, positions, cache, chunk=512):
     q, k, v = _gqa_qkv(params, x, cfg, quant, positions)
     out = chunked_causal_attention(q, k, v, chunk=chunk)
     out = out.reshape(b, s, nh * hd)
-    new_cache = {
-        "k": jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
-        "v": jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
-    }
+    new_cache = {**_kv_store(cache, "k", k), **_kv_store(cache, "v", v)}
     return qmatmul(params["wo"], out, quant, d, nh * hd), new_cache
 
 
 def gqa_decode(params, x, cfg, quant, cache, pos):
-    """x (b,1,d); pos (b,) current position; cache dict of (b,S,nkv,hd)."""
+    """x (b,1,d); pos (b,) current position; cache dict of (b,S,nkv,hd).
+
+    Positions may be ragged (one per sequence): the new KV scatters at each
+    sequence's own slot and the attention mask is already per-sequence.
+    """
     b, _, d = x.shape
     nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q = qmatmul(params["wq"], x, quant, nh * hd, d).reshape(b, 1, nh, hd)
@@ -180,17 +248,20 @@ def gqa_decode(params, x, cfg, quant, cache, pos):
     v = qmatmul(params["wv"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k = apply_rope(k, pos[:, None], cfg.rope_theta)
-    # scatter the new kv at position pos (uniform across batch -> use pos[0])
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, pos[0], 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, pos[0], 0, 0))
-    k_cache = shard(k_cache, "batch", "cache_seq", "kv_heads", "head_dim")
-    v_cache = shard(v_cache, "batch", "cache_seq", "kv_heads", "head_dim")
-    out = decode_attention(q, k_cache, v_cache, pos)
+    new_cache = {**_kv_store(cache, "k", k, pos),
+                 **_kv_store(cache, "v", v, pos)}
+    new_cache = {
+        kk: shard(vv, "batch", "cache_seq", "kv_heads", "head_dim"
+                  ) if vv.ndim == 4
+        else shard(vv, "batch", "cache_seq", "kv_heads")
+        for kk, vv in new_cache.items()
+    }
+    out = decode_attention(q, new_cache["k"], new_cache["v"], pos,
+                           k_scale=new_cache.get("k_scale"),
+                           v_scale=new_cache.get("v_scale"))
     out = out.reshape(b, 1, nh * hd)
     y = qmatmul(params["wo"], out, quant, d, nh * hd)
-    return y, {"k": k_cache, "v": v_cache}
+    return y, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -264,36 +335,52 @@ def mla_train(params, x, cfg, quant, positions, chunk=512):
 
 def mla_cache_init(cfg, batch, capacity, dtype=jnp.bfloat16):
     m = cfg.mla
-    return {
+    cache = {
         "c": P(jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
                ("batch", "cache_seq", "kv_lora")),
         "k_rope": P(jnp.zeros((batch, capacity, m.qk_rope_dim), dtype),
                     ("batch", "cache_seq", "rope_dim")),
     }
+    if cfg.kv_cache_dtype == "int8":
+        # quantize the compressed latent (the bulk of the MLA cache);
+        # k_rope is qk_rope_dim floats/token — not worth a scale per row
+        cache["c"] = P(
+            jnp.zeros((batch, capacity, m.kv_lora_rank), jnp.int8),
+            ("batch", "cache_seq", "kv_lora"))
+        cache["c_scale"] = P(jnp.zeros((batch, capacity), jnp.float32),
+                             ("batch", "cache_seq"))
+    return cache
 
 
 def mla_prefill(params, x, cfg, quant, positions, cache, chunk=512):
     y = mla_train(params, x, cfg, quant, positions, chunk=chunk)
     c, k_rope = _mla_latents(params, x, cfg, quant, positions)
-    new_cache = {
-        "c": jax.lax.dynamic_update_slice(
-            cache["c"], c.astype(cache["c"].dtype), (0, 0, 0)),
-        "k_rope": jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0)),
-    }
+    new_cache = {**_kv_store(cache, "c", c),
+                 **_kv_store(cache, "k_rope", k_rope)}
     return y, new_cache
 
 
 def mla_decode(params, x, cfg, quant, cache, pos):
-    """Absorbed-latent decode: cache is (c, k_rope) only."""
+    """Absorbed-latent decode: cache is (c, k_rope) only; pos may be ragged.
+
+    With an int8 latent cache the dequant happens right here at the two
+    latent einsums; as in :func:`decode_attention`, the footprint saving is
+    structural while the traffic saving depends on the dequant fusing into
+    the einsum reads (fused-kernel target: int8 codes + one f32 scale per
+    token).
+    """
     m, d, nh = cfg.mla, cfg.d_model, cfg.num_heads
     b = x.shape[0]
     q_nope, q_rope = _mla_q(params, x, cfg, quant, pos[:, None])
     c_new, k_rope_new = _mla_latents(params, x, cfg, quant, pos[:, None])
-    c_cache = jax.lax.dynamic_update_slice(
-        cache["c"], c_new.astype(cache["c"].dtype), (0, pos[0], 0))
-    r_cache = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos[0], 0))
+    new_cache = {**_kv_store(cache, "c", c_new, pos),
+                 **_kv_store(cache, "k_rope", k_rope_new, pos)}
+    r_cache = new_cache["k_rope"]
+    if "c_scale" in new_cache:
+        c_cache = kv_dequantize(new_cache["c"], new_cache["c_scale"],
+                                dtype=r_cache.dtype)
+    else:
+        c_cache = new_cache["c"]
     cap = c_cache.shape[1]
 
     # absorb k_up into q:  q_lat (b,1,nh,kv_lora)
@@ -313,7 +400,7 @@ def mla_decode(params, x, cfg, quant, cache, pos):
     out = f32_einsum("bthl,hvl->bthv", lat.astype(w_vup.dtype), w_vup)
     out = out.reshape(b, 1, nh * m.v_head_dim).astype(x.dtype)
     y = qmatmul(params["wo"], out, quant, d, nh * m.v_head_dim)
-    return y, {"c": c_cache, "k_rope": r_cache}
+    return y, new_cache
 
 
 def _dequant(ptree, cfg, quant, n, mdim):

@@ -30,6 +30,8 @@ __all__ = [
     "shard",
     "activation_rules",
     "stack_periods",
+    "kv_quantize",
+    "kv_dequantize",
 ]
 
 
@@ -121,6 +123,34 @@ def dense_init(key, shape, axes, dtype=jnp.bfloat16, scale=None):
         scale = 1.0 / jnp.sqrt(shape[-1])
     w = jax.random.normal(key, shape, jnp.float32) * scale
     return P(w.astype(dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV-cache storage (per-vector symmetric int8)
+# ---------------------------------------------------------------------------
+
+_KV_EPS = 1e-8  # all-zero vectors (cache padding) quantize to scale eps
+
+
+def kv_quantize(x, axis: int = -1):
+    """Symmetric int8 over ``axis``: returns (codes int8, scales f32).
+
+    The scale tensor drops ``axis`` (one f32 per quantized vector — for a
+    (b, s, nkv, hd) cache with axis=-1 that is per-token-per-head, the
+    'per-head scales' layout the decode roofline wants: hd int8 + 4 bytes
+    instead of hd bf16 per head-token).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _KV_EPS) / 127.0
+    codes = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return codes, jnp.squeeze(scale, axis=axis)
+
+
+def kv_dequantize(codes, scale, axis: int = -1, dtype=jnp.bfloat16):
+    """Inverse of :func:`kv_quantize` (codes ⊙ broadcast scales)."""
+    return (codes.astype(jnp.float32)
+            * jnp.expand_dims(scale, axis)).astype(dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,216 @@
+"""Decode fast path: on-device generation loop parity, quantized-KV
+numerics, decode-GEMV kernel backend parity, ragged positions, and
+autotune-table persistence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import QuantSpec, init_quantized_linear
+from repro.kernels import dispatch, ref
+from repro.kernels.dispatch import qmatmul
+from repro.kernels.lords_decode import lords_decode_pallas
+from repro.models import attention as attn
+from repro.models import split_tree
+
+
+def _cos(a, b):
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(a @ b / max(np.linalg.norm(a) * np.linalg.norm(b), 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# on-device generation loop vs legacy per-token host loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv", ["bf16", "int8"])
+def test_generate_scan_matches_host_loop(kv):
+    """Token-for-token parity: the single jitted lax.scan generation loop
+    must reproduce the eager per-token Python loop exactly (same params,
+    prompts, and greedy sampling; both loops share the KV-cache format)."""
+    from repro.launch.serve import serve_batch
+
+    cfg = smoke_variant(get_config("llama3-8b")).with_(num_layers=2)
+    kw = dict(batch=2, prompt_len=8, gen=6, seed=3, kv_cache=kv)
+    out_host = serve_batch(cfg, loop="host", **kw)
+    out_scan = serve_batch(cfg, loop="scan", **kw)
+    assert out_scan["tokens"].shape == (2, 6)
+    np.testing.assert_array_equal(out_scan["tokens"], out_host["tokens"])
+
+
+def test_generate_temperature_sampling_shape_and_determinism():
+    from repro.launch.serve import serve_batch
+
+    cfg = smoke_variant(get_config("llama3-8b")).with_(num_layers=2)
+    kw = dict(batch=2, prompt_len=8, gen=5, seed=1, temperature=0.8)
+    out_a = serve_batch(cfg, **kw)
+    out_b = serve_batch(cfg, **kw)
+    assert out_a["tokens"].shape == (2, 5)
+    # same PRNG seed => same sampled continuation
+    np.testing.assert_array_equal(out_a["tokens"], out_b["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# quantized KV cache numerics (int8 + per-head scales vs bf16 cache)
+# ---------------------------------------------------------------------------
+
+
+def _attn_setup(arch, kv, seed=0):
+    cfg = smoke_variant(get_config(arch)).with_(kv_cache_dtype=kv)
+    key = jax.random.PRNGKey(seed)
+    init = attn.mla_init if cfg.attn_kind == "mla" else attn.gqa_init
+    cache_init_fn = (attn.mla_cache_init if cfg.attn_kind == "mla"
+                     else attn.gqa_cache_init)
+    params, _ = split_tree(init(key, cfg, cfg.quant))
+    cache, _ = split_tree(cache_init_fn(cfg, 2, 12))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    return cfg, params, cache, x
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "minicpm3-4b"])
+def test_quantized_kv_decode_cosine(arch):
+    """gqa/mla decode through the int8 cache must track the bf16-cache
+    output to cosine > 0.999 (prefill fill + one decode step)."""
+    outs = {}
+    for kv in ("bf16", "int8"):
+        cfg, params, cache, x = _attn_setup(arch, kv)
+        pre = attn.mla_prefill if cfg.attn_kind == "mla" else attn.gqa_prefill
+        dec = attn.mla_decode if cfg.attn_kind == "mla" else attn.gqa_decode
+        positions = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None],
+                                     (2, 8))
+        _, cache = pre(params, x, cfg, cfg.quant, positions, cache)
+        xd = x[:, :1]
+        pos = jnp.full((2,), 8, jnp.int32)
+        y, _ = dec(params, xd, cfg, cfg.quant, cache, pos)
+        outs[kv] = np.asarray(y, np.float32)
+    assert _cos(outs["bf16"], outs["int8"]) > 0.999
+
+
+def test_int8_cache_structure_and_roundtrip():
+    from repro.models.common import kv_dequantize, kv_quantize
+
+    cfg = smoke_variant(get_config("llama3-8b")).with_(kv_cache_dtype="int8")
+    cache, _ = split_tree(attn.gqa_cache_init(cfg, 2, 6))
+    assert cache["k"].dtype == jnp.int8 and cache["v"].dtype == jnp.int8
+    assert cache["k_scale"].shape == cache["k"].shape[:3]
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 6, 4, 16))
+    codes, scale = kv_quantize(x)
+    back = kv_dequantize(codes, scale, dtype=jnp.float32)
+    assert _cos(x, back) > 0.9999  # per-vector int8: ~0.23% RMS error
+
+
+# ---------------------------------------------------------------------------
+# decode GEMV kernel: backend parity on non-aligned shapes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mtok,n,k", [(1, 130, 320), (3, 96, 160),
+                                      (8, 200, 96)])
+def test_decode_kernel_dispatch_parity_nonaligned(mtok, n, k):
+    """M <= 8 routes to lords_decode_pallas inside qmatmul; the padded
+    interpret run must match the ref oracle on off-tile shapes."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (n, k)) * 0.02
+    spec = QuantSpec(method="lords", block_size=32, rank=3,
+                     compute_dtype=jnp.float32)
+    params = init_quantized_linear(key, n, k, spec, w=w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (mtok, k))
+    y_ref = qmatmul(params, x, spec, n, k, backend="ref")
+    y_int = qmatmul(params, x, spec, n, k, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_kernel_direct_and_residual():
+    from repro.core import quantize, scaling
+
+    m, n, k = 4, 128, 256
+    kx, kw = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (n, k)) * 0.02
+    b, a = scaling.lords_init_from_weight(w, 128, rank=4)
+    s = scaling.scale_matrix(b, a)
+    qp = quantize.pack_codes(quantize.quantize_codes(w, s, "nf4"), "nf4")
+    y_ref = ref.lords_matmul_ref(x, qp, b, a, "nf4")
+    y = lords_decode_pallas(x, qp, b, a, "nf4", bn=64, bk=128,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=3e-5, atol=3e-5)
+    res = jax.random.normal(jax.random.PRNGKey(3), (m, n))
+    y_res = lords_decode_pallas(x, qp, b, a, "nf4", bn=64, bk=128,
+                                interpret=True, residual=res)
+    np.testing.assert_allclose(np.asarray(y_res), np.asarray(y_ref + res),
+                               rtol=3e-5, atol=3e-5)
+    with pytest.raises(ValueError):  # prefill-shaped M belongs elsewhere
+        lords_decode_pallas(jnp.zeros((16, k)), qp, b, a, "nf4",
+                            interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# ragged per-sequence decode positions
+# ---------------------------------------------------------------------------
+
+
+def test_gqa_decode_ragged_positions_match_per_sequence():
+    """A ragged batch (pos = [3, 6]) must equal running each sequence alone
+    — the old pos[0] scatter silently wrote every row at position 3."""
+    cfg, params, cache, x = _attn_setup("llama3-8b", "bf16", seed=5)
+    positions = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (2, 8))
+    _, cache = attn.gqa_prefill(params, x, cfg, cfg.quant, positions, cache)
+    xd = jax.random.normal(jax.random.PRNGKey(9), (2, 1, cfg.d_model),
+                           jnp.float32).astype(jnp.bfloat16)
+    pos = jnp.array([3, 6], jnp.int32)
+    y, new_cache = attn.gqa_decode(params, xd, cfg, cfg.quant, cache, pos)
+    for i in range(2):
+        ci = jax.tree.map(lambda v: v[i : i + 1], cache)
+        yi, ci2 = attn.gqa_decode(params, xd[i : i + 1], cfg, cfg.quant, ci,
+                                  pos[i : i + 1])
+        np.testing.assert_allclose(np.asarray(y[i], np.float32),
+                                   np.asarray(yi[0], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        np.testing.assert_array_equal(np.asarray(new_cache["k"][i]),
+                                      np.asarray(ci2["k"][0]))
+
+
+# ---------------------------------------------------------------------------
+# autotune-table persistence (REPRO_AUTOTUNE_CACHE)
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_table_persists_across_processes(tmp_path, monkeypatch):
+    path = str(tmp_path / "tiles.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    n, m = 96, 160
+    key = jax.random.PRNGKey(7)
+    spec = QuantSpec(method="lords", block_size=32, rank=3,
+                     compute_dtype=jnp.float32)
+    params = init_quantized_linear(key, n, m, spec,
+                                   w=jax.random.normal(key, (n, m)) * 0.02)
+    x = jax.random.normal(jax.random.PRNGKey(8), (5, m))
+    tiles, _ = dispatch.autotune_qmatmul(
+        params, x, spec, n, m, backend="interpret",
+        candidates=[(8, 128, 256)], iters=1)
+    assert tiles == (8, 128, 256) and os.path.exists(path)
+    akey = dispatch.autotune_key("lords", 5, n, m, spec.codebook,
+                                 spec.compute_dtype)
+    # simulate a fresh process: drop the entry, reload from disk
+    dispatch._AUTOTUNE.pop(akey)
+    assert dispatch.lookup_tiles("lords", 5, n, m, spec.codebook,
+                                 spec.compute_dtype) is None
+    assert dispatch.load_autotune_table() >= 1
+    assert dispatch.lookup_tiles("lords", 5, n, m, spec.codebook,
+                                 spec.compute_dtype) == tiles
+    dispatch._AUTOTUNE.pop(akey, None)  # don't leak tuned tiles to others
+
+
+def test_autotune_load_ignores_corrupt_cache(tmp_path, monkeypatch):
+    path = tmp_path / "bad.json"
+    path.write_text("{not json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    assert dispatch.load_autotune_table() == 0

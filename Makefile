@@ -3,16 +3,17 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-interpret bench bench-serve serve-smoke serve-smoke-interpret
+.PHONY: test test-interpret bench bench-serve bench-train serve-smoke \
+	serve-smoke-interpret train-smoke-interpret
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
 
 # every qmatmul forced through the Pallas interpreter: executes the fused
 # kernel bodies on CPU
-test-interpret:  ## kernel + dispatch suites in interpret mode
+test-interpret:  ## kernel + dispatch + train-bwd suites in interpret mode
 	REPRO_KERNEL_BACKEND=interpret $(PY) -m pytest -x -q \
-		tests/test_dispatch.py tests/test_kernels.py
+		tests/test_dispatch.py tests/test_kernels.py tests/test_train_bwd.py
 
 bench:           ## kernel-level fused-vs-oracle benchmark (Fig. 2 analogue)
 	$(PY) -m benchmarks.run kernels
@@ -30,3 +31,15 @@ serve-smoke-interpret:  ## serve smoke with fused kernels in interpret mode + in
 	$(PY) -m repro.launch.serve --arch llama3-8b --smoke \
 		--batch 2 --prompt-len 8 --gen 4 \
 		--kernel-backend interpret --kv-cache int8
+
+bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
+	$(PY) -m benchmarks.bench_train
+
+# training path through the Pallas interpreter: fused forward AND the fused
+# transposed/grad-reduction backward kernels execute on CPU inside jitted
+# train steps (both peft and qat STE modes)
+train-smoke-interpret:  ## 3-step train smoke, fused fwd+bwd in interpret mode (peft + qat)
+	$(PY) -m repro.launch.train --arch llama3-8b --smoke --steps 3 \
+		--seq-len 16 --global-batch 2 --kernel-backend interpret
+	$(PY) -m repro.launch.train --arch llama3-8b --smoke --steps 3 \
+		--seq-len 16 --global-batch 2 --mode qat --kernel-backend interpret

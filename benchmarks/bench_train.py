@@ -1,0 +1,224 @@
+"""Training benchmark — fused-backward fast path (QAT / PEFT).
+
+Measures full train steps (fused fwd **and** bwd through the kernel-dispatch
+custom VJPs) against the legacy dequantize-then-einsum backward, and derives
+the analytic backward roofline — HBM bytes the backward moves per step for
+the packed (fused) path vs the dense path that materializes Ŵ — then writes
+``BENCH_train.json``:
+
+    PYTHONPATH=src python -m benchmarks.bench_train [--arch llama3-8b]
+        [--seq-len 16] [--batch 2] [--steps 2] [--backend interpret]
+
+Also runnable via ``python -m benchmarks.run train`` or ``make bench-train``.
+CPU step times are plumbing (CI smoke), not speed — the roofline section is
+the hardware-independent content.  As a side effect the representative-layer
+backward autotune populates the transposed (``lords_t``) tile-table entries,
+persisted when ``REPRO_AUTOTUNE_CACHE`` is set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import benchmarks.common  # noqa: F401  (sets REPRO_CPU_EXEC before jax use)
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.core import peft
+from repro.core.quantize import codes_per_byte
+from repro.data import SyntheticLM, make_batch_iterator
+from repro.kernels import dispatch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_plan
+from repro.models import model_init, split_tree
+from repro.optim import adamw_init
+
+_BM = 128  # M-tile the analytic roofline assumes (kernel default)
+
+
+def _lords_linears(cfg) -> list[tuple[int, int, int]]:
+    """(n, k, r) of every LoRDS linear in the model, from abstract shapes."""
+    ptree = jax.eval_shape(
+        lambda k: model_init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    values, _ = split_tree(ptree)
+    leaves = jax.tree_util.tree_flatten_with_path(values)[0]
+    by_parent: dict[tuple, dict] = {}
+    for path, leaf in leaves:
+        name = str(getattr(path[-1], "key", "")) if path else ""
+        if name in ("b", "a"):
+            by_parent.setdefault(tuple(str(p) for p in path[:-1]), {})[name] = (
+                leaf.shape)
+    out = []
+    for shapes in by_parent.values():
+        if "b" in shapes and "a" in shapes:
+            # leading dims are layer-stack / expert-stack replicas
+            bsh, ash = shapes["b"], shapes["a"]
+            reps = 1
+            for d in bsh[:-2]:
+                reps *= d
+            out.extend([(bsh[-2], ash[-1], bsh[-1])] * reps)
+    return out
+
+
+def backward_bytes(cfg, tokens: int) -> dict:
+    """Analytic per-step backward HBM weight-side traffic (bytes).
+
+    fused: the transposed-matmul kernel streams packed codes + (B, A) once
+    per ``_BM``-token M-tile; the grad-reduction kernel streams them once
+    total (its M axis is the innermost reduction).  QAT additionally reads
+    the f32 master W (for the Eq. 5 residual) and writes dW — parameter
+    traffic that exists on every path.
+
+    dense: dequantizes once, then materializes the (N, K) f32 temporaries
+    the old backward built — lut[Q] values, Ŵ, and ∂S — each written and
+    read back once (6·4·N·K bytes of pure temporary traffic on top of the
+    packed reads).  ``peak_temp_bytes`` is the largest concurrently-live
+    (N, K) f32 temporary footprint: Ŵ + ∂S for dense, the (N/bn)·r·K
+    partial-dA accumulator for fused (~r/bn of one weight matrix).
+    """
+    pack = codes_per_byte(cfg.quant.codebook)
+    mtiles = -(-tokens // _BM)
+    mode = cfg.quant.mode
+    fused = dense = fused_peak = dense_peak = 0
+    for n, k, r in _lords_linears(cfg):
+        q_b = n * k // pack
+        ba_b = 4 * (n * r + r * k)
+        w_b = 4 * n * k
+        fused += (mtiles + 1) * (q_b + ba_b)
+        dense += q_b + ba_b + 6 * w_b
+        fused_peak = max(fused_peak, 4 * (-(-n // 256)) * r * k)
+        dense_peak = max(dense_peak, 2 * w_b)
+        if mode == "qat":
+            fused += 2 * w_b          # master-W read + dW write (param grad)
+            dense += 4 * w_b          # same + the resid (N,K) temporary
+    return {"fused": fused, "dense": dense,
+            "fused_peak_temp": fused_peak, "dense_peak_temp": dense_peak}
+
+
+def _time_train_steps(cfg, shape, backend: str, steps: int) -> dict:
+    """Jit one train step via build_plan and time it (post-compile)."""
+    mesh = make_host_mesh()
+    plan = build_plan(cfg, mesh, shape, kernel_backend=backend)
+    key = jax.random.PRNGKey(0)
+    values, _ = split_tree(model_init(key, cfg))
+    trainable, frozen = peft.partition(values, cfg.quant)
+    opt = adamw_init(trainable)
+    source = SyntheticLM(cfg.vocab_size, shape.seq_len, shape.global_batch,
+                         seed=0)
+    it = make_batch_iterator(source, 0)
+    with mesh:
+        step_jit = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                           out_shardings=plan.out_shardings,
+                           donate_argnums=plan.donate_argnums)
+        _, batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        trainable, opt, metrics = step_jit(trainable, frozen, opt, batch)
+        jax.block_until_ready(metrics["loss"])  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            _, batch = next(it)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            trainable, opt, metrics = step_jit(trainable, frozen, opt, batch)
+            jax.block_until_ready(metrics["loss"])
+        dt = (time.perf_counter() - t0) / steps
+    tokens = shape.global_batch * shape.seq_len
+    return {"step_ms": round(dt * 1e3, 3),
+            "tokens_per_s": round(tokens / dt, 3),
+            "loss": round(float(metrics["loss"]), 4)}
+
+
+def _autotune_transposed(cfg, backend: str) -> tuple | None:
+    """Populate (and persist, via REPRO_AUTOTUNE_CACHE) a representative
+    transposed-kernel tile entry through the backward autotuner, timed on
+    the same fused backend the benchmark runs.  Autotune keys carry no
+    platform dimension, so interpreter-timed entries are placeholders that
+    exercise the persistence wiring (what CI asserts) — don't point a TPU
+    run's cache file at one produced on CPU; re-running this benchmark
+    with ``--backend pallas`` on the TPU overwrites them with real
+    timings."""
+    n, k, _ = max(_lords_linears(cfg), key=lambda s: s[0] * s[1])
+    key = jax.random.PRNGKey(0)
+    from repro.core import init_quantized_linear
+
+    spec = cfg.quant.with_(mode="peft", compute_dtype=jnp.float32)
+    params = init_quantized_linear(key, n, k, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, k))
+    candidates = ([(8, 128, 256), (8, 128, 512)] if backend == "interpret"
+                  else None)  # pallas: the full default candidate set
+    best, _ = dispatch.autotune_qmatmul_bwd(
+        params, x, spec, n, k, backend=backend,
+        candidates=candidates, iters=1 if backend == "interpret" else 3)
+    return best
+
+
+def bench(arch: str = "llama3-8b", *, smoke: bool = True, seq_len: int = 16,
+          batch: int = 2, steps: int = 2,
+          backend: str | None = None) -> dict:
+    cfg = get_config(arch)
+    if smoke:
+        cfg = smoke_variant(cfg)
+    shape = ShapeCfg("bench", seq_len, batch, "train")
+    tokens = batch * seq_len
+    fused_backend = backend or "interpret"
+    runs: dict = {}
+    roofline: dict = {}
+    for mode in ("peft", "qat"):
+        mcfg = cfg.with_(quant=cfg.quant.with_(mode=mode))
+        runs[mode] = {
+            "fused": _time_train_steps(mcfg, shape, fused_backend, steps),
+            "dequant": _time_train_steps(mcfg, shape, "dense", steps),
+        }
+        roofline[mode] = backward_bytes(mcfg, tokens)
+    best = _autotune_transposed(cfg, fused_backend)
+    return {
+        "arch": cfg.name, "smoke": smoke, "seq_len": seq_len, "batch": batch,
+        "steps": steps, "fused_backend": fused_backend,
+        "bwd_weight_bytes": roofline, "runs": runs,
+        "autotuned_transposed_tiles": list(best) if best else None,
+    }
+
+
+def run(report):
+    """benchmarks.run entry point: smoke-scale train + BENCH_train.json."""
+    rec = bench()
+    for mode, r in rec["runs"].items():
+        for kind, t in r.items():
+            report(f"train/step/{mode}_{kind}", t["step_ms"] * 1e3,
+                   f"step_ms={t['step_ms']} tokens_per_s={t['tokens_per_s']}")
+        rl = rec["bwd_weight_bytes"][mode]
+        report(f"train/bwd_bytes/{mode}", float(rl["fused"]),
+               f"dense={rl['dense']} ratio={rl['dense'] / rl['fused']:.2f}")
+    with open("BENCH_train.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    report("train/json", 0.0, "wrote BENCH_train.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (non-smoke) config")
+    ap.add_argument("--seq-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--backend", default=None,
+                    choices=["pallas", "interpret"],
+                    help="fused backend to time against the dense baseline")
+    ap.add_argument("--out", default="BENCH_train.json")
+    args = ap.parse_args(argv)
+    rec = bench(args.arch, smoke=not args.full, seq_len=args.seq_len,
+                batch=args.batch, steps=args.steps, backend=args.backend)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec["runs"], indent=1))
+    for mode, rl in rec["bwd_weight_bytes"].items():
+        print(f"[bench_train] {mode}: bwd bytes fused={rl['fused']} "
+              f"dense={rl['dense']} ({rl['dense'] / rl['fused']:.2f}x); "
+              f"peak temp fused={rl['fused_peak_temp']} "
+              f"dense={rl['dense_peak_temp']} -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
   error_ratio  Table 8  — per-module error reduction (incl. LoRDS†)
   serve        §4.4     — decode fast path (prefill ms, decode tok/s,
                           bytes/token roofline) -> BENCH_serve.json
+  train        §3.3/3.4 — training fast path (fused vs dequant backward:
+                          step ms, tokens/s, bwd bytes) -> BENCH_train.json
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ import sys
 import time
 
 TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
-          "error_ratio", "serve"]
+          "error_ratio", "serve", "train"]
 
 
 def main() -> None:

@@ -8,14 +8,34 @@ frozen uint8 codes.
 ``partition(params, quant)`` -> (trainable, frozen) trees with ``None`` holes;
 ``combine(trainable, frozen)`` re-assembles.  Holes keep tree structure
 identical, so pytree transforms (grads, optimizer states) map 1:1.
+
+``scale_grads`` is the single source of the multiplicative-PEFT chain rule
+through ``S = B·A``: the dense backward, the ref backward oracle
+(:func:`repro.kernels.ref.lords_grads_ref`), and the fused Pallas grad
+kernel (:mod:`repro.kernels.lords_grad`, which applies the same
+contractions tile-by-tile) all implement it.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.lords import QuantSpec
 
-__all__ = ["partition", "combine", "trainable_leaf"]
+__all__ = ["partition", "combine", "trainable_leaf", "scale_grads"]
+
+
+def scale_grads(ds, b, a):
+    """Chain rule of the low-rank scale ``S = B·A`` (paper §3.4).
+
+    ``ds`` is the scale-space cotangent ∂L/∂S (N, K), clamp mask already
+    applied.  Returns ``(∇B, ∇A) = (∂L/∂S · Aᵀ, Bᵀ · ∂L/∂S)`` in f32 —
+    callers cast to storage dtypes.
+    """
+    ds = ds.astype(jnp.float32)
+    db = ds @ a.astype(jnp.float32).T
+    da = b.astype(jnp.float32).T @ ds
+    return db, da
 
 # keys that belong to quantized-linear leaves
 _QUANT_KEYS = {"q", "b", "a", "s_blk", "w", "lora_b", "lora_a", "bias", "awq_s"}

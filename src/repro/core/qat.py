@@ -5,9 +5,12 @@ Paper §3.3:  ``Ŵ = ROUND(W ⊘ (BA)) ⊙ (BA)`` with STE gradients
     ∇_W L ≈ ∂L/∂Ŵ                      (Eq. 4)
     ∇_S L ≈ ∂L/∂Ŵ ⊙ (Q − W ⊘ S)       (Eq. 5), S = BA
 
-The custom_vjp below exposes exactly these two cotangents; the chain rule
-through ``S = B @ A`` (∇_B = ∇_S Aᵀ, ∇_A = Bᵀ ∇_S) is left to JAX autodiff by
-computing S outside the custom_vjp boundary.
+``ste_cotangents`` is the single source of the Eq. 4/5 rule: the
+``fake_quant_ste`` custom_vjp (dense path — chain rule through ``S = B @ A``
+left to autodiff by computing S outside the boundary), the fused-backward
+ref oracle (:func:`repro.kernels.ref.lords_grads_ref`), and the Pallas grad
+kernel (:mod:`repro.kernels.lords_grad`, which applies the same terms
+tile-by-tile) all implement it.
 """
 from __future__ import annotations
 
@@ -20,7 +23,18 @@ from repro.core import lut
 from repro.core.quantize import quantize_codes
 from repro.core.scaling import SCALE_EPS
 
-__all__ = ["fake_quant_ste"]
+__all__ = ["fake_quant_ste", "ste_cotangents"]
+
+
+def ste_cotangents(dw_hat, resid):
+    """Paper Eq. 4/5 from the weight-space cotangent ``∂L/∂Ŵ``.
+
+    Returns ``(∇W, ∇S) = (∂L/∂Ŵ, ∂L/∂Ŵ ⊙ (Q − W⊘S))`` — ``resid`` is the
+    fake-quant residual Q − W ⊘ S.  Callers apply their own clamp mask /
+    dtype casts; keeping the rule here means the dense STE path, the ref
+    backward oracle, and the fused grad kernel can never drift apart.
+    """
+    return dw_hat, dw_hat * resid
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -47,9 +61,8 @@ def _fwd(codebook_name, w, s):
 
 def _bwd(codebook_name, residuals, g):
     resid, (w_proto, s_proto) = residuals
-    dw = g.astype(w_proto.dtype)            # Eq. 4 (STE identity)
-    ds = (g * resid).astype(s_proto.dtype)  # Eq. 5
-    return dw, ds
+    dw, ds = ste_cotangents(g, resid)
+    return dw.astype(w_proto.dtype), ds.astype(s_proto.dtype)
 
 
 fake_quant_ste.defvjp(_fwd, _bwd)

@@ -23,11 +23,21 @@ __all__ = [
     "svd_init",
     "lords_init_from_weight",
     "scale_matrix",
+    "clamp_scale",
     "SCALE_EPS",
 ]
 
 # Scales must stay away from zero: the quantization step divides by S.
 SCALE_EPS = 1e-8
+
+
+def clamp_scale(s: jnp.ndarray, eps: float = SCALE_EPS) -> jnp.ndarray:
+    """|S| >= eps, sign-preserving — THE clamp rule, shared by every Pallas
+    kernel body, the ref oracles, and :func:`scale_matrix`.  The backward
+    mask is its boundary (``|S| >= eps``); keeping both rules in one module
+    is what guarantees forward/backward consistency."""
+    sign = jnp.where(s >= 0, 1.0, -1.0).astype(s.dtype)
+    return jnp.where(jnp.abs(s) < eps, sign * eps, s)
 
 
 def parity_rank(n: int, m: int, block_size: int, extra_rank: int = 0) -> int:
@@ -87,6 +97,4 @@ def lords_init_from_weight(
 
 def scale_matrix(b: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
     """S = B·A, clamped away from zero (sign-preserving)."""
-    s = b @ a
-    sign = jnp.where(s >= 0, 1.0, -1.0).astype(s.dtype)
-    return jnp.where(jnp.abs(s) < SCALE_EPS, sign * SCALE_EPS, s)
+    return clamp_scale(b @ a)

@@ -1,4 +1,6 @@
-# Fused dequant-matmul kernels (lords_matmul, block_matmul, lut_quantize),
+# Fused dequant-matmul kernels — forward (lords_matmul, lords_decode,
+# block_matmul, lut_quantize) and backward (lords_matmul_t: transposed
+# dequant-matmul for dx; lords_grad: tiled grad reductions for dB/dA/dW) —
 # their pure-jnp oracles (ref), thin platform wrappers (ops), and the
 # QuantSpec-aware dispatch layer every quantized linear routes through
 # (dispatch.qmatmul).  Import dispatch lazily from repro.core to keep the

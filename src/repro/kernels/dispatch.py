@@ -31,7 +31,18 @@ Differentiability: fused lords forwards carry ``jax.custom_vjp``s —
 ``peft`` mode backpropagates to (B, A) through the multiplicative scale
 (the clamp-masked ∂S rule autodiff would produce on the dense path), and
 ``qat`` mode implements the paper's STE cotangents (Eq. 4/5: ∇W = ∂L/∂Ŵ,
-∇S = ∂L/∂Ŵ ⊙ (Q − W⊘S)) so training never materializes Ŵ in the forward.
+∇S = ∂L/∂Ŵ ⊙ (Q − W⊘S)).  On the fused backends the *backward* is fused
+too: dx runs the transposed dequant-matmul kernel
+(:mod:`repro.kernels.lords_matmul_t`) and the parameter gradients the
+tiled grad-reduction kernel (:mod:`repro.kernels.lords_grad`), so neither
+the forward nor the backward ever materializes an (N, K) f32 Ŵ (or ∂S)
+temporary — training costs packed-weight bandwidth, not dense bandwidth.
+On ``ref``/``dense`` backends the backward runs the single dense-math
+oracle :func:`repro.kernels.ref.lords_grads_ref` (one dequant, shared
+Eq. 4/5 / chain-rule helpers from ``core.qat`` / ``core.peft``).
+Backward tile choices use the *transposed* autotune keys (``lords_t`` /
+``blockwise_t``, tuned by ``autotune_qmatmul_bwd``); the ``tiles=``
+argument only pins the forward.
 
 Decode fast path: fused lords forwards with M ≤ 8 flattened tokens route to
 the weight-stationary GEMV kernel (:mod:`repro.kernels.lords_decode`) —
@@ -61,11 +72,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lut as lut_mod
 from repro.kernels import ref
 from repro.kernels.block_matmul import block_matmul_pallas
 from repro.kernels.lords_decode import DECODE_M_MAX, lords_decode_pallas
+from repro.kernels.lords_grad import block_grad_pallas, lords_grad_pallas
 from repro.kernels.lords_matmul import lords_matmul_pallas
+from repro.kernels.lords_matmul_t import (
+    block_matmul_t_pallas,
+    lords_matmul_t_pallas,
+)
 from repro.kernels.lut_quantize import lut_quantize_pallas
 
 __all__ = [
@@ -77,6 +92,7 @@ __all__ = [
     "lookup_tiles",
     "register_tiles",
     "autotune_qmatmul",
+    "autotune_qmatmul_bwd",
     "autotune_table",
     "load_autotune_table",
     "save_autotune_table",
@@ -318,19 +334,39 @@ def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
     return y[:m, :n]
 
 
-def _lords_dequant_f32(q_packed, b, a, codebook):
-    """Backward-path Ŵ (f32) + the clamp mask ∂S needs. Never runs forward."""
-    from repro.core.quantize import unpack_codes
-    from repro.core.scaling import SCALE_EPS
-
-    codes = unpack_codes(q_packed, codebook)
-    levels = lut_mod.codebook(codebook)
-    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
-    s_raw = b.astype(jnp.float32) @ a.astype(jnp.float32)
-    mask = (jnp.abs(s_raw) >= SCALE_EPS).astype(jnp.float32)
-    sign = jnp.where(s_raw >= 0, 1.0, -1.0)
-    s = jnp.where(mask == 1.0, s_raw, sign * SCALE_EPS)
-    return vals, s, mask
+def _lords_grads(g, x2d, q_packed, b, a, w, codebook, backend):
+    """Fused backward family: dx = g·Ŵ via the transposed kernel, rank-space
+    dB/dA (and the QAT dW/∂S STE terms) via the tiled grad-reduction kernel
+    — no (N, K) f32 dequantized temporary on fused backends.  Returns
+    ``(dx, db, da)`` in f32 (+ ``dw`` when the qat master ``w`` is given).
+    """
+    if backend not in _FUSED:
+        return ref.lords_grads_ref(g, x2d, q_packed, b, a, codebook, w=w)
+    m, k = x2d.shape
+    n = q_packed.shape[0]
+    pack = _pack_of(codebook)
+    # the `transposed` autotune key: one tile triple drives both bwd kernels
+    bm, bn, bk = tile_for("lords_t", m, n, k, codebook, jnp.float32)
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    interp = backend == "interpret"
+    g32 = _pad2(g.astype(jnp.float32), mp, np_)
+    x32 = _pad2(x2d.astype(jnp.float32), mp, kp)
+    qp = _pad2(q_packed, np_, kp // pack)
+    bp = _pad2(b.astype(jnp.float32), np_, b.shape[1])
+    ap = _pad2(a.astype(jnp.float32), a.shape[0], kp)
+    dx = lords_matmul_t_pallas(
+        g32, qp, bp, ap, codebook, bm=bm, bn=bn, bk=bk, interpret=interp,
+    )[:m, :k]
+    wp = None if w is None else _pad2(w.astype(jnp.float32), np_, kp)
+    out = lords_grad_pallas(
+        x32, g32, qp, bp, ap, codebook, w=wp,
+        bm=bm, bn=bn, bk=bk, interpret=interp,
+    )
+    db = out[0][:, :n].T                       # dbT (r, Np) -> dB (N, r)
+    da = out[1].sum(axis=0)[:, :k]             # Σ_j da_part -> dA (r, K)
+    if w is None:
+        return dx, db, da
+    return dx, db, da, out[2][:n, :k]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
@@ -345,16 +381,9 @@ def _lords_fwd(x2d, q_packed, b, a, codebook, backend, tiles):
 
 def _lords_bwd(codebook, backend, tiles, res, g):
     x2d, q_packed, b, a = res
-    vals, s, mask = _lords_dequant_f32(q_packed, b, a, codebook)
-    g32 = g.astype(jnp.float32)
-    x32 = x2d.astype(jnp.float32)
-    w_hat = vals * s                                   # (N, K) f32
-    dx = (g32 @ w_hat).astype(x2d.dtype)
-    ds = (g32.T @ x32) * vals * mask                   # ∂L/∂S, clamp-masked
-    db = (ds @ a.astype(jnp.float32).T).astype(b.dtype)
-    da = (b.astype(jnp.float32).T @ ds).astype(a.dtype)
+    dx, db, da = _lords_grads(g, x2d, q_packed, b, a, None, codebook, backend)
     dq = np.zeros(q_packed.shape, jax.dtypes.float0)   # int codes: no grad
-    return dx, dq, db, da
+    return (dx.astype(x2d.dtype), dq, db.astype(b.dtype), da.astype(a.dtype))
 
 
 _lords_qmatmul.defvjp(_lords_fwd, _lords_bwd)
@@ -401,19 +430,13 @@ def _lords_qat_fwd(x2d, w, b, a, codebook, backend, tiles):
 
 
 def _lords_qat_bwd(codebook, backend, tiles, res, g):
+    # the packed codes saved by the forward feed the backward kernels
+    # directly — no second quantization or dequantization pass
     x2d, w, b, a, q_packed = res
-    vals, s, mask = _lords_dequant_f32(q_packed, b, a, codebook)
-    g32 = g.astype(jnp.float32)
-    x32 = x2d.astype(jnp.float32)
-    w_hat = vals * s
-    dx = (g32 @ w_hat).astype(x2d.dtype)
-    dw_hat = g32.T @ x32                               # ∂L/∂Ŵ  (N, K)
-    dw = dw_hat.astype(w.dtype)                        # Eq. 4 (STE identity)
-    resid = vals - w.astype(jnp.float32) / s           # Q − W ⊘ S
-    ds = dw_hat * resid * mask                         # Eq. 5, clamp-masked
-    db = (ds @ a.astype(jnp.float32).T).astype(b.dtype)
-    da = (b.astype(jnp.float32).T @ ds).astype(a.dtype)
-    return dx, dw, db, da
+    dx, db, da, dw = _lords_grads(g, x2d, q_packed, b, a, w, codebook,
+                                  backend)
+    return (dx.astype(x2d.dtype), dw.astype(w.dtype),
+            db.astype(b.dtype), da.astype(a.dtype))
 
 
 _lords_qat_qmatmul.defvjp(_lords_qat_fwd, _lords_qat_bwd)
@@ -424,6 +447,22 @@ _lords_qat_qmatmul.defvjp(_lords_qat_fwd, _lords_qat_bwd)
 # ---------------------------------------------------------------------------
 
 
+def _block_padded(q_packed, s_blk, m, n, k, block_size, bm, bn, bk, pack):
+    """Shared fwd/bwd block-operand padding: K rounds to lcm(bk, block_size)
+    so tiles and blocks stay commensurate, padded scales are 1.0 (never the
+    eps clamp), padded rows/cols contribute zeros.  One helper so the
+    forward and its VJP can never pad differently."""
+    kmult = bk * block_size // math.gcd(bk, block_size)  # lcm: tiles + blocks
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, kmult)
+    qp = _pad2(q_packed, np_, kp // pack)
+    s_pad = jnp.pad(
+        s_blk,
+        ((0, np_ - n), (0, kp // block_size - s_blk.shape[1])),
+        constant_values=1.0,
+    )
+    return qp, s_pad, mp, np_, kp
+
+
 def _block_forward(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
     if backend == "ref":
         return ref.block_matmul_ref(x2d, q_packed, s_blk, block_size, codebook)
@@ -432,16 +471,11 @@ def _block_forward(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
     pack = _pack_of(codebook)
     bm, bn, bk = tiles or tile_for(
         "blockwise", m, n, k, codebook, x2d.dtype, block_size=block_size)
-    kmult = bk * block_size // math.gcd(bk, block_size)  # lcm: tiles + blocks
-    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, kmult)
-    s_pad = jnp.pad(
-        s_blk,
-        ((0, np_ - n), (0, kp // block_size - s_blk.shape[1])),
-        constant_values=1.0,
-    )
+    qp, s_pad, mp, np_, kp = _block_padded(
+        q_packed, s_blk, m, n, k, block_size, bm, bn, bk, pack)
     y = block_matmul_pallas(
         _pad2(x2d, mp, kp),
-        _pad2(q_packed, np_, kp // pack),
+        qp,
         s_pad,
         block_size,
         codebook,
@@ -463,21 +497,40 @@ def _block_fwd(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
     return y, (x2d, q_packed, s_blk)
 
 
-def _block_bwd(block_size, codebook, backend, tiles, res, g):
-    from repro.core.quantize import unpack_codes
-    from repro.core.scaling import expand_block_scales
+def _block_grads(g, x2d, q_packed, s_blk, block_size, codebook, backend):
+    """Fused block-wise backward: transposed dequant-matmul for dx + tiled
+    per-block ∂s reduction — the blockwise mirror of :func:`_lords_grads`."""
+    if backend not in _FUSED:
+        return ref.block_grads_ref(g, x2d, q_packed, s_blk, block_size,
+                                   codebook)
+    m, k = x2d.shape
+    n = q_packed.shape[0]
+    pack = _pack_of(codebook)
+    bm, bn, bk = tile_for("blockwise_t", m, n, k, codebook, jnp.float32,
+                          block_size=block_size)
+    qp, s_pad, mp, np_, kp = _block_padded(
+        q_packed, s_blk.astype(jnp.float32), m, n, k, block_size,
+        bm, bn, bk, pack)
+    interp = backend == "interpret"
+    g32 = _pad2(g.astype(jnp.float32), mp, np_)
+    x32 = _pad2(x2d.astype(jnp.float32), mp, kp)
+    dx = block_matmul_t_pallas(
+        g32, qp, s_pad, block_size, codebook,
+        bm=bm, bn=bn, bk=bk, interpret=interp,
+    )[:m, :k]
+    ds_blk = block_grad_pallas(
+        x32, g32, qp, block_size, codebook,
+        bm=bm, bn=bn, bk=bk, interpret=interp,
+    )[:n, : s_blk.shape[1]]
+    return dx, ds_blk
 
+
+def _block_bwd(block_size, codebook, backend, tiles, res, g):
     x2d, q_packed, s_blk = res
-    codes = unpack_codes(q_packed, codebook)
-    vals = jnp.take(lut_mod.codebook(codebook), codes.astype(jnp.int32), axis=0)
-    s = expand_block_scales(s_blk.astype(jnp.float32), block_size)
-    g32 = g.astype(jnp.float32)
-    dx = (g32 @ (vals * s)).astype(x2d.dtype)
-    ds_full = (g32.T @ x2d.astype(jnp.float32)) * vals
-    n = s_blk.shape[0]
-    ds_blk = ds_full.reshape(n, s_blk.shape[1], block_size).sum(-1)
+    dx, ds_blk = _block_grads(g, x2d, q_packed, s_blk, block_size, codebook,
+                              backend)
     dq = np.zeros(q_packed.shape, jax.dtypes.float0)
-    return dx, dq, ds_blk.astype(s_blk.dtype)
+    return dx.astype(x2d.dtype), dq, ds_blk.astype(s_blk.dtype)
 
 
 _block_qmatmul.defvjp(_block_fwd, _block_bwd)
@@ -618,4 +671,75 @@ def autotune_qmatmul(params, x, spec, n, m, *, backend=None,
     register_tiles(method, mdim, n, kdim, spec.codebook, key_dtype, best,
                    block_size=bs)
     save_autotune_table()  # no-op unless REPRO_AUTOTUNE_CACHE is set
+    return best, timings
+
+
+def _diff_keys(spec) -> tuple[str, ...]:
+    """Param keys that receive gradients through the fused VJPs."""
+    if spec.method == "lords":
+        return ("w", "b", "a") if spec.mode == "qat" else ("b", "a")
+    return ("s_blk",)
+
+
+def autotune_qmatmul_bwd(params, x, spec, n, m, *, backend=None,
+                         candidates=None, iters: int = 3):
+    """Tune the fused *backward* kernels (transposed matmul + grad
+    reduction) by timing ``jax.grad`` through :func:`qmatmul` with each
+    candidate registered under the transposed key (``lords_t`` /
+    ``blockwise_t``), then register the winner.  Entries persist through
+    the same ``REPRO_AUTOTUNE_CACHE`` file as forward tiles.
+
+    Returns ``(best_tiles, {tiles: seconds})``; ``(None, {})`` when the
+    spec has no fused path or the backend isn't fused.
+    """
+    backend = _resolve(backend)
+    if backend not in _FUSED or not _fused_supported(params, spec):
+        return None, {}
+    method = "lords_t" if spec.method == "lords" else "blockwise_t"
+    kdim = x.shape[-1]
+    mdim = int(np.prod(x.shape[:-1]))
+    bs = None
+    if method == "blockwise_t":
+        bs = _block_operands(params, m)[2]
+    keys = _diff_keys(spec)
+    operands = tuple(params[kk] for kk in keys)
+    key_dtype = jnp.float32  # backward kernels always accumulate in f32
+    # candidates are staged into the live table; remember any pre-existing
+    # entry (cache-loaded or previously tuned) so total failure restores it
+    prev = lookup_tiles(method, mdim, n, kdim, spec.codebook, key_dtype, bs)
+
+    def loss(t, xx):
+        p = dict(params, **dict(zip(keys, t)))
+        return jnp.sum(qmatmul(p, xx, spec, n, m, backend=backend) ** 2)
+
+    timings: dict[tuple, float] = {}
+    for cand in candidates or _DEFAULT_CANDIDATES:
+        bm, bn, bk = cand
+        if bs is not None and bk % bs and bs % bk:
+            continue
+        # the bwd consults the table at trace time: stage the candidate,
+        # trace, and drop it again if the kernels reject the tiling
+        register_tiles(method, mdim, n, kdim, spec.codebook, key_dtype, cand,
+                       block_size=bs)
+        fn = jax.jit(jax.grad(loss, argnums=(0, 1)))
+        try:
+            jax.block_until_ready(fn(operands, x))
+        except (ValueError, jax.errors.JaxRuntimeError):
+            _AUTOTUNE.pop(
+                autotune_key(method, mdim, n, kdim, spec.codebook, key_dtype,
+                             bs), None)
+            continue
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(operands, x))
+        timings[cand] = (time.perf_counter() - t0) / iters
+    if not timings:
+        if prev is not None:
+            register_tiles(method, mdim, n, kdim, spec.codebook, key_dtype,
+                           prev, block_size=bs)
+        return None, {}
+    best = min(timings, key=timings.get)
+    register_tiles(method, mdim, n, kdim, spec.codebook, key_dtype, best,
+                   block_size=bs)
+    save_autotune_table()
     return best, timings

@@ -1,0 +1,287 @@
+"""Fused LoRDS gradient-reduction Pallas kernels (training backward).
+
+Given upstream gradient ``g[M, N]`` and activations ``x[M, K]``, the LoRDS
+parameter gradients all factor through the weight-space cotangent
+
+    ∂L/∂Ŵ = gᵀ·x                                    (N, K)
+
+which the dense backward used to materialize in f32 alongside a second
+dequantized Ŵ.  These kernels instead accumulate ∂L/∂Ŵ *tile by tile* in a
+VMEM scratch (never HBM) and collapse it straight into the small outputs:
+
+  frozen / peft (multiplicative PEFT, paper §3.4):
+      ∂S = ∂L/∂Ŵ ⊙ lut[Q] ⊙ 1[|S| ≥ eps]            clamp mask in-kernel
+      dB = ∂S·Aᵀ   (N, r)      dA = Bᵀ·∂S   (r, K)
+
+  qat (STE, paper Eq. 4/5):
+      dW = ∂L/∂Ŵ                                     Eq. 4 (identity)
+      ∂S = ∂L/∂Ŵ ⊙ (lut[Q] − W ⊘ S) ⊙ 1[|S| ≥ eps]  Eq. 5
+      dB / dA as above
+
+Tiling:  grid = (N/bn, K/bk, M/bm), M innermost (the ∂L/∂Ŵ reduction).
+Per (j, k) tile the scratch ``acc`` (bn, bk) f32 accumulates gᵀ·x over the
+M axis; at the last M step the tile is dequant-masked and contracted on the
+MXU into the rank-space outputs.  The q/bT/a (and W for qat) tiles have
+M-independent index maps, so Pallas fetches each exactly once per (j, k) —
+codes stream from HBM once per call.
+
+Outputs (f32, padded shapes — callers slice):
+  dbT     (r, N)             B-gradient, transposed so the rank dim sits in
+                             sublanes; resident in VMEM for a whole j row
+                             (its index map is constant across k and m)
+  da_part (N/bn, r, K)       per-N-tile partial A-gradients — summed over
+                             axis 0 by the caller (a (N/bn)·r·K f32 array,
+                             ~r/bn of one weight matrix: negligible)
+  dW      (N, K) [qat only]  the master-weight gradient itself (a parameter
+                             gradient the optimizer owns — not a temporary)
+
+``block_grad_pallas`` is the block-wise analogue: ∂s_blk = per-block sums of
+∂L/∂Ŵ ⊙ lut[Q], with the same scratch-accumulation structure (no clamp mask
+— block scales are absmax-initialized away from zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import lut as lut_mod
+from repro.core import quantize as quantize_mod
+from repro.core.scaling import clamp_scale
+from repro.kernels.lords_matmul import _lut_select, _unpack_tile
+
+__all__ = ["lords_grad_pallas", "block_grad_pallas"]
+
+
+def _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
+          dap_ref, dw_ref, acc_ref, *, pack, n_levels, eps):
+    k, m = pl.program_id(1), pl.program_id(2)
+    nm = pl.num_programs(2)
+
+    @pl.when(m == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(k == 0, m == 0))
+    def _zero_dbt():  # dbT tile is resident across the whole (k, m) sweep
+        dbt_ref[...] = jnp.zeros_like(dbt_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...], x_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                          # ∂L/∂Ŵ (bn, bk)
+
+    @pl.when(m == nm - 1)
+    def _reduce():
+        codes = _unpack_tile(q_ref[...], pack)
+        vals = _lut_select(codes, lut_ref, n_levels)           # (bn, bk) f32
+        s_raw = jax.lax.dot_general(
+            bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        mask = (jnp.abs(s_raw) >= eps).astype(jnp.float32)
+        dw_hat = acc_ref[...]
+        if w_ref is None:                                      # frozen / peft
+            ds = dw_hat * vals * mask
+        else:                                                  # qat STE
+            s = clamp_scale(s_raw, eps)
+            resid = vals - w_ref[...].astype(jnp.float32) / s  # Q − W ⊘ S
+            ds = dw_hat * resid * mask                         # Eq. 5
+            dw_ref[...] = dw_hat                               # Eq. 4
+        # rank-space contractions: dBᵀ = A·∂Sᵀ, dA-partial = Bᵀ·∂S
+        dbt_ref[...] += jax.lax.dot_general(
+            a_ref[...], ds, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                      # (r, bn)
+        dap_ref[...] = jax.lax.dot_general(
+            bt_ref[...], ds, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[None]                                                # (1, r, bk)
+
+
+def _kernel_frozen(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, dbt_ref,
+                   dap_ref, acc_ref, *, pack, n_levels, eps):
+    _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, None, dbt_ref,
+          dap_ref, None, acc_ref, pack=pack, n_levels=n_levels, eps=eps)
+
+
+def _kernel_qat(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
+                dap_ref, dw_ref, acc_ref, *, pack, n_levels, eps):
+    _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
+          dap_ref, dw_ref, acc_ref, pack=pack, n_levels=n_levels, eps=eps)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codebook_name", "bm", "bn", "bk", "interpret"),
+)
+def lords_grad_pallas(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+    *,
+    w: jnp.ndarray | None = None,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """See module docstring.  Returns ``(dbT (r,N), da_part (N/bn,r,K))``
+    plus ``dW (N,K)`` when the qat master weight ``w`` is given."""
+    from repro.core.scaling import SCALE_EPS
+
+    m, kdim = x.shape
+    n, r = b.shape
+    pack = quantize_mod.codes_per_byte(codebook_name)
+    levels = lut_mod.codebook(codebook_name)
+    n_levels = levels.shape[0]
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, kdim)
+    if m % bm or n % bn or kdim % bk or bk % pack:
+        raise ValueError(
+            f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+    grid = (n // bn, kdim // bk, m // bm)  # M innermost: the ∂L/∂Ŵ reduction
+
+    bt = b.T  # (r, N)
+    lut_arr = levels.reshape(1, -1).astype(jnp.float32)
+    qat = w is not None
+    kern = functools.partial(
+        _kernel_qat if qat else _kernel_frozen,
+        pack=pack, n_levels=n_levels, eps=SCALE_EPS,
+    )
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda j, k, m: (m, k)),        # x
+        pl.BlockSpec((bm, bn), lambda j, k, m: (m, j)),        # g
+        pl.BlockSpec((bn, bk // pack), lambda j, k, m: (j, k)),  # q
+        pl.BlockSpec((r, bn), lambda j, k, m: (0, j)),         # bT
+        pl.BlockSpec((r, bk), lambda j, k, m: (0, k)),         # a
+        pl.BlockSpec((1, n_levels), lambda j, k, m: (0, 0)),   # lut
+    ]
+    inputs = [x, g, q_packed, bt, a, lut_arr]
+    out_specs = [
+        pl.BlockSpec((r, bn), lambda j, k, m: (0, j)),         # dbT
+        pl.BlockSpec((1, r, bk), lambda j, k, m: (j, 0, k)),   # da_part
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((r, n), jnp.float32),
+        jax.ShapeDtypeStruct((n // bn, r, kdim), jnp.float32),
+    ]
+    if qat:
+        in_specs.append(pl.BlockSpec((bn, bk), lambda j, k, m: (j, k)))  # w
+        inputs.append(w)
+        out_specs.append(pl.BlockSpec((bn, bk), lambda j, k, m: (j, k)))
+        out_shape.append(jax.ShapeDtypeStruct((n, kdim), jnp.float32))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+
+
+# ---------------------------------------------------------------------------
+# Block-wise baseline:  ∂s_blk = per-block sums of (gᵀ·x) ⊙ lut[Q]
+# ---------------------------------------------------------------------------
+
+
+def _block_body(x_ref, g_ref, q_ref, lut_ref, o_ref, acc_ref, *, pack,
+                n_levels, group, blocks_per_tile):
+    k, m = pl.program_id(1), pl.program_id(2)
+    nm = pl.num_programs(2)
+
+    @pl.when(m == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(k % group == 0, m == 0))
+    def _zero_out():  # out tile is resident for `group` consecutive k steps
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...], x_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(m == nm - 1)
+    def _reduce():
+        codes = _unpack_tile(q_ref[...], pack)
+        vals = _lut_select(codes, lut_ref, n_levels)
+        ds = acc_ref[...] * vals                               # (bn, bk)
+        bn, bk = ds.shape
+        o_ref[...] += ds.reshape(bn, blocks_per_tile,
+                                 bk // blocks_per_tile).sum(-1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "codebook_name", "bm", "bn", "bk",
+                     "interpret"),
+)
+def block_grad_pallas(
+    x: jnp.ndarray,
+    g: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    block_size: int,
+    codebook_name: str = "nf4",
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """∂s_blk (N, K/block_size) for the block-wise dequant matmul."""
+    m, kdim = x.shape
+    n = q_packed.shape[0]
+    pack = quantize_mod.codes_per_byte(codebook_name)
+    levels = lut_mod.codebook(codebook_name)
+    n_levels = levels.shape[0]
+
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    if m % bm or n % bn or kdim % bk or bk % pack:
+        raise ValueError(
+            f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+    if not (bk % block_size == 0 or block_size % bk == 0):
+        raise ValueError(f"bk {bk} incompatible with block_size {block_size}")
+    grid = (n // bn, kdim // bk, m // bm)
+
+    if bk >= block_size:
+        # each k tile owns bk/block_size whole blocks
+        s_cols, group, blocks_per_tile = bk // block_size, 1, bk // block_size
+        s_index = lambda j, k, m: (j, k)
+    else:
+        # one block spans `group` consecutive k tiles: the (bn, 1) output
+        # column stays resident and accumulates across them
+        group = block_size // bk
+        s_cols, blocks_per_tile = 1, 1
+        s_index = lambda j, k, m: (j, k // group)
+
+    lut_arr = levels.reshape(1, -1).astype(jnp.float32)
+    kern = functools.partial(_block_body, pack=pack, n_levels=n_levels,
+                             group=group, blocks_per_tile=blocks_per_tile)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, k, m: (m, k)),
+            pl.BlockSpec((bm, bn), lambda j, k, m: (m, j)),
+            pl.BlockSpec((bn, bk // pack), lambda j, k, m: (j, k)),
+            pl.BlockSpec((1, n_levels), lambda j, k, m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, s_cols), s_index),
+        out_shape=jax.ShapeDtypeStruct((n, kdim // block_size), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bk), jnp.float32)],
+        interpret=interpret,
+    )(x, g, q_packed, lut_arr)

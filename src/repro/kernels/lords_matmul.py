@@ -36,6 +36,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import lut as lut_mod
 from repro.core import quantize as quantize_mod
+from repro.core.scaling import clamp_scale
 
 __all__ = ["lords_matmul_pallas"]
 
@@ -112,8 +113,7 @@ def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
         bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    sign = jnp.where(s >= 0, 1.0, -1.0)
-    s = jnp.where(jnp.abs(s) < eps, sign * eps, s)
+    s = clamp_scale(s, eps)
     w = (vals * s).astype(x_ref.dtype)                        # (bn, bk)
     acc = jax.lax.dot_general(
         x_ref[...], w, (((1,), (1,)), ((), ())),

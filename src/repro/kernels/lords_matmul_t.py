@@ -1,0 +1,208 @@
+"""Fused *transposed* LoRDS dequant-matmul Pallas kernels (training backward).
+
+Computes  dx[M, K] = g[M, N] @ Ŵ,   Ŵ[N, K] = lut[Q] ⊙ (B·A)
+
+directly from the packed codes — the activation-gradient half of the LoRDS
+backward pass.  Together with :mod:`repro.kernels.lords_grad` this is what
+lets QAT/PEFT training never materialize Ŵ: the forward streams Q once
+(:mod:`repro.kernels.lords_matmul`), the backward streams it twice (here for
+dx, there for the parameter gradients), and no (N, K) f32 dequantized
+temporary ever exists in HBM.
+
+Tiling (all VMEM):
+  grid = (M/bm, K/bk, N/bn), N innermost for accumulation
+    g tile   (bm, bn)            output-side gradient
+    q tile   (bn, bk/pack) uint8 packed codes — streamed once per M-tile
+    bT tile  (r, bn)             scale factor B, transposed (rank in sublanes)
+    a tile   (r, bk)             constant index across the N loop → fetched
+                                 once per K-tile and VMEM-resident after that
+    lut      (1, L) f32          codebook levels
+    out tile (bm, bk) f32        accumulated across the N grid axis
+
+Per tile:  S = bTᵀ·a (rank-r MXU contraction), W = lut[q] ⊙ S (the same
+one-hot × lut MXU gather as the forward kernels), acc += g·W — note W is
+used *untransposed* here: the (bn, bk) dequant tile is exactly the operand
+layout ``g @ Ŵ`` wants, so transposition costs nothing.  The innermost
+(reduction) grid axis is double-buffered by the Pallas pipeline exactly as
+in :mod:`repro.kernels.lords_decode`: the q DMAs for tile n+1 are in flight
+while tile n is in the MXU.
+
+``block_matmul_t_pallas`` is the block-wise analogue (piecewise-constant
+scales instead of S = B·A) used by the blockwise/qlora-family backward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import lut as lut_mod
+from repro.core import quantize as quantize_mod
+from repro.core.scaling import clamp_scale
+from repro.kernels.lords_matmul import _lut_select, _unpack_tile
+
+__all__ = ["lords_matmul_t_pallas", "block_matmul_t_pallas"]
+
+
+def _kernel(g_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
+            eps):
+    nn = pl.program_id(2)
+
+    @pl.when(nn == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_tile(q_ref[...], pack)                    # (bn, bk)
+    vals = _lut_select(codes, lut_ref, n_levels)              # (bn, bk) f32
+    s = jax.lax.dot_general(
+        bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                          # (bn, bk)
+    s = clamp_scale(s, eps)
+    w = (vals * s).astype(g_ref.dtype)                        # (bn, bk)
+    o_ref[...] += jax.lax.dot_general(
+        g_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                          # (bm, bk)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("codebook_name", "bm", "bn", "bk", "interpret"),
+)
+def lords_matmul_t_pallas(
+    g: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """See module docstring.  g (M,N) · dequant(q (N,K/pack), b (N,r), a (r,K))."""
+    from repro.core.scaling import SCALE_EPS
+
+    m, n = g.shape
+    _, r = b.shape
+    kdim = a.shape[1]
+    pack = quantize_mod.codes_per_byte(codebook_name)
+    levels = lut_mod.codebook(codebook_name)
+    n_levels = levels.shape[0]
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, kdim)
+    if m % bm or n % bn or kdim % bk or bk % pack:
+        raise ValueError(
+            f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+    grid = (m // bm, kdim // bk, n // bn)  # N innermost: the reduction axis
+
+    bt = b.T  # (r, N)
+    lut_arr = levels.reshape(1, -1).astype(jnp.float32)
+    kern = functools.partial(
+        _kernel, pack=pack, n_levels=n_levels, eps=SCALE_EPS
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k, nn: (i, nn)),
+            pl.BlockSpec((bn, bk // pack), lambda i, k, nn: (nn, k)),
+            pl.BlockSpec((r, bn), lambda i, k, nn: (0, nn)),
+            pl.BlockSpec((r, bk), lambda i, k, nn: (0, k)),
+            pl.BlockSpec((1, n_levels), lambda i, k, nn: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, k, nn: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+        interpret=interpret,
+    )(g, q_packed, bt, a, lut_arr)
+
+
+# ---------------------------------------------------------------------------
+# Block-wise transposed baseline:  dx = g @ (lut[Q] ⊙ repeat(s_blk))
+# ---------------------------------------------------------------------------
+
+
+def _block_kernel(g_ref, q_ref, s_ref, lut_ref, o_ref, *, pack, n_levels,
+                  reps):
+    nn = pl.program_id(2)
+
+    @pl.when(nn == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_tile(q_ref[...], pack)
+    vals = _lut_select(codes, lut_ref, n_levels)
+    s = s_ref[...]  # (bn, bk // block_size) or (bn, 1)
+    bn, nblk = s.shape
+    # nblk * reps == bk in both layouts (whole blocks per tile, or one
+    # block column spanning `block_size // bk` consecutive tiles)
+    s_full = jnp.broadcast_to(s[:, :, None], (bn, nblk, reps)).reshape(
+        bn, nblk * reps
+    )
+    w = (vals * s_full).astype(g_ref.dtype)
+    o_ref[...] += jax.lax.dot_general(
+        g_ref[...], w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "codebook_name", "bm", "bn", "bk",
+                     "interpret"),
+)
+def block_matmul_t_pallas(
+    g: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    s_blk: jnp.ndarray,
+    block_size: int,
+    codebook_name: str = "nf4",
+    *,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, n = g.shape
+    pack = quantize_mod.codes_per_byte(codebook_name)
+    kdim = q_packed.shape[1] * pack
+    levels = lut_mod.codebook(codebook_name)
+    n_levels = levels.shape[0]
+
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    if m % bm or n % bn or kdim % bk:
+        raise ValueError(f"({m},{n},{kdim}) not divisible by ({bm},{bn},{bk})")
+    if not (bk % block_size == 0 or block_size % bk == 0):
+        raise ValueError(f"bk {bk} incompatible with block_size {block_size}")
+    grid = (m // bm, kdim // bk, n // bn)
+
+    if bk >= block_size:
+        s_cols, reps = bk // block_size, block_size
+        s_index = lambda i, k, nn: (nn, k)
+    else:
+        s_cols, reps = 1, bk
+        s_index = lambda i, k, nn: (nn, k // (block_size // bk))
+
+    lut_arr = levels.reshape(1, -1).astype(jnp.float32)
+    kern = functools.partial(_block_kernel, pack=pack, n_levels=n_levels,
+                             reps=reps)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k, nn: (i, nn)),
+            pl.BlockSpec((bn, bk // pack), lambda i, k, nn: (nn, k)),
+            pl.BlockSpec((bn, s_cols), s_index),
+            pl.BlockSpec((1, n_levels), lambda i, k, nn: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, k, nn: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), jnp.float32),
+        interpret=interpret,
+    )(g, q_packed, s_blk.astype(jnp.float32), lut_arr)

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import lut as lut_mod
 from repro.core import quantize as quantize_mod
+from repro.core.scaling import clamp_scale
 
 __all__ = ["lut_quantize_pallas"]
 
@@ -33,8 +34,7 @@ def _kernel(w_ref, bt_ref, a_ref, mids_ref, o_ref, *, pack, n_mids, eps):
         bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    sign = jnp.where(s >= 0, 1.0, -1.0)
-    s = jnp.where(jnp.abs(s) < eps, sign * eps, s)
+    s = clamp_scale(s, eps)
     ratio = w_ref[...].astype(jnp.float32) / s
     codes = jnp.zeros(ratio.shape, jnp.int32)
     for l in range(n_mids):

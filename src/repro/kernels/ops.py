@@ -13,10 +13,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.block_matmul import block_matmul_pallas
+from repro.kernels.lords_grad import lords_grad_pallas
 from repro.kernels.lords_matmul import lords_matmul_pallas
+from repro.kernels.lords_matmul_t import lords_matmul_t_pallas
 from repro.kernels.lut_quantize import lut_quantize_pallas
 
-__all__ = ["lords_matmul", "lut_quantize", "block_matmul", "on_tpu"]
+__all__ = ["lords_matmul", "lut_quantize", "block_matmul", "lords_matmul_t",
+           "lords_grad", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -61,3 +64,36 @@ def block_matmul(
             interpret=interpret, **blocks,
         )
     return ref.block_matmul_ref(x, q_packed, s_blk, block_size, codebook_name)
+
+
+def lords_matmul_t(
+    g, q_packed, b, a, codebook_name="nf4", *,
+    use_pallas=None, interpret=False, **blocks,
+):
+    """dx = g @ (lut[Q] ⊙ (B·A)) — the training-backward transposed matmul."""
+    if _auto(use_pallas):
+        return lords_matmul_t_pallas(
+            g, q_packed, b, a, codebook_name, interpret=interpret, **blocks
+        )
+    return ref.lords_matmul_t_ref(g, q_packed, b, a, codebook_name)
+
+
+def lords_grad(
+    x, g, q_packed, b, a, codebook_name="nf4", *,
+    w=None, use_pallas=None, interpret=False, **blocks,
+):
+    """Rank-space parameter gradients (dB, dA[, dW]) of a LoRDS matmul.
+
+    The fused path returns the kernel layout ``(dbT (r,N), da_part
+    (N/bn,r,K)[, dW])``; this wrapper normalizes both paths to
+    ``(dB (N,r), dA (r,K)[, dW])`` so callers are layout-agnostic.
+    """
+    if _auto(use_pallas):
+        out = lords_grad_pallas(
+            x, g, q_packed, b, a, codebook_name, w=w,
+            interpret=interpret, **blocks,
+        )
+        db, da = out[0].T, out[1].sum(axis=0)
+        return (db, da, out[2]) if w is not None else (db, da)
+    return ref.lords_grads_ref(g, x, q_packed, b, a, codebook_name, w=w,
+                               want_dx=False)

@@ -10,18 +10,32 @@ import jax.numpy as jnp
 
 from repro.core import lut
 from repro.core.quantize import unpack_codes
-from repro.core.scaling import SCALE_EPS, expand_block_scales
+from repro.core.scaling import SCALE_EPS, clamp_scale, expand_block_scales
 
-__all__ = ["lords_matmul_ref", "lut_quantize_ref", "block_matmul_ref"]
+__all__ = [
+    "lords_matmul_ref",
+    "lut_quantize_ref",
+    "block_matmul_ref",
+    "lords_matmul_t_ref",
+    "lords_grads_ref",
+    "block_matmul_t_ref",
+    "block_grads_ref",
+]
 
 
-def _dequant_lords(q_packed, b, a, codebook_name, dtype):
+def _lords_terms(q_packed, b, a, codebook_name):
+    """Shared dequant terms: (lut[Q], clamped S, clamp mask) — the one place
+    the backward family dequantizes, forward or ref."""
     codes = unpack_codes(q_packed, codebook_name)
     levels = lut.codebook(codebook_name)
     vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
-    s = b.astype(jnp.float32) @ a.astype(jnp.float32)
-    sign = jnp.where(s >= 0, 1.0, -1.0)
-    s = jnp.where(jnp.abs(s) < SCALE_EPS, sign * SCALE_EPS, s)
+    s_raw = b.astype(jnp.float32) @ a.astype(jnp.float32)
+    mask = (jnp.abs(s_raw) >= SCALE_EPS).astype(jnp.float32)
+    return vals, clamp_scale(s_raw), mask
+
+
+def _dequant_lords(q_packed, b, a, codebook_name, dtype):
+    vals, s, _ = _lords_terms(q_packed, b, a, codebook_name)
     return (vals * s).astype(dtype)
 
 
@@ -52,6 +66,94 @@ def lut_quantize_ref(
     return pack_codes(codes, codebook_name)
 
 
+def lords_matmul_t_ref(
+    g: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+) -> jnp.ndarray:
+    """dx = g @ (lut[Q] ⊙ (B·A)).   g: (M, N); q: (N, K/pack); dx: (M, K)."""
+    w_hat = _dequant_lords(q_packed, b, a, codebook_name, jnp.float32)
+    return g.astype(jnp.float32) @ w_hat
+
+
+def lords_grads_ref(
+    g: jnp.ndarray,
+    x: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    b: jnp.ndarray,
+    a: jnp.ndarray,
+    codebook_name: str = "nf4",
+    w: jnp.ndarray | None = None,
+    want_dx: bool = True,
+):
+    """Dense-math oracle for the fused LoRDS backward family (one dequant).
+
+    Returns ``(dx, dB, dA)`` for frozen/peft, plus ``dW`` when the qat
+    master weight ``w`` is given — the parity reference for
+    :mod:`repro.kernels.lords_matmul_t` + :mod:`repro.kernels.lords_grad`,
+    and the execution path of the ``ref``/``dense`` backward.  The STE rule
+    (Eq. 4/5) and the S = B·A chain rule are the shared helpers in
+    :mod:`repro.core.qat` / :mod:`repro.core.peft`.  ``want_dx=False``
+    drops the dx term (and its GEMM) for callers that only need the
+    parameter gradients eagerly.
+    """
+    from repro.core.peft import scale_grads
+    from repro.core.qat import ste_cotangents
+
+    vals, s, mask = _lords_terms(q_packed, b, a, codebook_name)
+    g32 = g.astype(jnp.float32)
+    head = (g32 @ (vals * s),) if want_dx else ()
+    dw_hat = g32.T @ x.astype(jnp.float32)                 # ∂L/∂Ŵ  (N, K)
+    if w is None:                                          # frozen / peft
+        ds = dw_hat * vals * mask
+        return (*head, *scale_grads(ds, b, a))
+    resid = vals - w.astype(jnp.float32) / s               # Q − W ⊘ S
+    dw, ds = ste_cotangents(dw_hat, resid)
+    db, da = scale_grads(ds * mask, b, a)
+    return (*head, db, da, dw)
+
+
+def _block_terms(q_packed, s_blk, block_size, codebook_name):
+    """Shared block-wise dequant terms: (lut[Q], expanded S)."""
+    codes = unpack_codes(q_packed, codebook_name)
+    levels = lut.codebook(codebook_name)
+    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+    s = expand_block_scales(s_blk.astype(jnp.float32), block_size)
+    return vals, s
+
+
+def block_matmul_t_ref(
+    g: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    s_blk: jnp.ndarray,
+    block_size: int,
+    codebook_name: str = "nf4",
+) -> jnp.ndarray:
+    """dx = g @ (lut[Q] ⊙ repeat(s_blk)).   g: (M, N); dx: (M, K)."""
+    vals, s = _block_terms(q_packed, s_blk, block_size, codebook_name)
+    return g.astype(jnp.float32) @ (vals * s)
+
+
+def block_grads_ref(
+    g: jnp.ndarray,
+    x: jnp.ndarray,
+    q_packed: jnp.ndarray,
+    s_blk: jnp.ndarray,
+    block_size: int,
+    codebook_name: str = "nf4",
+):
+    """(dx, ∂s_blk) oracle for the block-wise backward (one dequant)."""
+    vals, s = _block_terms(q_packed, s_blk, block_size, codebook_name)
+    g32 = g.astype(jnp.float32)
+    dx = g32 @ (vals * s)
+    ds_full = (g32.T @ x.astype(jnp.float32)) * vals
+    n, nblk = s_blk.shape
+    ds_blk = ds_full.reshape(n, nblk, block_size).sum(-1)
+    return dx, ds_blk
+
+
 def block_matmul_ref(
     x: jnp.ndarray,
     q_packed: jnp.ndarray,
@@ -61,9 +163,6 @@ def block_matmul_ref(
     out_dtype=jnp.float32,
 ) -> jnp.ndarray:
     """Block-wise (bitsandbytes-style) dequant matmul baseline."""
-    codes = unpack_codes(q_packed, codebook_name)
-    levels = lut.codebook(codebook_name)
-    vals = jnp.take(levels, codes.astype(jnp.int32), axis=0)
-    s = expand_block_scales(s_blk, block_size)
+    vals, s = _block_terms(q_packed, s_blk, block_size, codebook_name)
     w_hat = (vals * s).astype(x.dtype)
     return jnp.dot(x, w_hat.T, preferred_element_type=out_dtype).astype(out_dtype)

@@ -46,11 +46,21 @@ from repro.optim import adamw_init
 def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
                  mesh=None, seed: int = 0, log_every: int = 10,
-                 num_microbatches: int | None = None) -> dict:
-    """Train ``cfg`` for ``steps``; returns final metrics + loss history."""
+                 num_microbatches: int | None = None,
+                 kernel_backend: str | None = None) -> dict:
+    """Train ``cfg`` for ``steps``; returns final metrics + loss history.
+
+    ``kernel_backend`` pins the quantized-matmul dispatch backend for the
+    whole step — forward *and* backward: on the fused backends
+    (pallas/interpret) QAT and PEFT steps run the fused custom-VJP kernels
+    end to end and never materialize Ŵ (None = ambient default).
+    """
     mesh = mesh or make_host_mesh()
     plan = build_plan(cfg, mesh, shape_cfg, lr=lr,
-                      num_microbatches=num_microbatches)
+                      num_microbatches=num_microbatches,
+                      kernel_backend=kernel_backend)
+    print(f"[train] plan {plan.name} mode={plan.meta['mode']} "
+          f"kernels={plan.meta['kernel_backend']}")
 
     key = jax.random.PRNGKey(seed)
     values, _ = split_tree(model_init(key, cfg))
@@ -112,6 +122,11 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=None)
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--mode", default=None, choices=["peft", "qat"],
+                    help="override cfg.quant.mode for this run")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["pallas", "interpret", "ref", "dense"],
+                    help="pin the fused-kernel dispatch backend (fwd + bwd)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -124,9 +139,12 @@ def main(argv=None):
         if args.seq_len or args.global_batch:
             shape = ShapeCfg(shape.name, args.seq_len or shape.seq_len,
                              args.global_batch or shape.global_batch, "train")
+    if args.mode:
+        cfg = cfg.with_(quant=cfg.quant.with_(mode=args.mode))
     t0 = time.time()
     out = run_training(cfg, shape, steps=args.steps, lr=args.lr,
-                       ckpt_dir=args.ckpt_dir)
+                       ckpt_dir=args.ckpt_dir,
+                       kernel_backend=args.kernel_backend)
     dt = time.time() - t0
     print(f"[train] done: {len(out['losses'])} steps in {dt:.1f}s; "
           f"loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}")

@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-interpret bench bench-serve bench-train serve-smoke \
-	serve-smoke-interpret train-smoke-interpret
+.PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
+	serve-smoke serve-smoke-interpret train-smoke-interpret
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -14,6 +14,13 @@ test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 test-interpret:  ## kernel + dispatch + train-bwd suites in interpret mode
 	REPRO_KERNEL_BACKEND=interpret $(PY) -m pytest -x -q \
 		tests/test_dispatch.py tests/test_kernels.py tests/test_train_bwd.py
+
+# the sharded suite: conftest forces 8 host CPU devices (REPRO_MULTIDEVICE=1
+# must be set before pytest imports jax), builds real data×tensor-parallel
+# meshes, and checks sharded-vs-single-device parity for the fused forward /
+# psum'd backward / generate loop plus sharded checkpoint save→restore→resume
+test-multidevice:  ## sharded e2e + checkpoint suites on a forced 8-way host-CPU mesh
+	REPRO_MULTIDEVICE=1 $(PY) -m pytest -x -q -m multidevice
 
 bench:           ## kernel-level fused-vs-oracle benchmark (Fig. 2 analogue)
 	$(PY) -m benchmarks.run kernels

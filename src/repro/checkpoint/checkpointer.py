@@ -6,13 +6,19 @@ Design (multi-host-aware, CPU-testable):
     latest checkpoint; restore always reads the manifest.
   * content: params / optimizer state / data-pipeline step / RNG key, stored
     as raw ``.npy`` per leaf + a msgpack-free JSON tree spec (no pickle).
-  * sharded save: each host writes only the leaf-shards it owns
-    (``process_index`` prefix); restore concatenates lazily.  In this
-    single-process container that degenerates to one writer, but the layout
-    and addressing logic are the multi-host ones.
+  * sharded save: a leaf that lives sharded on a mesh (e.g. packed int
+    codes row-sharded over 'model' while the LoRDS B/A factors replicate)
+    is written as one ``.npy`` *per distinct shard* — no host-side
+    all-gather — and the step's ``spec.json`` manifest records each leaf's
+    global shape, the shard index windows, and the ``PartitionSpec`` it was
+    saved under.  Each host writes only the shards it owns
+    (``process_index`` prefix); in this single-process container that
+    degenerates to one writer, but the layout and addressing logic are the
+    multi-host ones.
   * elastic restore: checkpoints store *logical* shapes; ``restore`` accepts
-    any target sharding (a different mesh / chip count) and lets jax.device_put
-    reshard — scale-up/scale-down restarts.
+    any target sharding (a different mesh / chip count) and lets
+    jax.device_put reshard — scale-up/scale-down restarts.  Restoring a
+    sharded save without target shardings reassembles full arrays.
   * retention: keep the newest ``keep`` checkpoints, delete older ones.
 """
 from __future__ import annotations
@@ -46,6 +52,44 @@ def _flatten(tree, prefix=""):
     return out
 
 
+def _shard_entries(leaf):
+    """Distinct (index-window, host array) pairs for a sharded jax.Array.
+
+    Shards replicated across mesh axes repeat the same index window on
+    several devices — only the first copy is written.  Windows come back as
+    ``[[start, stop], ...]`` per dim (JSON-friendly).
+    """
+    seen, out = set(), []
+    shape = leaf.shape
+    for sh in leaf.addressable_shards:
+        idx = tuple(
+            (0 if s.start is None else int(s.start),
+             dim if s.stop is None else int(s.stop))
+            for s, dim in zip(sh.index, shape))
+        if idx in seen:
+            continue
+        seen.add(idx)
+        out.append(([list(w) for w in idx], np.asarray(sh.data)))
+    return out
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np.dtype from its saved string name, including the ml_dtypes extras
+    (bfloat16 & friends) numpy itself cannot look up by name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _is_sharded(leaf) -> bool:
+    return (isinstance(leaf, jax.Array)
+            and len(leaf.sharding.device_set) > 1
+            and not leaf.is_fully_replicated)
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
@@ -63,17 +107,35 @@ class Checkpointer:
         os.makedirs(tmp)
 
         leaves, treedef = jax.tree_util.tree_flatten(state)
-        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
-        names = []
-        for i, leaf in enumerate(host_leaves):
-            name = f"leaf_{i:05d}_p{jax.process_index()}.npy"
-            np.save(os.path.join(tmp, name), leaf)
-            names.append(name)
+        proc = jax.process_index()
+        entries = []
+        for i, leaf in enumerate(leaves):
+            if _is_sharded(leaf):
+                files, indices = [], []
+                for j, (idx, data) in enumerate(_shard_entries(leaf)):
+                    name = f"leaf_{i:05d}_p{proc}_s{j}.npy"
+                    np.save(os.path.join(tmp, name), data)
+                    files.append(name)
+                    indices.append(idx)
+                entries.append({
+                    "files": files,
+                    "indices": indices,
+                    "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype),
+                    "pspec": str(leaf.sharding.spec),
+                })
+            else:
+                name = f"leaf_{i:05d}_p{proc}.npy"
+                host = np.asarray(jax.device_get(leaf))
+                np.save(os.path.join(tmp, name), host)
+                entries.append({"files": [name], "indices": None,
+                                "dtype": str(host.dtype)})
         spec = {
+            "version": 2,
             "treedef": str(treedef),
-            "names": names,
+            "leaves": entries,
             "step": step,
-            "num_leaves": len(names),
+            "num_leaves": len(entries),
         }
         with open(os.path.join(tmp, "spec.json"), "w") as f:
             json.dump(spec, f)
@@ -109,15 +171,36 @@ class Checkpointer:
 
     def latest_step(self) -> int | None:
         man = os.path.join(self.dir, "MANIFEST.json")
+        live = set(self.all_steps())
         if os.path.exists(man):
-            with open(man) as f:
-                data = json.load(f)
-            # the manifest may reference a GC'd step after keep-pruning
-            live = set(self.all_steps())
-            cands = [s for s in data.get("steps", []) if s in live]
+            try:
+                with open(man) as f:
+                    data = json.load(f)
+                # the manifest may reference a GC'd step after keep-pruning
+                cands = [s for s in data.get("steps", []) if s in live]
+            except (ValueError, OSError, AttributeError):
+                # torn/corrupt manifest: the step dirs themselves are the
+                # source of truth (each was atomically renamed into place)
+                cands = sorted(live)
             return max(cands) if cands else None
-        steps = self.all_steps()
+        steps = sorted(live)
         return steps[-1] if steps else None
+
+    def _load_leaf(self, path: str, entry: dict) -> np.ndarray:
+        # np.load round-trips the ml_dtypes extras (bfloat16, ...) as raw
+        # void records; the manifest dtype views them back bit-exactly
+        want = _np_dtype(entry["dtype"]) if entry.get("dtype") else None
+        if entry.get("indices") is None:
+            arr = np.load(os.path.join(path, entry["files"][0]))
+            if want is not None and arr.dtype != want:
+                arr = arr.view(want)
+            return arr
+        out = np.empty(tuple(entry["shape"]), dtype=want)
+        for name, idx in zip(entry["files"], entry["indices"]):
+            window = tuple(slice(a, b) for a, b in idx)
+            shard = np.load(os.path.join(path, name))
+            out[window] = shard.view(want) if shard.dtype != want else shard
+        return out
 
     def restore(self, example_state: dict, step: int | None = None,
                 shardings=None) -> dict | None:
@@ -125,7 +208,8 @@ class Checkpointer:
 
         ``shardings``: optional matching tree of jax.sharding.Sharding — the
         elastic-reshard path (device_put onto a *different* mesh than the one
-        that saved).  Returns None when no checkpoint exists.
+        that saved, or straight back onto the saving layout for bit-exact
+        sharded resume).  Returns None when no checkpoint exists.
         """
         if step is None:
             step = self.latest_step()
@@ -139,10 +223,28 @@ class Checkpointer:
             raise ValueError(
                 f"checkpoint has {spec['num_leaves']} leaves; target structure "
                 f"has {len(leaves)} — incompatible state")
-        loaded = [np.load(os.path.join(path, n)) for n in spec["names"]]
+        if spec.get("version", 1) >= 2:
+            loaded = [self._load_leaf(path, e) for e in spec["leaves"]]
+        else:  # v1 layout: one whole-array file per leaf
+            loaded = [np.load(os.path.join(path, n)) for n in spec["names"]]
         if shardings is not None:
             shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
             loaded = [jax.device_put(l, s)
                       for l, s in zip(loaded, shard_leaves)]
         restored = jax.tree_util.tree_unflatten(treedef, loaded)
         return restored
+
+    def saved_pspecs(self, step: int | None = None) -> list | None:
+        """The PartitionSpec strings recorded at save time (one per leaf;
+        None for unsharded leaves) — the manifest trail that lets operators
+        audit how a checkpoint was laid out without loading it."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "spec.json")) as f:
+            spec = json.load(f)
+        if spec.get("version", 1) < 2:
+            return [None] * spec["num_leaves"]
+        return [e.get("pspec") for e in spec["leaves"]]

@@ -24,8 +24,8 @@ import dataclasses
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-__all__ = ["ShardingPolicy", "make_rules", "resolve_spec", "tree_shardings",
-           "estimate_quantized_gb"]
+__all__ = ["ShardingPolicy", "make_rules", "resolve_spec", "tree_pspecs",
+           "tree_shardings", "estimate_quantized_gb"]
 
 
 @dataclasses.dataclass
@@ -33,6 +33,22 @@ class ShardingPolicy:
     weight_rules: dict
     act_rules: dict
     dropped: list  # [(axes, dim, rule)] divisibility fallbacks (for the log)
+
+    def summary(self) -> dict:
+        """Compact layout record (StepPlan.meta / checkpoint manifests):
+        which mesh axes carry weights, whether the LoRDS factors replicate
+        (the codes-shard / factors-replicate invariant), and how many rules
+        were dropped to divisibility."""
+        used = sorted({ax for rule in self.weight_rules.values() if rule
+                       for ax in ((rule,) if isinstance(rule, str)
+                                  else tuple(rule))})
+        return {
+            "weight_axes": used,
+            "lords_factors": ("replicated"
+                              if self.weight_rules.get("lords_rank") is None
+                              else "sharded"),
+            "dropped": len(self.dropped),
+        }
 
 
 # logical axis names used across the model zoo
@@ -182,18 +198,30 @@ def resolve_spec(axes: tuple, shape: tuple, rules: dict, mesh: Mesh,
     return PartitionSpec(*spec)
 
 
+_AXES_LEAF = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+    isinstance(i, (str, type(None))) for i in x)
+
+
+def tree_pspecs(axes_tree, value_tree, rules: dict, mesh,
+                dropped: list | None = None):
+    """Resolve a PartitionSpec tree matching ``value_tree`` from its logical
+    axes tree.  Pure spec-level: ``mesh`` only needs a ``.shape`` mapping, so
+    an ``AbstractMesh`` of the production shape works without any devices
+    (how the sharding test-suite validates the full arch zoo on one CPU)."""
+    import jax
+
+    def one(axes, val):
+        shape = val.shape if hasattr(val, "shape") else ()
+        return resolve_spec(tuple(axes), tuple(shape), rules, mesh, dropped)
+
+    return jax.tree.map(one, axes_tree, value_tree, is_leaf=_AXES_LEAF)
+
+
 def tree_shardings(axes_tree, value_tree, rules: dict, mesh: Mesh,
                    dropped: list | None = None):
     """Build a NamedSharding tree matching value_tree from its axes tree."""
     import jax
 
-    def one(axes, val):
-        shape = val.shape if hasattr(val, "shape") else ()
-        spec = resolve_spec(tuple(axes), tuple(shape), rules, mesh, dropped)
-        return NamedSharding(mesh, spec)
-
-    return jax.tree.map(
-        one, axes_tree, value_tree,
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(i, (str, type(None))) for i in x),
-    )
+    specs = tree_pspecs(axes_tree, value_tree, rules, mesh, dropped)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, PartitionSpec))

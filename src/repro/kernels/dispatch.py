@@ -50,6 +50,21 @@ weights stream exactly once per call, the memory-roofline minimum for
 autoregressive decoding.  The routing is by trace-time shape, so a jitted
 serve step picks the decode kernel automatically.
 
+Sharded execution: inside a ``shard_scope(mesh)`` the fused lords /
+blockwise paths run data+tensor-parallel over the mesh via ``shard_map``:
+the packed codes (and the row dim of B / the QAT master W / the block
+scales) shard over 'model' while the rank-r A factor stays replicated —
+the codes-shard / factors-replicate layout the sharding rules in
+:mod:`repro.distributed.sharding` assign to every quantized linear — and
+the flattened token dim shards over the remaining (data/pod) mesh axes
+when it divides them.  The custom VJPs stay fused per shard and
+psum-reduce exactly the cross-shard cotangents (dx over 'model', dB/dW/
+ds_blk over the data axes, dA over both), so a data+tensor-parallel
+QAT/PEFT step never materializes Ŵ either.  Layers whose out-dim does not
+divide the model axis fall back to the unsharded path (mirroring
+``resolve_spec``'s divisibility drops), as does the ``dense`` backend
+(GSPMD partitions its einsum directly).
+
 Autotuning: per-(method, M-bucket, N, K, codebook, dtype) tile choices live
 in a small in-process table.  ``autotune_qmatmul`` times candidate tilings
 through the public entry point and registers the winner; subsequent
@@ -71,6 +86,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.kernels import ref
 from repro.kernels.block_matmul import block_matmul_pallas
@@ -88,6 +105,8 @@ __all__ = [
     "qmatmul",
     "default_backend",
     "backend_scope",
+    "shard_scope",
+    "shard_info",
     "tile_for",
     "lookup_tiles",
     "register_tiles",
@@ -145,6 +164,53 @@ def backend_scope(backend: str | None):
 
 def _resolve(backend: str | None) -> str:
     return backend if backend is not None else default_backend()
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel scope (shard_map over the mesh's model axis)
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def shard_scope(mesh, axis: str = "model"):
+    """Run fused qmatmuls traced inside tensor-parallel over ``mesh``.
+
+    Packed codes / B rows / the QAT master W shard over ``axis``; A stays
+    replicated; the custom VJPs psum dx and dA across ``axis``.  Unlike
+    :func:`backend_scope`, ``mesh=None`` (or a mesh where ``axis`` has size
+    1) explicitly *disables* sharded dispatch inside the scope — the form
+    the MoE shard_map bodies use to stop fused matmuls from opening a
+    nested shard_map.
+    """
+    prev = getattr(_TLS, "shard", None)
+    active = mesh is not None and dict(mesh.shape).get(axis, 1) > 1
+    _TLS.shard = (mesh, axis) if active else None
+    try:
+        yield
+    finally:
+        _TLS.shard = prev
+
+
+def shard_info() -> tuple | None:
+    """The active (mesh, model-axis) pair, or None outside any shard_scope."""
+    return getattr(_TLS, "shard", None)
+
+
+def _tp_shard(backend: str, n: int) -> tuple | None:
+    """Resolve the tensor-parallel route for an (N, K) quantized linear.
+
+    Returns (mesh, axis) when a shard scope is active, the backend has a
+    fused/ref per-shard body, and N divides the model-axis size; None means
+    take the unsharded path (the same divisibility fallback resolve_spec
+    applies to the weight tree, so compute and layout always agree).
+    """
+    sh = shard_info()
+    if sh is None or backend == "dense":
+        return None
+    mesh, axis = sh
+    if n % dict(mesh.shape)[axis]:
+        return None
+    return sh
 
 
 # ---------------------------------------------------------------------------
@@ -537,6 +603,180 @@ _block_qmatmul.defvjp(_block_fwd, _block_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Sharded fused paths: shard_map over the mesh, psum'd cotangents
+# ---------------------------------------------------------------------------
+#
+# Layout per (N, K) linear with model parallelism p and data parallelism d
+# (the product of the remaining mesh axes, used when the flattened token
+# count divides it):
+#   codes Q (N/p, K/pack) · B (N/p, r) · W (N/p, K) · s_blk (N/p, K/bs)
+#   row-shard over 'model'; A (r, K) replicates; x (M/d, K) shards its
+#   token dim over the data axes; y comes out (M/d, N/p).  Each device
+#   runs the *same* fused kernel bodies as the unsharded path on its
+#   (token-slice × row-slice) block — Ŵ never exists anywhere.
+# Backward psums follow from the layout: dx is token-local but partial
+#   over the row shards (psum 'model'); dB / dW / ds_blk are row-local but
+#   partial over the token shards (psum data axes); dA is partial over
+#   both (psum all).  When M doesn't divide d, x replicates and the
+#   data-axis psums drop out.
+# The custom VJPs sit *outside* shard_map (explicit psums instead of
+# relying on transpose-of-manual replication rules, which custom_vjp
+# bodies cannot declare).
+
+
+def _dp_axes(mesh, axis, m_tokens: int) -> tuple:
+    """Mesh axes the token dim shards over: every non-model axis, kept only
+    when the flattened token count divides their product (else replicate,
+    matching resolve_spec's divisibility behavior for activations)."""
+    shape = dict(mesh.shape)
+    axes = tuple(a for a, size in shape.items() if a != axis and size > 1)
+    size = 1
+    for a in axes:
+        size *= shape[a]
+    if not axes or m_tokens % size:
+        return ()
+    return axes
+
+
+def _psum(v, axes):
+    return jax.lax.psum(v, axes) if axes else v
+
+
+def _tp_specs(axis, batch: tuple):
+    bspec = batch if len(batch) > 1 else (batch[0] if batch else None)
+    xs = PartitionSpec(bspec, None)     # x / dx: tokens over the data axes
+    row = PartitionSpec(axis, None)     # codes / B / W / s_blk rows
+    rep = PartitionSpec()               # A
+    out = PartitionSpec(bspec, axis)    # y / g
+    return xs, row, rep, out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _shlords_qmatmul(x2d, q_packed, b, a, codebook, backend, mesh, axis,
+                     tiles):
+    xs, row, rep, out = _tp_specs(axis, _dp_axes(mesh, axis, x2d.shape[0]))
+    return shard_map(
+        lambda xl, ql, bl, al: _lords_forward(
+            xl, ql, bl, al, codebook, backend, tiles),
+        mesh=mesh, in_specs=(xs, row, row, rep), out_specs=out,
+        check_rep=False,
+    )(x2d, q_packed, b, a)
+
+
+def _shlords_fwd(x2d, q_packed, b, a, codebook, backend, mesh, axis, tiles):
+    y = _shlords_qmatmul(x2d, q_packed, b, a, codebook, backend, mesh, axis,
+                         tiles)
+    return y, (x2d, q_packed, b, a)
+
+
+def _shlords_bwd(codebook, backend, mesh, axis, tiles, res, g):
+    x2d, q_packed, b, a = res
+    dp = _dp_axes(mesh, axis, x2d.shape[0])
+    xs, row, rep, out = _tp_specs(axis, dp)
+
+    def body(gl, xl, ql, bl, al):
+        dx, db, da = _lords_grads(gl, xl, ql, bl, al, None, codebook, backend)
+        return jax.lax.psum(dx, axis), _psum(db, dp), _psum(da, dp + (axis,))
+
+    dx, db, da = shard_map(
+        body, mesh=mesh, in_specs=(out, xs, row, row, rep),
+        out_specs=(xs, row, rep), check_rep=False,
+    )(g, x2d, q_packed, b, a)
+    dq = np.zeros(q_packed.shape, jax.dtypes.float0)
+    return (dx.astype(x2d.dtype), dq, db.astype(b.dtype), da.astype(a.dtype))
+
+
+_shlords_qmatmul.defvjp(_shlords_fwd, _shlords_bwd)
+
+
+def _shlords_qat_forward(x2d, w, b, a, codebook, backend, mesh, axis, tiles):
+    """Shared primal/fwd body: returns (y, row-sharded packed codes)."""
+    xs, row, rep, out = _tp_specs(axis, _dp_axes(mesh, axis, x2d.shape[0]))
+    return shard_map(
+        lambda xl, wl, bl, al: _lords_qat_forward(
+            xl, wl, bl, al, codebook, backend, tiles),
+        mesh=mesh, in_specs=(xs, row, row, rep), out_specs=(out, row),
+        check_rep=False,
+    )(x2d, w, b, a)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _shlords_qat_qmatmul(x2d, w, b, a, codebook, backend, mesh, axis, tiles):
+    y, _ = _shlords_qat_forward(x2d, w, b, a, codebook, backend, mesh, axis,
+                                tiles)
+    return y
+
+
+def _shlords_qat_fwd(x2d, w, b, a, codebook, backend, mesh, axis, tiles):
+    y, q_packed = _shlords_qat_forward(x2d, w, b, a, codebook, backend, mesh,
+                                       axis, tiles)
+    # the row-sharded packed codes ride to the backward exactly as saved —
+    # each shard re-reads its own codes, no re-quantization pass
+    return y, (x2d, w, b, a, q_packed)
+
+
+def _shlords_qat_bwd(codebook, backend, mesh, axis, tiles, res, g):
+    x2d, w, b, a, q_packed = res
+    dp = _dp_axes(mesh, axis, x2d.shape[0])
+    xs, row, rep, out = _tp_specs(axis, dp)
+
+    def body(gl, xl, ql, bl, al, wl):
+        dx, db, da, dw = _lords_grads(gl, xl, ql, bl, al, wl, codebook,
+                                      backend)
+        return (jax.lax.psum(dx, axis), _psum(db, dp),
+                _psum(da, dp + (axis,)), _psum(dw, dp))
+
+    dx, db, da, dw = shard_map(
+        body, mesh=mesh, in_specs=(out, xs, row, row, rep, row),
+        out_specs=(xs, row, rep, row), check_rep=False,
+    )(g, x2d, q_packed, b, a, w)
+    return (dx.astype(x2d.dtype), dw.astype(w.dtype),
+            db.astype(b.dtype), da.astype(a.dtype))
+
+
+_shlords_qat_qmatmul.defvjp(_shlords_qat_fwd, _shlords_qat_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _shblock_qmatmul(x2d, q_packed, s_blk, block_size, codebook, backend,
+                     mesh, axis, tiles):
+    xs, row, rep, out = _tp_specs(axis, _dp_axes(mesh, axis, x2d.shape[0]))
+    return shard_map(
+        lambda xl, ql, sl: _block_forward(
+            xl, ql, sl, block_size, codebook, backend, tiles),
+        mesh=mesh, in_specs=(xs, row, row), out_specs=out,
+        check_rep=False,
+    )(x2d, q_packed, s_blk)
+
+
+def _shblock_fwd(x2d, q_packed, s_blk, block_size, codebook, backend, mesh,
+                 axis, tiles):
+    y = _shblock_qmatmul(x2d, q_packed, s_blk, block_size, codebook, backend,
+                         mesh, axis, tiles)
+    return y, (x2d, q_packed, s_blk)
+
+
+def _shblock_bwd(block_size, codebook, backend, mesh, axis, tiles, res, g):
+    x2d, q_packed, s_blk = res
+    dp = _dp_axes(mesh, axis, x2d.shape[0])
+    xs, row, rep, out = _tp_specs(axis, dp)
+
+    def body(gl, xl, ql, sl):
+        dx, ds = _block_grads(gl, xl, ql, sl, block_size, codebook, backend)
+        return jax.lax.psum(dx, axis), _psum(ds, dp)
+
+    dx, ds_blk = shard_map(
+        body, mesh=mesh, in_specs=(out, xs, row, row),
+        out_specs=(xs, row), check_rep=False,
+    )(g, x2d, q_packed, s_blk)
+    dq = np.zeros(q_packed.shape, jax.dtypes.float0)
+    return dx.astype(x2d.dtype), dq, ds_blk.astype(s_blk.dtype)
+
+
+_shblock_qmatmul.defvjp(_shblock_fwd, _shblock_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Dense fallback — the legacy materialize-Ŵ path
 # ---------------------------------------------------------------------------
 
@@ -589,24 +829,42 @@ def qmatmul(params: dict, x: jnp.ndarray, spec, n: int, m: int, *,
 
     if backend == "dense" or not _fused_supported(params, spec):
         # also the 'none' method: a plain einsum on the unquantized weight
+        # (GSPMD partitions it directly — no shard_map route needed)
         y2d = _dense_base(params, x2d, spec, n, m)
     elif method == "lords":
         xc = x2d.astype(cd)
         b = params["b"].astype(spec.ba_compute_dtype)
         a = params["a"].astype(spec.ba_compute_dtype)
+        tp = _tp_shard(backend, n)
         if mode == "qat":
-            y2d = _lords_qat_qmatmul(
-                xc, params["w"], b, a, spec.codebook, backend, tiles)
+            if tp is not None:
+                y2d = _shlords_qat_qmatmul(
+                    xc, params["w"], b, a, spec.codebook, backend, *tp,
+                    tiles)
+            else:
+                y2d = _lords_qat_qmatmul(
+                    xc, params["w"], b, a, spec.codebook, backend, tiles)
         else:
-            y2d = _lords_qmatmul(
-                xc, params["q"], b, a, spec.codebook, backend, tiles)
+            if tp is not None:
+                y2d = _shlords_qmatmul(
+                    xc, params["q"], b, a, spec.codebook, backend, *tp,
+                    tiles)
+            else:
+                y2d = _lords_qmatmul(
+                    xc, params["q"], b, a, spec.codebook, backend, tiles)
         y2d = y2d.astype(cd)
     else:  # blockwise base (also the qlora/loftq/qpissa frozen base)
         q_packed, s_blk, bs = _block_operands(params, m)
-        y2d = _block_qmatmul(
-            x2d.astype(cd), q_packed, s_blk, bs, spec.codebook,
-            backend, tiles,
-        ).astype(cd)
+        tp = _tp_shard(backend, n)
+        if tp is not None:
+            y2d = _shblock_qmatmul(
+                x2d.astype(cd), q_packed, s_blk, bs, spec.codebook,
+                backend, *tp, tiles)
+        else:
+            y2d = _block_qmatmul(
+                x2d.astype(cd), q_packed, s_blk, bs, spec.codebook,
+                backend, tiles)
+        y2d = y2d.astype(cd)
 
     if method in ("qlora", "loftq", "qpissa") and "lora_a" in params:
         # unmergeable additive adapter: y += x @ Aᵀ Bᵀ (the extra GEMM the

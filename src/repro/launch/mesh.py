@@ -5,20 +5,50 @@ Defined as functions (importing this module never touches jax device state).
 Single pod: 16×16 = 256 chips ('data', 'model').
 Multi-pod:  2×16×16 = 512 chips ('pod', 'data', 'model') — the 'pod' axis is
 the slow (DCN/inter-pod ICI) axis; batch shards over ('pod','data').
+
+``make_host_mesh`` builds a mesh over the *local* host devices — by default
+the degenerate 1×1 CPU mesh, but with ``data``/``model`` arguments it forms
+a real data×tensor-parallel mesh over forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``), which is how the
+multi-device test harness proves the sharded fused pipeline on CPU.
+
+``make_abstract_mesh`` mirrors the production shapes as a
+``jax.sharding.AbstractMesh`` — enough for every spec-level operation
+(``make_rules`` / ``resolve_spec`` / ``tree_shardings``) without 256 devices,
+so sharding policies for the full arch zoo are testable anywhere.
 """
 from __future__ import annotations
 
 import jax
+from jax.sharding import AbstractMesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_abstract_mesh"]
+
+_POD_SHAPE = (2, 16, 16)
+_POD_AXES = ("pod", "data", "model")
+_SINGLE_SHAPE = (16, 16)
+_SINGLE_AXES = ("data", "model")
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape = _POD_SHAPE if multi_pod else _SINGLE_SHAPE
+    axes = _POD_AXES if multi_pod else _SINGLE_AXES
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Degenerate 1×1 mesh over the local device (CPU tests / examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Mesh over local devices: 1×1 by default (CPU tests / examples).
+
+    ``data``/``model`` > 1 require that many visible devices — on CPU that
+    means forcing them before the first jax import, e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a (2, 4)
+    data×tensor-parallel mesh (what ``make test-multidevice`` does).
+    """
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_abstract_mesh(*, multi_pod: bool = False) -> AbstractMesh:
+    """AbstractMesh twin of :func:`make_production_mesh` (no devices)."""
+    shape = _POD_SHAPE if multi_pod else _SINGLE_SHAPE
+    axes = _POD_AXES if multi_pod else _SINGLE_AXES
+    return AbstractMesh(tuple(zip(axes, shape)))

@@ -45,7 +45,10 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
     layer.  ``loop`` picks the decode driver: 'scan' (default — single
     jitted on-device generation loop) or 'host' (legacy per-token Python
     loop, the parity oracle).  ``kv_cache`` overrides
-    ``cfg.kv_cache_dtype`` ('bf16' | 'int8')."""
+    ``cfg.kv_cache_dtype`` ('bf16' | 'int8').  A multi-device ``mesh`` runs
+    the whole pipeline sharded: params and KV cache are placed onto the
+    plan's NamedShardings, and the fused qmatmuls execute tensor-parallel
+    over the mesh's 'model' axis inside the jitted steps."""
     if loop not in ("scan", "host"):
         raise ValueError(f"unknown decode loop {loop!r}")
     if kv_cache is not None:
@@ -64,6 +67,12 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
 
     pre_plan = build_plan(cfg, mesh, prefill_shape,
                           kernel_backend=kernel_backend)
+    if np.prod(tuple(mesh.shape.values())) > 1:
+        # commit params/cache to the plan layout up front (codes + B rows
+        # sharded over 'model', factors replicated, cache per act rules) so
+        # prefill/decode jits run sharded instead of resharding per call
+        params = jax.device_put(params, pre_plan.in_shardings[0])
+        cache = jax.device_put(cache, pre_plan.in_shardings[2])
 
     if prompts is None:
         prompts = np.random.default_rng(seed).integers(
@@ -168,13 +177,22 @@ def main(argv=None):
                     choices=["pallas", "interpret", "ref", "dense"],
                     help="quantized-matmul dispatch backend "
                          "(default: fused pallas on TPU, ref elsewhere)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="host mesh shape, e.g. 2x4 (needs that many visible "
+                         "devices; on CPU force them via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    mesh = None
+    if args.mesh:
+        data, model = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_host_mesh(data=data, model=model)
     out = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                      gen=args.gen, kernel_backend=args.kernel_backend,
+                      gen=args.gen, mesh=mesh,
+                      kernel_backend=args.kernel_backend,
                       loop=args.loop, temperature=args.temperature,
                       kv_cache=args.kv_cache)
     print(f"[serve] backend={out['kernel_backend']} loop={out['decode_loop']} "

@@ -51,6 +51,15 @@ def _meta_backend(kernel_backend: str | None) -> str:
     return kernel_backend or f"auto:{dispatch.default_backend()}"
 
 
+def _meta_sharding(mesh, rules) -> dict:
+    """Layout record for the plan: mesh shape, model parallelism (the degree
+    the fused qmatmuls shard over inside the step's shard_scope), and the
+    policy summary (codes-shard / factors-replicate + dropped rules)."""
+    return dict(rules.summary(),
+                mesh={k: int(v) for k, v in dict(mesh.shape).items()},
+                model_parallel=int(dict(mesh.shape).get("model", 1)))
+
+
 @dataclasses.dataclass
 class StepPlan:
     name: str
@@ -174,7 +183,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
 
         def train_step(trainable, frozen, opt_state, batch):
             with activation_rules(rules.act_rules), \
-                    dispatch.backend_scope(kernel_backend):
+                    dispatch.backend_scope(kernel_backend), \
+                    dispatch.shard_scope(mesh):
                 def loss_fn(t, mb):
                     params = peft.combine(t, frozen)
                     loss, metrics = forward_train(params, cfg, mb)
@@ -226,7 +236,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
             donate_argnums=(0, 2),
             meta={"mode": cfg.quant.mode, "kind": kind,
                   "num_microbatches": n_micro,
-                  "kernel_backend": _meta_backend(kernel_backend)},
+                  "kernel_backend": _meta_backend(kernel_backend),
+                  "sharding": _meta_sharding(mesh, rules)},
         )
 
     # ---- serving ----
@@ -238,7 +249,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
 
         def prefill_step(params, batch, cache):
             with activation_rules(rules.act_rules), \
-                    dispatch.backend_scope(kernel_backend):
+                    dispatch.backend_scope(kernel_backend), \
+                    dispatch.shard_scope(mesh):
                 logits, new_cache = forward_prefill(params, cfg, batch, cache)
             return logits, new_cache
 
@@ -250,7 +262,9 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
             out_shardings=(None, cache_sh),
             rules=rules,
             donate_argnums=(2,),
-            meta={"kind": kind, "kernel_backend": _meta_backend(kernel_backend)},
+            meta={"kind": kind,
+                  "kernel_backend": _meta_backend(kernel_backend),
+                  "sharding": _meta_sharding(mesh, rules)},
         )
 
     # decode
@@ -259,7 +273,8 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
 
     def decode_step(params, batch, cache, pos):
         with activation_rules(rules.act_rules), \
-                dispatch.backend_scope(kernel_backend):
+                dispatch.backend_scope(kernel_backend), \
+                dispatch.shard_scope(mesh):
             logits, new_cache = forward_decode(params, cfg, batch, cache, pos)
         return logits, new_cache
 
@@ -271,7 +286,9 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         out_shardings=(None, cache_sh),
         rules=rules,
         donate_argnums=(2,),
-        meta={"kind": kind, "kernel_backend": _meta_backend(kernel_backend)},
+        meta={"kind": kind,
+              "kernel_backend": _meta_backend(kernel_backend),
+              "sharding": _meta_sharding(mesh, rules)},
     )
 
 
@@ -317,7 +334,8 @@ def build_generate_plan(cfg, mesh, shape_cfg, *, gen: int,
 
     def generate_step(params, tok0, cache, pos0, key, embeds0=None):
         with activation_rules(rules.act_rules), \
-                dispatch.backend_scope(kernel_backend):
+                dispatch.backend_scope(kernel_backend), \
+                dispatch.shard_scope(mesh):
             def body(carry, _):
                 tok, cache, pos, key = carry
                 if cfg.input_kind == "tokens":
@@ -345,5 +363,6 @@ def build_generate_plan(cfg, mesh, shape_cfg, *, gen: int,
         rules=rules,
         donate_argnums=(2,),
         meta={"kind": "generate", "gen": gen, "temperature": temperature,
-              "kernel_backend": _meta_backend(kernel_backend)},
+              "kernel_backend": _meta_backend(kernel_backend),
+              "sharding": _meta_sharding(mesh, rules)},
     )

@@ -31,6 +31,7 @@ if jax.default_backend() == "cpu":
     os.environ.setdefault("REPRO_CPU_EXEC", "1")
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.checkpoint import Checkpointer
 from repro.configs import SHAPES, ShapeCfg, get_config, smoke_variant
@@ -54,13 +55,19 @@ def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
     whole step — forward *and* backward: on the fused backends
     (pallas/interpret) QAT and PEFT steps run the fused custom-VJP kernels
     end to end and never materialize Ŵ (None = ambient default).
+
+    ``mesh`` may be a real data×tensor-parallel mesh: the step then runs
+    sharded (codes + B rows over 'model', dB/dA psum-reduced by the fused
+    VJPs), checkpoints save per-shard, and restore resharding onto the
+    plan's NamedShardings keeps resume bit-exact.
     """
     mesh = mesh or make_host_mesh()
     plan = build_plan(cfg, mesh, shape_cfg, lr=lr,
                       num_microbatches=num_microbatches,
                       kernel_backend=kernel_backend)
     print(f"[train] plan {plan.name} mode={plan.meta['mode']} "
-          f"kernels={plan.meta['kernel_backend']}")
+          f"kernels={plan.meta['kernel_backend']} "
+          f"mesh={plan.meta['sharding']['mesh']}")
 
     key = jax.random.PRNGKey(seed)
     values, _ = split_tree(model_init(key, cfg))
@@ -70,8 +77,14 @@ def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
     ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
     start_step = 0
     if ckpt is not None:
+        # restore straight onto the plan's shardings: on a multi-device mesh
+        # the per-shard .npy files land back on their devices (bit-exact
+        # resume); on the 1×1 host mesh this degenerates to device_put
+        ckpt_sh = {"trainable": plan.in_shardings[0],
+                   "opt": plan.in_shardings[2],
+                   "data_step": NamedSharding(mesh, PartitionSpec())}
         restored = ckpt.restore({"trainable": trainable, "opt": opt,
-                                 "data_step": 0})
+                                 "data_step": 0}, shardings=ckpt_sh)
         if restored is not None:
             trainable, opt = restored["trainable"], restored["opt"]
             start_step = int(restored["data_step"])
@@ -127,6 +140,10 @@ def main(argv=None):
     ap.add_argument("--kernel-backend", default=None,
                     choices=["pallas", "interpret", "ref", "dense"],
                     help="pin the fused-kernel dispatch backend (fwd + bwd)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="host mesh shape, e.g. 2x4 (needs that many visible "
+                         "devices; on CPU force them via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -141,9 +158,13 @@ def main(argv=None):
                              args.global_batch or shape.global_batch, "train")
     if args.mode:
         cfg = cfg.with_(quant=cfg.quant.with_(mode=args.mode))
+    mesh = None
+    if args.mesh:
+        data, model = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_host_mesh(data=data, model=model)
     t0 = time.time()
     out = run_training(cfg, shape, steps=args.steps, lr=args.lr,
-                       ckpt_dir=args.ckpt_dir,
+                       ckpt_dir=args.ckpt_dir, mesh=mesh,
                        kernel_backend=args.kernel_backend)
     dt = time.time() - t0
     print(f"[train] done: {len(out['losses'])} steps in {dt:.1f}s; "

@@ -29,6 +29,7 @@ __all__ = [
     "apply_rope",
     "shard",
     "activation_rules",
+    "current_rules",
     "stack_periods",
     "kv_quantize",
     "kv_dequantize",
@@ -213,9 +214,17 @@ def activation_rules(rules: dict | None):
         _TLS.rules = prev
 
 
+def current_rules() -> dict | None:
+    """The ambient activation rules (installed by the launcher's step fn),
+    or None outside any :func:`activation_rules` scope.  The mesh rides
+    along under the ``"__mesh__"`` key — the supported way for model code
+    (e.g. the shard_map MoE) to reach the active mesh."""
+    return getattr(_TLS, "rules", None)
+
+
 def shard(x, *axes):
     """with_sharding_constraint by logical axis names; no-op without rules."""
-    rules = getattr(_TLS, "rules", None)
+    rules = current_rules()
     if rules is None:
         return x
     mesh = rules.get("__mesh__")

@@ -79,11 +79,18 @@ def _qlinear_stack_apply(ptree, xd, quant, n, m, e_here):
     vmaps the kernel-dispatch entry point over the expert axis, so each
     expert's fused dequant-matmul runs as one batched kernel invocation —
     the (E, n, m) dequantized weight stack is never materialized.
+
+    Tensor-parallel dispatch is pinned off here: expert weights shard over
+    the *expert* axis (EP), not row-wise over 'model', so the per-expert
+    matmuls must stay local (and a shard_map under this vmap would be
+    ill-formed anyway).
     """
+    from repro.kernels import dispatch
     from repro.kernels.dispatch import qmatmul
 
     sliced = jax.tree.map(lambda v: v[:e_here], ptree)
-    return jax.vmap(lambda p, xe: qmatmul(p, xe, quant, n, m))(sliced, xd)
+    with dispatch.shard_scope(None):
+        return jax.vmap(lambda p, xe: qmatmul(p, xe, quant, n, m))(sliced, xd)
 
 
 def _n_experts_padded(mo):

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.models.common import _TLS  # ambient rules (mesh + axis mapping)
+from repro.models.common import current_rules  # ambient rules (mesh + axes)
 
 __all__ = ["moe_apply_shard_map"]
 
@@ -66,7 +66,7 @@ def moe_apply_shard_map(params, x, cfg, quant):
     e_pad = _n_experts_padded(mo)
     b, s, _ = x.shape
 
-    rules = getattr(_TLS, "rules", None) or {}
+    rules = current_rules() or {}
     mesh = rules.get("__mesh__")
     if mesh is None:  # no mesh (unit tests) -> portable path
         from repro.models.moe import _moe_apply_pjit
@@ -127,7 +127,12 @@ def moe_apply_shard_map(params, x, cfg, quant):
         recv = jax.lax.all_to_all(send, ep_axes, split_axis=0, concat_axis=1,
                                   tiled=True)  # (e_pad/n_ep, n_ep*cap_l, d)
 
-        y_loc = _expert_ffn(recv, lp, mo, d, quant)
+        # already inside this shard_map: the expert matmuls are local by
+        # construction, so fused dispatch must not open a nested shard_map
+        from repro.kernels import dispatch
+
+        with dispatch.shard_scope(None):
+            y_loc = _expert_ffn(recv, lp, mo, d, quant)
 
         back = jax.lax.all_to_all(y_loc, ep_axes, split_axis=1, concat_axis=0,
                                   tiled=True)  # (e_pad, cap_l, d)

@@ -1,0 +1,48 @@
+"""Shared harness for the opt-in 8-way host-CPU mesh suite.
+
+Usage from a test module::
+
+    from multidevice_compat import multidevice, dp_tp_mesh, single_mesh
+
+    @multidevice
+    def test_something_sharded():
+        mesh = dp_tp_mesh()          # 2 data × 4 model over forced devices
+        ...
+
+The ``multidevice`` marker (registered in pyproject.toml) is auto-skipped by
+conftest when fewer than 8 devices are visible, so tier-1 collection stays
+green on a single CPU.  The 8 devices themselves come from
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, which conftest sets
+*before the first jax import* when ``REPRO_MULTIDEVICE=1`` — the env a
+dedicated pytest session / the ``multidevice-smoke`` CI job provides
+(``make test-multidevice`` locally).
+"""
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.launch.mesh import make_host_mesh
+
+REQUIRED_DEVICES = 8
+
+multidevice = pytest.mark.multidevice
+
+
+def device_count() -> int:
+    return jax.device_count()
+
+
+def tp_mesh(model: int = REQUIRED_DEVICES):
+    """Pure tensor-parallel host mesh: (1, model)."""
+    return make_host_mesh(data=1, model=model)
+
+
+def dp_tp_mesh(data: int = 2, model: int = 4):
+    """Data × tensor-parallel host mesh (default 2×4 over the 8 devices)."""
+    return make_host_mesh(data=data, model=model)
+
+
+def single_mesh():
+    """The degenerate 1×1 mesh — the single-device parity oracle side."""
+    return make_host_mesh()

@@ -1,0 +1,260 @@
+"""Sharded-vs-single-device parity for the fused LoRDS pipeline.
+
+Everything here runs on the 8-way forced host-CPU mesh (`multidevice`
+marker, auto-skipped otherwise): the same fused kernel bodies that serve on
+TPU execute per shard under shard_map, and their results must match the
+unsharded path to fp tolerance — forward, the psum'd backward, a full
+data+tensor-parallel train step, and a 4-token on-device generate
+(including the int8 KV cache)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from multidevice_compat import dp_tp_mesh, multidevice, single_mesh, tp_mesh
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.core import QuantSpec, init_quantized_linear
+from repro.kernels import dispatch
+from repro.kernels.dispatch import qmatmul
+from repro.launch.serve import serve_batch
+from repro.launch.train import run_training
+
+N, M = 128, 160  # N divides the 4- and 8-way model axes
+
+
+def _setup(method="lords", mode="frozen", n=N, m=M, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (n, m)) * 0.02
+    spec = QuantSpec(method=method, block_size=32, rank=3, mode=mode,
+                     compute_dtype=jnp.float32)
+    params = init_quantized_linear(key, n, m, spec, w=w, use_bias=True)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (9, m))
+    return params, spec, x
+
+
+# ---------------------------------------------------------------------------
+# fused qmatmul: forward parity
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("mesh_kind", ["tp8", "dp2tp4"])
+def test_sharded_lords_forward_parity(backend, mesh_kind):
+    mesh = tp_mesh() if mesh_kind == "tp8" else dp_tp_mesh()
+    params, spec, x = _setup()
+    y0 = qmatmul(params, x, spec, N, M, backend=backend)
+    with dispatch.shard_scope(mesh):
+        y1 = qmatmul(params, x, spec, N, M, backend=backend)
+        y2 = jax.jit(
+            lambda p, xx: qmatmul(p, xx, spec, N, M, backend=backend)
+        )(params, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@multidevice
+@pytest.mark.parametrize("method", ["blockwise", "qlora"])
+def test_sharded_block_forward_parity(method):
+    mesh = tp_mesh()
+    params, spec, x = _setup(method=method)
+    y0 = qmatmul(params, x, spec, N, M, backend="interpret")
+    with dispatch.shard_scope(mesh):
+        y1 = qmatmul(params, x, spec, N, M, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@multidevice
+def test_sharded_decode_gemv_parity():
+    """M ≤ 8 tokens hit the weight-stationary decode kernel inside each
+    shard; sharded output must match the unsharded decode kernel."""
+    mesh = tp_mesh()
+    params, spec, _ = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, M))  # decode-sized
+    y0 = qmatmul(params, x, spec, N, M, backend="interpret")
+    with dispatch.shard_scope(mesh):
+        y1 = qmatmul(params, x, spec, N, M, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+@multidevice
+def test_nondividing_out_dim_falls_back_unsharded():
+    """N=100 doesn't divide the 8-way model axis: the dispatcher must take
+    the unsharded path (mirroring resolve_spec's drop), not crash."""
+    mesh = tp_mesh()
+    params, spec, x = _setup(n=100, m=96)
+    y0 = qmatmul(params, x, spec, 100, 96, backend="ref")
+    with dispatch.shard_scope(mesh):
+        y1 = qmatmul(params, x, spec, 100, 96, backend="ref")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-6, atol=1e-6)
+
+
+@multidevice
+def test_shard_scope_off_inside_scope():
+    """shard_scope(None) must disable sharded dispatch (the MoE bodies rely
+    on this to avoid nested shard_maps)."""
+    mesh = tp_mesh()
+    with dispatch.shard_scope(mesh):
+        assert dispatch.shard_info() is not None
+        with dispatch.shard_scope(None):
+            assert dispatch.shard_info() is None
+        assert dispatch.shard_info() is not None
+    assert dispatch.shard_info() is None
+
+
+# ---------------------------------------------------------------------------
+# fused qmatmul: backward parity (psum'd dx / dA)
+# ---------------------------------------------------------------------------
+
+
+def _grads(params, spec, x, diff_keys, backend, mesh=None):
+    def loss(t, xx):
+        p = dict(params, **dict(zip(diff_keys, t)))
+        return jnp.sum(qmatmul(p, xx, spec, N, M, backend=backend) ** 2)
+
+    t0 = tuple(params[k] for k in diff_keys)
+    fn = jax.jit(jax.grad(loss, argnums=(0, 1)))
+    if mesh is None:
+        return fn(t0, x)
+    with dispatch.shard_scope(mesh):
+        return fn(t0, x)
+
+
+@multidevice
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_sharded_peft_backward_parity(backend):
+    """dB stays row-local, dA and dx cross shards: the psum'd cotangents
+    must equal the single-device custom-VJP gradients."""
+    mesh = dp_tp_mesh()
+    params, spec, x = _setup(mode="peft")
+    (g0, dx0) = _grads(params, spec, x, ("b", "a"), backend)
+    (g1, dx1) = _grads(params, spec, x, ("b", "a"), backend, mesh)
+    for a_, b_ in zip(g0 + (dx0,), g1 + (dx1,)):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a_),
+                                   rtol=5e-4, atol=5e-5)
+
+
+@multidevice
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_sharded_qat_backward_parity(backend):
+    """QAT STE: dW/dB row-local, dA/dx psum'd — Eq. 4/5 cotangents match
+    the unsharded fused backward."""
+    mesh = tp_mesh()
+    params, spec, x = _setup(mode="qat")
+    (g0, dx0) = _grads(params, spec, x, ("w", "b", "a"), backend)
+    (g1, dx1) = _grads(params, spec, x, ("w", "b", "a"), backend, mesh)
+    for a_, b_ in zip(g0 + (dx0,), g1 + (dx1,)):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a_),
+                                   rtol=5e-4, atol=5e-5)
+
+
+@multidevice
+def test_sharded_blockwise_backward_parity():
+    mesh = tp_mesh()
+    params, spec, x = _setup(method="blockwise")
+    (g0, dx0) = _grads(params, spec, x, ("s_blk",), "interpret")
+    (g1, dx1) = _grads(params, spec, x, ("s_blk",), "interpret", mesh)
+    for a_, b_ in zip(g0 + (dx0,), g1 + (dx1,)):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a_),
+                                   rtol=5e-4, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# end to end: train step + generate under the mesh
+# ---------------------------------------------------------------------------
+
+
+def _smoke_cfg(arch="llama3-8b"):
+    return smoke_variant(get_config(arch)).with_(num_layers=2, d_model=64)
+
+
+@multidevice
+def test_sharded_train_step_matches_single_device():
+    """3 PEFT steps on the 2×4 mesh vs the 1×1 mesh: same losses and same
+    updated factors to fp tolerance (psum reassociation only)."""
+    cfg = _smoke_cfg()
+    shape = ShapeCfg("t", 32, 4, "train")
+    out_1 = run_training(cfg, shape, steps=3, lr=1e-3, mesh=single_mesh(),
+                         log_every=1000)
+    out_8 = run_training(cfg, shape, steps=3, lr=1e-3, mesh=dp_tp_mesh(),
+                         log_every=1000)
+    np.testing.assert_allclose(out_8["losses"], out_1["losses"],
+                               rtol=1e-4, atol=1e-5)
+    # the per-step loss trajectory is the sharp check (step k's loss runs on
+    # step k-1's updated factors).  Params themselves only get an O(lr·steps)
+    # bound: Adam normalizes by |g|, so psum-reassociation noise on a
+    # near-zero-gradient coordinate can flip its sign and move that single
+    # element by up to ~2·lr per step in either run.
+    for a_, b_ in zip(jax.tree.leaves(out_1["trainable"]),
+                      jax.tree.leaves(out_8["trainable"])):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a_),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@multidevice
+def test_sharded_qat_train_step_runs():
+    """A full QAT STE step (dW/dB local, dA psum) under the mesh learns."""
+    cfg = _smoke_cfg()
+    cfg = cfg.with_(quant=cfg.quant.with_(mode="qat"))
+    shape = ShapeCfg("t", 32, 4, "train")
+    out = run_training(cfg, shape, steps=3, lr=1e-3, mesh=dp_tp_mesh(),
+                       log_every=1000)
+    assert np.isfinite(out["losses"]).all()
+
+
+def _generate(cfg, mesh, **kw):
+    params = None  # serve_batch seeds identically from `seed`
+    prompts = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    return serve_batch(cfg, batch=2, prompt_len=8, gen=4, mesh=mesh,
+                       seed=11, prompts=prompts, **kw)
+
+
+@multidevice
+def test_sharded_generate_matches_single_device():
+    """4-token generate through prefill + the jitted on-device scan loop:
+    the sharded run must produce the same tokens as the 1×1 mesh."""
+    cfg = _smoke_cfg("qwen3-8b")
+    out_1 = _generate(cfg, single_mesh())
+    out_8 = _generate(cfg, dp_tp_mesh())
+    assert out_1["tokens"].shape == (2, 4)
+    np.testing.assert_array_equal(out_8["tokens"], out_1["tokens"])
+
+
+@multidevice
+def test_sharded_generate_int8_kv_cache_matches_single_device():
+    """The long-context serving config: int8 KV cache under the mesh —
+    quantize/dequantize per shard-resident cache block, same tokens."""
+    cfg = _smoke_cfg("qwen3-8b")
+    out_1 = _generate(cfg, single_mesh(), kv_cache="int8")
+    out_8 = _generate(cfg, dp_tp_mesh(), kv_cache="int8")
+    assert out_1["kv_cache_dtype"] == "int8"
+    np.testing.assert_array_equal(out_8["tokens"], out_1["tokens"])
+
+
+@multidevice
+def test_sharded_generate_fused_interpret_backend():
+    """The fused kernel bodies themselves (interpret mode) inside the
+    sharded generation loop — the code path TPU serving runs."""
+    cfg = _smoke_cfg("qwen3-8b")
+    out_1 = _generate(cfg, single_mesh(), kernel_backend="interpret")
+    out_8 = _generate(cfg, tp_mesh(), kernel_backend="interpret")
+    np.testing.assert_array_equal(out_8["tokens"], out_1["tokens"])
+
+
+@multidevice
+def test_plan_meta_reports_sharding():
+    from repro.launch.steps import build_plan
+
+    cfg = _smoke_cfg()
+    mesh = dp_tp_mesh()
+    plan = build_plan(cfg, mesh, ShapeCfg("t", 32, 4, "train"))
+    sh = plan.meta["sharding"]
+    assert sh["mesh"] == {"data": 2, "model": 4}
+    assert sh["model_parallel"] == 4
+    assert sh["lords_factors"] == "replicated"

@@ -1,0 +1,233 @@
+"""Sharding-rule resolution over the full arch zoo — pure spec level.
+
+No multi-device runtime needed: ``make_abstract_mesh`` mirrors the 16×16 and
+2×16×16 production meshes as AbstractMeshes, and ``resolve_spec`` /
+``tree_pspecs`` only consult ``mesh.shape``.  Property cases run through the
+optional-hypothesis shim (they skip cleanly on minimal containers)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # optional-dep shim
+from jax.sharding import PartitionSpec
+
+from repro.configs import get_config, list_configs
+from repro.distributed.sharding import (
+    estimate_quantized_gb,
+    make_rules,
+    resolve_spec,
+    tree_pspecs,
+)
+from repro.launch.mesh import make_abstract_mesh
+from repro.models import model_init, split_tree
+
+MESHES = {
+    "16x16": make_abstract_mesh(),
+    "2x16x16": make_abstract_mesh(multi_pod=True),
+}
+
+ALL_ARCHS = sorted(list_configs())
+
+# eval_shape of the *full-size* archs is pure tracing but not free (~10s for
+# the biggest); cache one (values, axes) pair per arch across all mesh cases
+_TREES: dict = {}
+
+
+def _arch_tree(arch):
+    if arch not in _TREES:
+        cfg = get_config(arch)
+        tree = jax.eval_shape(lambda k: model_init(k, cfg),
+                              jax.random.PRNGKey(0))
+        _TREES[arch] = (cfg,) + split_tree(tree)
+    return _TREES[arch]
+
+
+def _spec_leaves(specs):
+    return jax.tree.leaves(
+        specs, is_leaf=lambda s: isinstance(s, PartitionSpec))
+
+
+def _check_spec(spec, shape, mesh):
+    """A PartitionSpec is valid for (shape, mesh) iff every named axis
+    exists, no mesh axis is used twice, and the sharded dims divide."""
+    used = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = 1
+        for ax in axes:
+            assert ax in mesh.shape, f"unknown mesh axis {ax!r} in {spec}"
+            assert ax not in used, f"mesh axis {ax!r} reused in {spec}"
+            used.append(ax)
+            size *= mesh.shape[ax]
+        assert dim % size == 0, f"{spec} does not divide shape {shape}"
+
+
+# ---------------------------------------------------------------------------
+# full arch zoo × production meshes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mesh_name", sorted(MESHES))
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_arch_weight_specs_valid(arch, mesh_name):
+    """tree_shardings over every arch yields specs the production meshes
+    accept: real axes, no reuse, divisibility (or a recorded drop)."""
+    mesh = MESHES[mesh_name]
+    cfg, values, axes = _arch_tree(arch)
+    rules = make_rules(cfg, mesh, "train")
+    dropped: list = []
+    specs = tree_pspecs(axes, values, rules.weight_rules, mesh, dropped)
+    spec_leaves = _spec_leaves(specs)
+    value_leaves = jax.tree.leaves(values)
+    assert len(spec_leaves) == len(value_leaves)
+    for spec, val in zip(spec_leaves, value_leaves):
+        _check_spec(spec, val.shape, mesh)
+    # every drop is a genuine non-divisibility, not a resolver bug
+    for name, dim, axes_used in dropped:
+        size = 1
+        for ax in axes_used:
+            size *= mesh.shape[ax]
+        assert dim % size != 0 or size == 1
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_lords_factors_replicate_codes_shard(arch):
+    """The paper's asymmetry on the mesh: rank-r dims never shard (B/A ride
+    replicated next to their codes) and at least one packed-codes dim
+    actually lands on 'model' for every arch at TP=16."""
+    mesh = MESHES["16x16"]
+    cfg, values, axes = _arch_tree(arch)
+    rules = make_rules(cfg, mesh, "train")
+    specs = tree_pspecs(axes, values, rules.weight_rules, mesh)
+    rank_entries, model_hits = [], 0
+    for ax_tuple, spec in zip(
+            jax.tree.leaves(axes,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(i, (str, type(None))) for i in x)),
+            _spec_leaves(specs)):
+        padded = tuple(spec) + (None,) * len(ax_tuple)
+        for name, entry in zip(ax_tuple, padded):
+            if name == "lords_rank":
+                rank_entries.append(entry)
+            flat = (entry,) if isinstance(entry, str) else tuple(entry or ())
+            if "model" in flat:
+                model_hits += 1
+    assert rank_entries, f"{arch}: no LoRDS factors in the tree"
+    assert all(e is None for e in rank_entries), \
+        f"{arch}: rank dim sharded: {rank_entries}"
+    assert model_hits > 0, f"{arch}: nothing sharded over 'model' at TP=16"
+
+
+def test_2d_policy_activates_for_giant_models():
+    """llama3-405b exceeds the per-device budget under 1-D TP at 16-way, so
+    make_rules flips to the 2-D layout (weights' other dim on 'data')."""
+    mesh = MESHES["16x16"]
+    cfg = get_config("llama3-405b")
+    assert estimate_quantized_gb(cfg) / 16 > 8.0
+    rules = make_rules(cfg, mesh, "train", budget_gb=8.0)
+    assert rules.weight_rules["embed"] == "data"
+    small = get_config("llama3-8b")
+    rules_small = make_rules(small, mesh, "train", budget_gb=8.0)
+    assert rules_small.weight_rules["embed"] is None
+
+
+def test_long_context_decode_policy_shards_cache_seq():
+    """batch < DP pulls the idle data axes onto the KV cache sequence dim."""
+    mesh = MESHES["2x16x16"]
+    cfg = get_config("llama3-8b")
+    rules = make_rules(cfg, mesh, "decode", seq_shard_cache=True)
+    assert rules.act_rules["cache_seq"] == ("pod", "data", "model")
+    assert rules.act_rules["batch"] is None
+    rules_n = make_rules(cfg, mesh, "decode", seq_shard_cache=False)
+    assert rules_n.act_rules["cache_seq"] == "model"
+
+
+def test_policy_summary_reports_layout():
+    mesh = MESHES["16x16"]
+    cfg = get_config("llama3-8b")
+    s = make_rules(cfg, mesh, "train").summary()
+    assert s["lords_factors"] == "replicated"
+    assert "model" in s["weight_axes"]
+
+
+# ---------------------------------------------------------------------------
+# resolver properties (hypothesis; skipped when not installed)
+# ---------------------------------------------------------------------------
+
+_PROP_MESH = make_abstract_mesh(multi_pod=True)  # pod=2, data=16, model=16
+_RULE_CHOICES = (None, "model", "data", "pod", ("data", "model"),
+                 ("pod", "data"), ("pod", "data", "model"), "bogus")
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_resolve_spec_never_reuses_axis_property(seed):
+    rng = np.random.default_rng(seed)
+    ndim = int(rng.integers(1, 5))
+    names = [f"d{i}" for i in range(ndim)]
+    shape = tuple(int(rng.integers(1, 64)) * int(rng.choice((1, 2, 16)))
+                  for _ in range(ndim))
+    rules = {n: _RULE_CHOICES[int(rng.integers(len(_RULE_CHOICES)))]
+             for n in names}
+    dropped: list = []
+    spec = resolve_spec(tuple(names), shape, rules, _PROP_MESH, dropped)
+    used = []
+    for entry in spec:
+        for ax in ((entry,) if isinstance(entry, str) else tuple(entry or ())):
+            assert ax in _PROP_MESH.shape
+            assert ax not in used, f"axis {ax} reused in {spec}"
+            used.append(ax)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_resolve_spec_drops_are_recorded_property(seed):
+    """Every dim whose rule named live mesh axes but didn't divide must end
+    as None in the spec AND appear in policy.dropped — never silently."""
+    rng = np.random.default_rng(seed)
+    ndim = int(rng.integers(1, 5))
+    names = [f"d{i}" for i in range(ndim)]
+    shape = tuple(int(rng.integers(1, 512)) for _ in range(ndim))
+    rules = {n: _RULE_CHOICES[int(rng.integers(len(_RULE_CHOICES)))]
+             for n in names}
+    dropped: list = []
+    spec = resolve_spec(tuple(names), shape, rules, _PROP_MESH, dropped)
+    recorded = {name for name, _, _ in dropped}
+    used: set = set()
+    for name, dim, entry in zip(names, shape, spec):
+        rule = rules.get(name)
+        if rule is None or rule == "bogus":
+            assert entry is None
+            continue
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        live = [ax for ax in axes if ax in _PROP_MESH.shape
+                and ax not in used]
+        size = int(np.prod([_PROP_MESH.shape[ax] for ax in live])) \
+            if live else 1
+        if live and size > 1 and dim % size == 0:
+            assert entry is not None
+            used.update(live)
+        else:
+            assert entry is None
+            if live:
+                assert name in recorded, \
+                    f"drop of {name} (dim {dim}) not recorded"
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_resolve_spec_sharded_dims_always_divide_property(seed):
+    rng = np.random.default_rng(seed)
+    ndim = int(rng.integers(1, 4))
+    names = [f"d{i}" for i in range(ndim)]
+    shape = tuple(int(rng.integers(1, 2048)) for _ in range(ndim))
+    rules = {n: _RULE_CHOICES[int(rng.integers(len(_RULE_CHOICES)))]
+             for n in names}
+    spec = resolve_spec(tuple(names), shape, rules, _PROP_MESH)
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = int(np.prod([_PROP_MESH.shape[ax] for ax in axes]))
+        assert size > 1 and dim % size == 0

@@ -4,16 +4,17 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
-	serve-smoke serve-smoke-interpret train-smoke-interpret
+	bench-attn serve-smoke serve-smoke-interpret train-smoke-interpret
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
 
-# every qmatmul forced through the Pallas interpreter: executes the fused
-# kernel bodies on CPU
-test-interpret:  ## kernel + dispatch + train-bwd suites in interpret mode
+# every qmatmul/qattention forced through the Pallas interpreter: executes
+# the fused kernel bodies on CPU
+test-interpret:  ## kernel + dispatch + train-bwd + attention suites in interpret mode
 	REPRO_KERNEL_BACKEND=interpret $(PY) -m pytest -x -q \
-		tests/test_dispatch.py tests/test_kernels.py tests/test_train_bwd.py
+		tests/test_dispatch.py tests/test_kernels.py \
+		tests/test_train_bwd.py tests/test_attn_fastpath.py
 
 # the sharded suite: conftest forces 8 host CPU devices (REPRO_MULTIDEVICE=1
 # must be set before pytest imports jax), builds real data×tensor-parallel
@@ -41,6 +42,9 @@ serve-smoke-interpret:  ## serve smoke with fused kernels in interpret mode + in
 
 bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
 	$(PY) -m benchmarks.bench_train
+
+bench-attn:      ## attention fast path: fused flash kernels vs einsum oracle + cache bytes/token -> BENCH_attn.json
+	$(PY) -m benchmarks.bench_attn
 
 # training path through the Pallas interpreter: fused forward AND the fused
 # transposed/grad-reduction backward kernels execute on CPU inside jitted

@@ -1,0 +1,127 @@
+"""Attention fast-path benchmark — fused flash kernels vs the einsum oracle.
+
+Times the two serving-critical attention primitives through
+``dispatch.qattention`` at three sequence lengths, fused (interpret-mode
+Pallas kernel bodies — the code TPU runs) against the materializing einsum
+ref path, and derives the analytic per-token decode cache traffic for bf16
+vs int8 KV (the hardware-independent roofline content; CPU timings are for
+plumbing and ordering, not speed).  Writes ``BENCH_attn.json``:
+
+    PYTHONPATH=src python -m benchmarks.bench_attn [--batch 2] [--heads 8]
+        [--kv-heads 2] [--head-dim 64] [--seqs 128,256,512]
+
+Also runnable via ``python -m benchmarks.run attn`` / ``make bench-attn``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import benchmarks.common  # noqa: F401  (sets REPRO_CPU_EXEC before jax use)
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import qattention
+from repro.models.common import kv_quantize
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args).block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def cache_bytes_per_token(cap: int, nkv: int, hd: int) -> dict:
+    """Decode-step cache HBM reads per sequence: K+V, bf16 vs int8+scale."""
+    return {
+        "bf16": 2 * cap * nkv * hd * 2,
+        "int8": 2 * cap * nkv * (hd * 1 + 4),   # codes + one f32 scale
+    }
+
+
+def bench(*, batch: int = 2, heads: int = 8, kv_heads: int = 2,
+          head_dim: int = 64, seqs=(128, 256, 512), iters: int = 3) -> dict:
+    scale = 1.0 / head_dim ** 0.5
+    prefill, decode = {}, {}
+    for s in seqs:
+        q = jax.random.normal(jax.random.PRNGKey(0),
+                              (batch, s, heads, head_dim), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(1),
+                              (batch, s, kv_heads, head_dim), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(2),
+                              (batch, s, kv_heads, head_dim), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                               (batch, s))
+        row = {}
+        for name, backend in (("fused", "interpret"), ("einsum", "ref")):
+            fn = jax.jit(lambda qq, kk, vv, pp, b=backend: qattention(
+                "prefill", qq, kk, vv, pp, logit_scale=scale, backend=b))
+            row[f"{name}_ms"] = round(_time(fn, q, k, v, pos,
+                                            iters=iters) * 1e3, 3)
+        prefill[str(s)] = row
+
+        qd = jax.random.normal(jax.random.PRNGKey(3),
+                               (batch, heads, head_dim), jnp.float32)
+        kcod, ks = kv_quantize(k)
+        vcod, vs = kv_quantize(v)
+        posd = jnp.full((batch,), s - 1, jnp.int32)
+        row = {}
+        for kv, args in (("bf16", (qd, k, v, posd)),
+                         ("int8", (qd, kcod, vcod, posd, ks, vs))):
+            for name, backend in (("fused", "interpret"), ("einsum", "ref")):
+                fn = jax.jit(lambda *a, b=backend: qattention(
+                    "decode", *a, logit_scale=scale, backend=b))
+                t = _time(fn, *args, iters=iters)
+                row[f"{name}_kv_{kv}_tok_s"] = round(batch / t, 1)
+        row["bytes_per_token"] = cache_bytes_per_token(s, kv_heads, head_dim)
+        decode[str(s)] = row
+    return {
+        "batch": batch, "heads": heads, "kv_heads": kv_heads,
+        "head_dim": head_dim, "seqs": list(seqs),
+        "prefill": prefill, "decode": decode,
+    }
+
+
+def run(report):
+    """benchmarks.run entry point: small shapes, BENCH_attn.json."""
+    rec = bench(seqs=(64, 128, 256), iters=2)
+    for s, row in rec["prefill"].items():
+        report(f"attn/prefill_ms/s{s}", row["fused_ms"],
+               f"einsum_ms={row['einsum_ms']}")
+    for s, row in rec["decode"].items():
+        bpt = row["bytes_per_token"]
+        report(f"attn/decode_tok_s/s{s}", row["fused_kv_int8_tok_s"],
+               f"fused_bf16={row['fused_kv_bf16_tok_s']} "
+               f"einsum_int8={row['einsum_kv_int8_tok_s']} "
+               f"bytes_bf16={bpt['bf16']} bytes_int8={bpt['int8']}")
+    with open("BENCH_attn.json", "w") as f:
+        json.dump(rec, f, indent=1)
+    report("attn/json", 0.0, "wrote BENCH_attn.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--heads", type=int, default=8)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--seqs", default="128,256,512")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_attn.json")
+    args = ap.parse_args(argv)
+    seqs = tuple(int(s) for s in args.seqs.split(","))
+    rec = bench(batch=args.batch, heads=args.heads, kv_heads=args.kv_heads,
+                head_dim=args.head_dim, seqs=seqs, iters=args.iters)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec["decode"], indent=1))
+    print(f"[bench_attn] -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,12 +16,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import benchmarks.common  # noqa: F401  (sets REPRO_CPU_EXEC before jax use)
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, smoke_variant
+from repro.configs import ShapeCfg, get_config, smoke_variant
 from repro.core.quantize import codes_per_byte
 from repro.models import cache_init, model_init
 
@@ -65,14 +66,67 @@ def cache_bytes(cfg, batch: int, capacity: int) -> int:
                for l in jax.tree.leaves(ctree))
 
 
+def paired_decode_tok_s(cfg, *, batch: int, prompt_len: int, gen: int,
+                        backend: str | None, reps: int) -> dict:
+    """Drift-free bf16-vs-int8 decode comparison: compile both KV formats'
+    generation loops up front, then *interleave* their executions and
+    min-time each — sequential serve_batch calls let allocator warm-up and
+    background load drift bias whichever format runs second, which is
+    exactly how the pre-fusion int8 'regression' hid inside noise."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_generate_plan
+    from repro.models import cache_init, model_init, split_tree
+
+    mesh = make_host_mesh()
+    cap = prompt_len + gen
+    params, _ = split_tree(model_init(jax.random.PRNGKey(0), cfg))
+    tok0 = jnp.zeros((batch,), jnp.int32)
+    pos0 = jnp.full((batch,), prompt_len, jnp.int32)
+    key = jax.random.PRNGKey(1)
+    best = {}
+    with mesh:
+        fns, caches = {}, {}
+        for kv in ("bf16", "int8"):
+            c = cfg.with_(kv_cache_dtype=kv)
+            plan = build_generate_plan(
+                c, mesh, ShapeCfg("bench", cap, batch, "decode"), gen=gen,
+                kernel_backend=backend)
+            cache, _ = split_tree(cache_init(c, batch, cap))
+            caches[kv] = [jax.tree.map(jnp.copy, cache) for _ in range(reps)]
+            fns[kv] = jax.jit(plan.step_fn, donate_argnums=(2,)).lower(
+                params, tok0, cache, pos0, key, None).compile()
+            best[kv] = float("inf")
+        for r in range(reps):
+            for kv in ("bf16", "int8"):
+                t0 = time.perf_counter()
+                toks, _ = fns[kv](params, tok0, caches[kv][r], pos0, key,
+                                  None)
+                jax.block_until_ready(toks)
+                best[kv] = min(best[kv], time.perf_counter() - t0)
+    return {kv: batch * gen / t for kv, t in best.items()}
+
+
 def bench(arch: str = "llama3-8b", *, smoke: bool = True, batch: int = 2,
           prompt_len: int = 16, gen: int = 8,
-          backend: str | None = None) -> dict:
+          backend: str | None = None, reps: int = 1,
+          head_dim: int | None = None,
+          assert_int8: bool = False) -> dict:
+    """``reps`` > 1 re-times decode via :func:`paired_decode_tok_s` (both
+    KV formats' compiled loops interleaved, min-timed).  ``assert_int8``
+    enforces the fused-attention roofline ordering: with the cache read
+    in-kernel at int8 width, int8 KV decode must be at least as fast as
+    bf16 (the pre-fusion einsum path *inverted* this by dequantizing the
+    whole cache out of kernel every step).  ``head_dim`` overrides the
+    smoke config's head_dim — the assertion config uses 64 so the decode
+    step is attention-traffic-bound, the regime the roofline claim is
+    about, rather than dominated by the tiny smoke model's linears."""
     from repro.launch.serve import serve_batch
 
     cfg = get_config(arch)
     if smoke:
         cfg = smoke_variant(cfg)
+    if head_dim is not None:
+        cfg = cfg.with_(head_dim=head_dim)
     capacity = prompt_len + gen
     wb = weight_stream_bytes(cfg)
     roofline = {
@@ -97,22 +151,41 @@ def bench(arch: str = "llama3-8b", *, smoke: bool = True, batch: int = 2,
             "decode_tok_s": round(out["decode_tok_s"], 3),
             "decode_loop": out["decode_loop"],
             "kernel_backend": out["kernel_backend"],
+            "attention": out["attention"],
         }
+    if reps > 1:
+        paired = paired_decode_tok_s(cfg, batch=batch,
+                                     prompt_len=prompt_len, gen=gen,
+                                     backend=backend, reps=reps)
+        for kv, tok_s in paired.items():
+            runs[kv]["decode_tok_s"] = round(tok_s, 3)
+            runs[kv]["timing"] = f"paired-min-of-{reps}"
+    if assert_int8:
+        assert runs["int8"]["decode_tok_s"] >= runs["bf16"]["decode_tok_s"], (
+            "int8 KV decode regressed below bf16 despite the fused "
+            f"attention path: {runs}")
     return {
         "arch": cfg.name, "smoke": smoke, "batch": batch,
         "prompt_len": prompt_len, "gen": gen, "capacity": capacity,
-        "roofline": roofline, "runs": runs,
+        "reps": reps, "roofline": roofline, "runs": runs,
     }
 
 
 def run(report):
-    """benchmarks.run entry point: smoke-scale serve + BENCH_serve.json."""
-    rec = bench()
+    """benchmarks.run entry point: smoke-scale serve + BENCH_serve.json.
+
+    Pins the interpret backend so the fused attention + decode-GEMV kernel
+    bodies execute, interleave-min-times 5 reps per KV format at the
+    attention-bound shape (head_dim 64, capacity 128), and *asserts*
+    int8-KV decode >= bf16 — the roofline ordering the fused path restores
+    is enforced, not aspirational."""
+    rec = bench(backend="interpret", reps=5, prompt_len=112, gen=16,
+                head_dim=64, assert_int8=True)
     rl = rec["roofline"]
     for kv, r in rec["runs"].items():
         report(f"serve/decode_tok_s/kv_{kv}", r["decode_tok_s"],
                f"prefill_ms={r['prefill_ms']} loop={r['decode_loop']} "
-               f"backend={r['kernel_backend']}")
+               f"backend={r['kernel_backend']} attention={r['attention']}")
     for name, byts in rl["bytes_per_token"].items():
         report(f"serve/bytes_per_token/{name}", float(byts),
                f"roofline_us_v5e={byts/819e3:.2f}")
@@ -131,11 +204,21 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--backend", default=None,
                     choices=["pallas", "interpret", "ref", "dense"])
+    ap.add_argument("--reps", type=int, default=1,
+                    help="interleave-min-time the compiled generate loops "
+                         "over N reps per KV format")
+    ap.add_argument("--head-dim", type=int, default=None,
+                    help="override the config's head_dim (the int8>=bf16 "
+                         "assertion wants an attention-bound shape)")
+    ap.add_argument("--assert-int8", action="store_true",
+                    help="fail unless int8 KV decode tok/s >= bf16 "
+                         "(use with a fused backend)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     rec = bench(args.arch, smoke=not args.full, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen,
-                backend=args.backend)
+                backend=args.backend, reps=args.reps,
+                head_dim=args.head_dim, assert_int8=args.assert_int8)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     rl = rec["roofline"]["bytes_per_token"]

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
                           bytes/token roofline) -> BENCH_serve.json
   train        §3.3/3.4 — training fast path (fused vs dequant backward:
                           step ms, tokens/s, bwd bytes) -> BENCH_train.json
+  attn         §4.4     — attention fast path (fused flash kernels vs the
+                          einsum oracle: prefill ms, decode tok/s, cache
+                          bytes/token bf16 vs int8) -> BENCH_attn.json
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ import sys
 import time
 
 TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
-          "error_ratio", "serve", "train"]
+          "error_ratio", "serve", "train", "attn"]
 
 
 def main() -> None:

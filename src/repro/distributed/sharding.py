@@ -37,8 +37,10 @@ class ShardingPolicy:
     def summary(self) -> dict:
         """Compact layout record (StepPlan.meta / checkpoint manifests):
         which mesh axes carry weights, whether the LoRDS factors replicate
-        (the codes-shard / factors-replicate invariant), and how many rules
-        were dropped to divisibility."""
+        (the codes-shard / factors-replicate invariant), whether the fused
+        attention kernels can run head-sharded under shard_map (the
+        head-local, psum-free qattention route needs the heads act rule on
+        'model'), and how many rules were dropped to divisibility."""
         used = sorted({ax for rule in self.weight_rules.values() if rule
                        for ax in ((rule,) if isinstance(rule, str)
                                   else tuple(rule))})
@@ -47,6 +49,9 @@ class ShardingPolicy:
             "lords_factors": ("replicated"
                               if self.weight_rules.get("lords_rank") is None
                               else "sharded"),
+            "attention_heads": ("model-sharded"
+                                if self.act_rules.get("heads") == "model"
+                                else "replicated"),
             "dropped": len(self.dropped),
         }
 

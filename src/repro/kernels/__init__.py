@@ -1,7 +1,10 @@
 # Fused dequant-matmul kernels — forward (lords_matmul, lords_decode,
 # block_matmul, lut_quantize) and backward (lords_matmul_t: transposed
 # dequant-matmul for dx; lords_grad: tiled grad reductions for dB/dA/dW) —
-# their pure-jnp oracles (ref), thin platform wrappers (ops), and the
-# QuantSpec-aware dispatch layer every quantized linear routes through
-# (dispatch.qmatmul).  Import dispatch lazily from repro.core to keep the
-# kernels<->core dependency one-directional at import time.
+# plus the fused attention family (attn_prefill: streaming-softmax flash
+# causal prefill; attn_decode: quantized-KV GQA/MLA flash decode), their
+# pure-jnp oracles (ref), thin platform wrappers (ops), and the
+# QuantSpec-aware dispatch layer every quantized linear and hot attention
+# routes through (dispatch.qmatmul / dispatch.qattention).  Import dispatch
+# lazily from repro.core to keep the kernels<->core dependency
+# one-directional at import time.

@@ -1,0 +1,269 @@
+"""Fused quantized-KV decode attention Pallas kernels (GQA + MLA).
+
+The decode regime mirrors :mod:`repro.kernels.lords_decode`: a handful of
+query rows (the g = nh/nkv head-group per KV head for GQA, all nh heads for
+MLA) against the full KV cache, so per-token cost is the time to *stream
+the cache once*.  Both kernels walk the cache sequence axis innermost with
+the flash-2 online-softmax recurrence and read the cache tiles **as
+stored**: an int8 cache is DMA'd at int8 width and the per-(token, head)
+scales are folded into the score / output dot-products in VMEM —
+
+    score(g, j) = logit_scale · (q · codes_j) · k_scale_j
+    out(g)     += (p ⊙ v_scale) · codes_v
+
+— so dequantization adds one VPU multiply per tile instead of a full-cache
+bf16 temporary in HBM (the reason the portable einsum path made int8 KV
+*slower* than bf16 despite its ~2x bytes/token advantage).  A bf16 cache
+runs the same kernels with the scale operands absent.
+
+Layouts — the caches are indexed **in their stored layouts** via the
+BlockSpec index maps (a host-side transpose would force XLA to copy the
+entire cache every decode step, tripling the traffic the kernels exist to
+minimize):
+  GQA:  q (b, nkv, g8, hd) · k/v (b, S, nkv, hd) [+ scales (b, S, nkv)],
+        grid (b, nkv, S/bs) — one head-group per grid cell, q VMEM-resident,
+        KV tiles (1, bs, 1, hd) sliced straight from the cache arrays
+  MLA:  q_lat (b, nh8, L) / q_rope (b, nh8, R) against the absorbed cache
+        c (b, S, L) [+ c_scale (b, S)] and k_rope (b, S, R),
+        grid (b, S/bs) — output *is* the weighted latent (b, nh8, L)
+
+``kmask`` (b, S) f32 is the additive liveness mask (0 live / -1e30 dead):
+positions beyond each sequence's ``pos`` and cache padding never
+contribute, with the same finite-NEG_INF / alpha-correction NaN hygiene as
+:mod:`repro.kernels.attn_prefill`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import ATTN_NEG_INF
+
+__all__ = ["attn_decode_gqa_pallas", "attn_decode_mla_pallas",
+           "DECODE_ROWS"]
+
+DECODE_ROWS = 8     # sublane multiple query rows are padded to
+_STAT_LANES = 128
+
+
+def _online_update(s, v, m_ref, l_ref, acc_ref):
+    """Shared flash-2 step: fold the (rows, bs) score tile ``s`` and value
+    tile ``v`` into the running (m, l, acc) statistics."""
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_curr = jnp.max(s, axis=1, keepdims=True)
+    m_next = jnp.maximum(m_prev, m_curr)
+    alpha = jnp.exp(m_prev - m_next)
+    p = jnp.exp(s - m_next)
+    l_next = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = jnp.broadcast_to(m_next, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_next, l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return p
+
+
+def _gqa_kernel(q_ref, k_ref, v_ref, mask_ref, *rest, scale, nk, quantized):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, ATTN_NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (g8, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                   # (bs, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # (g8, bs)
+    if quantized:
+        s = s * ks_ref[0].reshape(1, -1)                     # (bs, 1) scales
+    s = s + mask_ref[...]                                    # (1, bs) additive
+    v = v_ref[0, :, 0].astype(jnp.float32)                   # (bs, hdv)
+    if quantized:
+        v = v * vs_ref[0]                                    # (bs, 1)
+    _online_update(s, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        l = l_ref[:, :1]
+        inv = jnp.where(l == 0.0, 1.0, 1.0 / l)
+        o_ref[0, 0] = acc_ref[...] * inv
+
+
+@functools.partial(
+    jax.jit, static_argnames=("logit_scale", "bs", "interpret"))
+def attn_decode_gqa_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kmask: jnp.ndarray,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    *,
+    logit_scale: float,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q (b, nkv, g8, hd) vs cache k/v (b, S, nkv, hd) → (b, nkv, g8, hd_v).
+
+    ``kmask`` (b, S) f32 additive liveness; ``k_scale``/``v_scale``
+    (b, S, nkv) dequantize int8 caches in-kernel (pass both or neither).
+    The cache operands keep the storage layout — the index maps slice
+    per-head tiles, so no transposed copy of the cache ever exists.
+    g8 must be a multiple of 8 and S of ``bs`` — the dispatch layer pads.
+    """
+    b, nkv, g8, hd = q.shape
+    cap = k.shape[1]
+    hdv = v.shape[-1]
+    quantized = k_scale is not None
+    if quantized != (v_scale is not None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    bs = min(bs, cap)
+    if cap % bs or g8 % DECODE_ROWS:
+        raise ValueError(
+            f"cache length {cap} % tile {bs} or rows {g8} % {DECODE_ROWS}")
+    nk = cap // bs
+    grid = (b, nkv, nk)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g8, hd), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, ki: (bi, ki, hi, 0)),
+        pl.BlockSpec((1, bs, 1, hdv), lambda bi, hi, ki: (bi, ki, hi, 0)),
+        pl.BlockSpec((1, bs), lambda bi, hi, ki: (bi, ki)),
+    ]
+    args = [q, k, v, kmask]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs, 1), lambda bi, hi, ki: (bi, ki, hi)),
+            pl.BlockSpec((1, bs, 1), lambda bi, hi, ki: (bi, ki, hi)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    kern = functools.partial(
+        _gqa_kernel, scale=float(logit_scale), nk=nk, quantized=quantized)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g8, hdv),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g8, hdv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((g8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((g8, hdv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+
+def _mla_kernel(ql_ref, qr_ref, c_ref, kr_ref, mask_ref, *rest, scale, nk,
+                quantized):
+    if quantized:
+        cs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, ATTN_NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)                       # (nh8, L)
+    qr = qr_ref[0].astype(jnp.float32)                       # (nh8, R)
+    c = c_ref[0].astype(jnp.float32)                         # (bs, L)
+    kr = kr_ref[0].astype(jnp.float32)                       # (bs, R)
+    s_lat = jax.lax.dot_general(
+        ql, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # (nh8, bs)
+    if quantized:
+        s_lat = s_lat * cs_ref[...]                          # (1, bs) scales
+    s = s_lat + jax.lax.dot_general(
+        qr, kr, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * scale + mask_ref[...]
+    if quantized:
+        c = c * cs_ref[...].reshape(-1, 1)
+    _online_update(s, c, m_ref, l_ref, acc_ref)
+
+    @pl.when(ki == nk - 1)
+    def _store():
+        l = l_ref[:, :1]
+        inv = jnp.where(l == 0.0, 1.0, 1.0 / l)
+        o_ref[0] = acc_ref[...] * inv
+
+
+@functools.partial(
+    jax.jit, static_argnames=("logit_scale", "bs", "interpret"))
+def attn_decode_mla_pallas(
+    q_lat: jnp.ndarray,
+    q_rope: jnp.ndarray,
+    c: jnp.ndarray,
+    k_rope: jnp.ndarray,
+    kmask: jnp.ndarray,
+    c_scale: jnp.ndarray | None = None,
+    *,
+    logit_scale: float,
+    bs: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Absorbed-latent MLA decode: q_lat (b, nh8, L) / q_rope (b, nh8, R)
+    vs c (b, S, L) + k_rope (b, S, R) → weighted latent (b, nh8, L) f32.
+
+    ``c_scale`` (b, S) dequantizes an int8 latent cache in-kernel.
+    """
+    b, nh8, lat = q_lat.shape
+    cap = c.shape[1]
+    rope = q_rope.shape[-1]
+    quantized = c_scale is not None
+    bs = min(bs, cap)
+    if cap % bs or nh8 % DECODE_ROWS:
+        raise ValueError(
+            f"cache length {cap} % tile {bs} or rows {nh8} % {DECODE_ROWS}")
+    nk = cap // bs
+    grid = (b, nk)
+
+    in_specs = [
+        pl.BlockSpec((1, nh8, lat), lambda bi, ki: (bi, 0, 0)),
+        pl.BlockSpec((1, nh8, rope), lambda bi, ki: (bi, 0, 0)),
+        pl.BlockSpec((1, bs, lat), lambda bi, ki: (bi, ki, 0)),
+        pl.BlockSpec((1, bs, rope), lambda bi, ki: (bi, ki, 0)),
+        pl.BlockSpec((1, bs), lambda bi, ki: (bi, ki)),
+    ]
+    args = [q_lat, q_rope, c, k_rope, kmask]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, bs), lambda bi, ki: (bi, ki)))
+        args.append(c_scale.astype(jnp.float32))
+
+    kern = functools.partial(
+        _mla_kernel, scale=float(logit_scale), nk=nk, quantized=quantized)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, nh8, lat), lambda bi, ki: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh8, lat), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((nh8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((nh8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((nh8, lat), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)

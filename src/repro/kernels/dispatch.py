@@ -90,6 +90,12 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
 from repro.kernels import ref
+from repro.kernels.attn_decode import (
+    DECODE_ROWS,
+    attn_decode_gqa_pallas,
+    attn_decode_mla_pallas,
+)
+from repro.kernels.attn_prefill import attn_prefill_pallas
 from repro.kernels.block_matmul import block_matmul_pallas
 from repro.kernels.lords_decode import DECODE_M_MAX, lords_decode_pallas
 from repro.kernels.lords_grad import block_grad_pallas, lords_grad_pallas
@@ -103,15 +109,19 @@ from repro.kernels.lut_quantize import lut_quantize_pallas
 __all__ = [
     "BACKENDS",
     "qmatmul",
+    "qattention",
     "default_backend",
+    "fused_backend_active",
     "backend_scope",
     "shard_scope",
     "shard_info",
     "tile_for",
+    "attn_tile_for",
     "lookup_tiles",
     "register_tiles",
     "autotune_qmatmul",
     "autotune_qmatmul_bwd",
+    "autotune_qattention",
     "autotune_table",
     "load_autotune_table",
     "save_autotune_table",
@@ -164,6 +174,13 @@ def backend_scope(backend: str | None):
 
 def _resolve(backend: str | None) -> str:
     return backend if backend is not None else default_backend()
+
+
+def fused_backend_active(backend: str | None = None) -> bool:
+    """Whether the resolved backend runs the fused Pallas kernel bodies —
+    the single routing predicate model code and plan metadata share, so a
+    backend added to ``_FUSED`` can never leave them disagreeing."""
+    return _resolve(backend) in _FUSED
 
 
 # ---------------------------------------------------------------------------
@@ -875,6 +892,374 @@ def qmatmul(params: dict, x: jnp.ndarray, spec, n: int, m: int, *,
     if "bias" in params:
         y2d = y2d + params["bias"].astype(y2d.dtype)
     return y2d.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# Fused attention dispatch (flash prefill + quantized-KV decode)
+# ---------------------------------------------------------------------------
+#
+# ``qattention(kind, ...)`` is the attention analogue of :func:`qmatmul`:
+# one entry point per hot attention shape, with the same backend precedence
+# (explicit > backend_scope > env > platform), pad-to-tile, shard_scope
+# integration, and autotuned tiles persisted through REPRO_AUTOTUNE_CACHE.
+#
+#   kind="prefill"     flash-style causal prefill (attn_prefill_pallas):
+#                      q (b,s,nh,hd) · k/v (b,s,nkv,hd) unexpanded-GQA,
+#                      ragged `positions` (b,s) mask, never materializes
+#                      the (chunk, S) score matrix.  Differentiable: the
+#                      custom VJP recomputes through the ref oracle (same
+#                      peak memory as the rematerialized einsum path QAT /
+#                      PEFT training already pays).
+#   kind="decode"      fused GQA decode (attn_decode_gqa_pallas): the int8
+#                      cache streams once at int8 width, per-(token, head)
+#                      scales fold into the score/output dots in VMEM.
+#   kind="mla_decode"  fused absorbed-latent MLA decode
+#                      (attn_decode_mla_pallas): int8 latent + per-token
+#                      scale, output is the weighted latent.
+#
+# Sharding: attention is head-local and batch-local, so inside a
+# shard_scope the fused kernels run under shard_map with heads on the
+# 'model' axis and the batch on the data axes — psum-free in both
+# directions.  Head counts that don't divide the model axis fall back to
+# the unsharded call (GSPMD handles the ref path directly).
+
+_ATTN_CODEBOOK = "attn"     # codebook slot of attention autotune keys
+_ATTN_KINDS = ("prefill", "decode", "mla_decode")
+_ATTN_METHOD = {"prefill": "attn_prefill", "decode": "attn_gqa",
+                "mla_decode": "attn_mla"}
+
+
+def attn_tile_for(kind: str, seq: int, heads: int, depth: int, kv_dtype,
+                  default: tuple[int, int]) -> tuple[int, int]:
+    """(row-tile, kv-tile) for an attention launch: autotune-table hit under
+    the shared key machinery (method ``attn_*``, codebook ``"attn"``, dtype
+    = the *cache* dtype so int8 and bf16 caches tune independently), else
+    ``default``.  Triples in the table carry a trailing 1 (the bk slot is
+    meaningless for attention)."""
+    hit = lookup_tiles(_ATTN_METHOD[kind], seq, heads, depth,
+                       _ATTN_CODEBOOK, kv_dtype)
+    if hit is not None:
+        return hit[0], hit[1]
+    return default
+
+
+def _attn_shard(backend: str, nh: int, nkv: int) -> tuple | None:
+    """Shard route for a head-local attention call: active scope + fused
+    backend + both head counts divide the model axis."""
+    sh = shard_info()
+    if sh is None or backend not in _FUSED:
+        return None
+    mesh, axis = sh
+    tp = dict(mesh.shape)[axis]
+    if nh % tp or nkv % tp:
+        return None
+    return sh
+
+
+def _decode_kmask(pos, cap: int):
+    """(b, S) additive liveness mask: 0 where the cache slot is live
+    (index <= pos, covering padded slots too since pos < S), NEG_INF else."""
+    live = jnp.arange(cap, dtype=jnp.int32)[None, :] <= pos[:, None]
+    return jnp.where(live, 0.0, ref.ATTN_NEG_INF).astype(jnp.float32)
+
+
+def _pad_axis(arr, axis: int, to: int, value=0):
+    pad = to - arr.shape[axis]
+    if pad == 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+# ---- prefill ----
+
+
+def _attn_prefill_run(q, k, v, positions, logit_scale, backend, tiles):
+    """Pad-to-tile + flash kernel, all in the model's native layouts.
+    q (b,s,nh,hd), k/v (b,s,nkv,hd), positions (b,s) → (b,s,nh,hdv) f32."""
+    b, s, nh, hd = q.shape
+    nkv = k.shape[2]
+    bq, bkv = tiles or attn_tile_for(
+        "prefill", s, nh, hd, k.dtype, (128, 128))
+    bq, bkv = min(bq, _round_up(s, 8)), min(bkv, _round_up(s, 8))
+    sq, skv = _round_up(s, bq), _round_up(s, bkv)
+    qt = _pad_axis(q, 1, sq)
+    kt = _pad_axis(k, 1, skv)
+    vt = _pad_axis(v, 1, skv)
+    qpos = _pad_axis(positions, 1, sq, value=-1)
+    kpos = _pad_axis(positions, 1, skv, value=-1)
+    y = attn_prefill_pallas(
+        qt, kt, vt, qpos, kpos, logit_scale=float(logit_scale),
+        bq=bq, bkv=bkv, interpret=(backend == "interpret"))
+    return y[:, :s]
+
+
+def _attn_prefill_fused(q, k, v, positions, logit_scale, backend, tiles):
+    tp = _attn_shard(backend, q.shape[2], k.shape[2])
+    if tp is None:
+        return _attn_prefill_run(q, k, v, positions, logit_scale, backend,
+                                 tiles)
+    mesh, axis = tp
+    dp = _dp_axes(mesh, axis, q.shape[0])
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    hspec = PartitionSpec(bspec, None, axis, None)
+    pspec = PartitionSpec(bspec, None)
+    return shard_map(
+        lambda ql, kl, vl, pl_: _attn_prefill_run(
+            ql, kl, vl, pl_, logit_scale, backend, tiles),
+        mesh=mesh, in_specs=(hspec, hspec, hspec, pspec), out_specs=hspec,
+        check_rep=False,
+    )(q, k, v, positions)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _attn_prefill_qdisp(q, k, v, positions, logit_scale, backend, tiles):
+    return _attn_prefill_fused(q, k, v, positions, logit_scale, backend,
+                               tiles)
+
+
+def _attn_prefill_fwd(q, k, v, positions, logit_scale, backend, tiles):
+    y = _attn_prefill_fused(q, k, v, positions, logit_scale, backend, tiles)
+    return y, (q, k, v, positions)
+
+
+def _attn_prefill_bwd(logit_scale, backend, tiles, res, g):
+    # backward recomputes through the materializing oracle — attention
+    # training cost matches the rematerialized einsum path; the fused
+    # kernel is the *serving* fast path (decode never differentiates)
+    q, k, v, positions = res
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: ref.attn_prefill_ref(qq, kk, vv, positions,
+                                                float(logit_scale)),
+        q, k, v)
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+    dpos = np.zeros(positions.shape, jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            dpos)
+
+
+_attn_prefill_qdisp.defvjp(_attn_prefill_fwd, _attn_prefill_bwd)
+
+
+# ---- GQA decode ----
+
+
+def _attn_decode_run(q, k, v, pos, k_scale, v_scale, logit_scale, backend,
+                     tiles):
+    """q (b,nh,hd) vs cache (b,S,nkv,hd) [+ scales (b,S,nkv)] →
+    (b,nh,hdv) f32.  The cache operands go to the kernel in their stored
+    layout (the index maps slice per-head tiles) — a transpose here would
+    make XLA copy the whole cache every decode step."""
+    b, nh, hd = q.shape
+    cap, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    _, bs = tiles or attn_tile_for(
+        "decode", cap, nh, hd, k.dtype, (DECODE_ROWS, 128))
+    bs = min(bs, _round_up(cap, 8))
+    capp = _round_up(cap, bs)
+    g8 = _round_up(g, DECODE_ROWS)
+    qg = _pad_axis(q.reshape(b, nkv, g, hd), 2, g8)
+    kt = _pad_axis(k, 1, capp)
+    vt = _pad_axis(v, 1, capp)
+    kst = vst = None
+    if k_scale is not None:
+        kst = _pad_axis(k_scale, 1, capp)
+        vst = _pad_axis(v_scale, 1, capp)
+    y = attn_decode_gqa_pallas(
+        qg, kt, vt, _decode_kmask(pos, capp), kst, vst,
+        logit_scale=float(logit_scale), bs=bs,
+        interpret=(backend == "interpret"))
+    return y[:, :, :g].reshape(b, nh, v.shape[-1])
+
+
+def _attn_decode_fused(q, k, v, pos, k_scale, v_scale, logit_scale, backend,
+                       tiles):
+    tp = _attn_shard(backend, q.shape[1], k.shape[2])
+    if tp is None:
+        return _attn_decode_run(q, k, v, pos, k_scale, v_scale, logit_scale,
+                                backend, tiles)
+    mesh, axis = tp
+    dp = _dp_axes(mesh, axis, q.shape[0])
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    qspec = PartitionSpec(bspec, axis, None)
+    cspec = PartitionSpec(bspec, None, axis, None)
+    sspec = PartitionSpec(bspec, None, axis)
+    pspec = PartitionSpec(bspec)
+
+    def body(ql, kl, vl, posl, ksl, vsl):
+        return _attn_decode_run(ql, kl, vl, posl, ksl, vsl, logit_scale,
+                                backend, tiles)
+
+    if k_scale is None:
+        return shard_map(
+            lambda ql, kl, vl, posl: body(ql, kl, vl, posl, None, None),
+            mesh=mesh, in_specs=(qspec, cspec, cspec, pspec),
+            out_specs=qspec, check_rep=False,
+        )(q, k, v, pos)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, cspec, cspec, pspec, sspec, sspec),
+        out_specs=qspec, check_rep=False,
+    )(q, k, v, pos, k_scale, v_scale)
+
+
+# ---- MLA decode ----
+
+
+def _attn_mla_run(q_lat, q_rope, c, k_rope, pos, c_scale, logit_scale,
+                  backend, tiles):
+    """q_lat (b,nh,L) / q_rope (b,nh,R) vs c (b,S,L) + k_rope (b,S,R)
+    [+ c_scale (b,S)] → weighted latent (b,nh,L) f32."""
+    b, nh, lat = q_lat.shape
+    cap = c.shape[1]
+    _, bs = tiles or attn_tile_for(
+        "mla_decode", cap, nh, lat, c.dtype, (DECODE_ROWS, 128))
+    bs = min(bs, _round_up(cap, 8))
+    capp = _round_up(cap, bs)
+    nh8 = _round_up(nh, DECODE_ROWS)
+    qlp = _pad_axis(q_lat, 1, nh8)
+    qrp = _pad_axis(q_rope, 1, nh8)
+    cp = _pad_axis(c, 1, capp)
+    krp = _pad_axis(k_rope, 1, capp)
+    csp = None if c_scale is None else _pad_axis(c_scale, 1, capp)
+    y = attn_decode_mla_pallas(
+        qlp, qrp, cp, krp, _decode_kmask(pos, capp), csp,
+        logit_scale=float(logit_scale), bs=bs,
+        interpret=(backend == "interpret"))
+    return y[:, :nh]
+
+
+def _attn_mla_fused(q_lat, q_rope, c, k_rope, pos, c_scale, logit_scale,
+                    backend, tiles):
+    tp = _attn_shard(backend, q_lat.shape[1], q_lat.shape[1])
+    if tp is None:
+        return _attn_mla_run(q_lat, q_rope, c, k_rope, pos, c_scale,
+                             logit_scale, backend, tiles)
+    mesh, axis = tp
+    dp = _dp_axes(mesh, axis, q_lat.shape[0])
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    qspec = PartitionSpec(bspec, axis, None)    # heads shard
+    cspec = PartitionSpec(bspec, None, None)    # latent cache replicates
+    sspec = PartitionSpec(bspec, None)
+    pspec = PartitionSpec(bspec)
+
+    def body(qll, qrl, cl, krl, posl, csl):
+        return _attn_mla_run(qll, qrl, cl, krl, posl, csl, logit_scale,
+                             backend, tiles)
+
+    if c_scale is None:
+        return shard_map(
+            lambda qll, qrl, cl, krl, posl: body(qll, qrl, cl, krl, posl,
+                                                 None),
+            mesh=mesh, in_specs=(qspec, qspec, cspec, cspec, pspec),
+            out_specs=qspec, check_rep=False,
+        )(q_lat, q_rope, c, k_rope, pos)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, qspec, cspec, cspec, pspec, sspec),
+        out_specs=qspec, check_rep=False,
+    )(q_lat, q_rope, c, k_rope, pos, c_scale)
+
+
+# ---- public entry point ----
+
+
+def qattention(kind: str, *args, logit_scale: float,
+               backend: str | None = None,
+               tiles: tuple[int, int] | None = None) -> jnp.ndarray:
+    """Unified fused-attention entry point (see the section comment).
+
+    kind="prefill":     qattention("prefill", q, k, v, positions, ...)
+    kind="decode":      qattention("decode", q, k, v, pos,
+                                   k_scale=None, v_scale=None, ...)
+    kind="mla_decode":  qattention("mla_decode", q_lat, q_rope, c, k_rope,
+                                   pos, c_scale=None, ...)
+
+    Fused backends (pallas/interpret) run the Pallas kernels with
+    pad-to-tile and optional shard_map; ``ref``/``dense`` run the
+    materializing oracles from :mod:`repro.kernels.ref` — numerically the
+    same contract, and the parity reference the tests pin the kernels to.
+    Results are f32; callers cast.
+    """
+    if kind not in _ATTN_KINDS:
+        raise ValueError(f"unknown attention kind {kind!r}; "
+                         f"expected one of {_ATTN_KINDS}")
+    backend = _resolve(backend)
+    if kind == "prefill":
+        q, k, v, positions = args
+        if backend in _FUSED:
+            return _attn_prefill_qdisp(q, k, v, positions,
+                                       float(logit_scale), backend, tiles)
+        return ref.attn_prefill_ref(q, k, v, positions, float(logit_scale))
+    if kind == "decode":
+        q, k, v, pos = args[:4]
+        k_scale = args[4] if len(args) > 4 else None
+        v_scale = args[5] if len(args) > 5 else None
+        if backend in _FUSED:
+            return _attn_decode_fused(q, k, v, pos, k_scale, v_scale,
+                                      float(logit_scale), backend, tiles)
+        return ref.attn_decode_ref(q, k, v, pos, k_scale, v_scale,
+                                   float(logit_scale))
+    q_lat, q_rope, c, k_rope, pos = args[:5]
+    c_scale = args[5] if len(args) > 5 else None
+    if backend in _FUSED:
+        return _attn_mla_fused(q_lat, q_rope, c, k_rope, pos, c_scale,
+                               float(logit_scale), backend, tiles)
+    return ref.attn_mla_decode_ref(q_lat, q_rope, c, k_rope, pos, c_scale,
+                                   float(logit_scale))
+
+
+_ATTN_CANDIDATES = {
+    "prefill": ((128, 128), (128, 256), (256, 128), (64, 128), (128, 512)),
+    "decode": ((DECODE_ROWS, 128), (DECODE_ROWS, 256), (DECODE_ROWS, 512)),
+    "mla_decode": ((DECODE_ROWS, 128), (DECODE_ROWS, 256),
+                   (DECODE_ROWS, 512)),
+}
+
+
+def autotune_qattention(kind: str, *args, logit_scale: float,
+                        backend: str | None = None, candidates=None,
+                        iters: int = 3):
+    """Time candidate (row-tile, kv-tile) pairs through :func:`qattention`
+    and register the winner under the attention autotune key (persisted via
+    ``REPRO_AUTOTUNE_CACHE`` like every other entry).  Returns
+    ``(best, {tiles: seconds})``; ``(None, {})`` off the fused backends.
+    """
+    backend = _resolve(backend)
+    if backend not in _FUSED:
+        return None, {}
+    if kind == "prefill":
+        q, k = args[0], args[1]
+        seq, heads, depth, kv_dtype = q.shape[1], q.shape[2], q.shape[3], \
+            k.dtype
+    elif kind == "decode":
+        q, k = args[0], args[1]
+        seq, heads, depth, kv_dtype = k.shape[1], q.shape[1], q.shape[2], \
+            k.dtype
+    else:
+        q_lat, c = args[0], args[2]
+        seq, heads, depth, kv_dtype = c.shape[1], q_lat.shape[1], \
+            q_lat.shape[2], c.dtype
+    timings: dict[tuple, float] = {}
+    for cand in candidates or _ATTN_CANDIDATES[kind]:
+        fn = jax.jit(lambda *a, c=tuple(cand): qattention(
+            kind, *a, logit_scale=logit_scale, backend=backend, tiles=c))
+        try:
+            fn(*args).block_until_ready()
+        except (ValueError, jax.errors.JaxRuntimeError):
+            continue
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(*args).block_until_ready()
+        timings[tuple(cand)] = (time.perf_counter() - t0) / iters
+    if not timings:
+        return None, {}
+    best = min(timings, key=timings.get)
+    register_tiles(_ATTN_METHOD[kind], seq, heads, depth, _ATTN_CODEBOOK,
+                   kv_dtype, (best[0], best[1], 1))
+    save_autotune_table()
+    return best, timings
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,7 @@ non-TPU platforms, so the multi-pod dry-run lowers these exact graphs.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import lut
@@ -20,7 +21,13 @@ __all__ = [
     "lords_grads_ref",
     "block_matmul_t_ref",
     "block_grads_ref",
+    "attn_prefill_ref",
+    "attn_decode_ref",
+    "attn_mla_decode_ref",
+    "ATTN_NEG_INF",
 ]
+
+ATTN_NEG_INF = -1e30  # finite mask value: exp(m - m) stays NaN-free
 
 
 def _lords_terms(q_packed, b, a, codebook_name):
@@ -152,6 +159,105 @@ def block_grads_ref(
     n, nblk = s_blk.shape
     ds_blk = ds_full.reshape(n, nblk, block_size).sum(-1)
     return dx, ds_blk
+
+
+def attn_prefill_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    positions: jnp.ndarray,
+    logit_scale: float,
+) -> jnp.ndarray:
+    """Materializing causal-attention oracle for the flash-prefill kernel.
+
+    q (b, s, nh, hd) · k/v (b, s, nkv, hd) unexpanded-GQA; ``positions``
+    (b, s) int32 gives every token's position (-1 = dead padding row).  A
+    query attends to keys with ``kpos <= qpos`` and ``kpos >= 0`` — the same
+    ragged mask the kernel applies per tile.  Returns (b, s, nh, hd_v) f32.
+    """
+    b, s, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    qf = q.astype(jnp.float32) * jnp.float32(logit_scale)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, s, nkv, g, hd)
+    scores = jnp.einsum("bqngh,bknh->bngqk", qg, kf)
+    live = (positions[:, None, :] <= positions[:, :, None]) \
+        & (positions[:, None, :] >= 0)                       # (b, q, k)
+    scores = jnp.where(live[:, None, None], scores, ATTN_NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngqk,bknh->bqngh", probs, vf)
+    return out.reshape(b, s, nh, vf.shape[-1])
+
+
+def attn_decode_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    pos: jnp.ndarray,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    logit_scale: float | None = None,
+) -> jnp.ndarray:
+    """Materializing GQA decode oracle for the fused quantized-KV kernel.
+
+    q (b, nh, hd) vs cache k/v (b, S, nkv, hd); cache slots ``<= pos`` (b,)
+    are live.  With ``k_scale``/``v_scale`` (b, S, nkv) the caches hold int8
+    codes and the oracle dequantizes them up front — exactly the full-cache
+    bf16 temporary the fused kernel exists to avoid.  Returns (b, nh, hd_v)
+    f32.
+    """
+    b, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    cap = k.shape[1]
+    if logit_scale is None:
+        logit_scale = 1.0 / float(hd) ** 0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None].astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale[..., None].astype(jnp.float32)
+    qg = q.astype(jnp.float32).reshape(b, nkv, g, hd) * jnp.float32(logit_scale)
+    scores = jnp.einsum("bngh,bsnh->bngs", qg, kf)
+    live = jnp.arange(cap, dtype=jnp.int32)[None, :] <= pos[:, None]
+    scores = jnp.where(live[:, None, None], scores, ATTN_NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngs,bsnh->bngh", probs, vf)
+    return out.reshape(b, nh, vf.shape[-1])
+
+
+def attn_mla_decode_ref(
+    q_lat: jnp.ndarray,
+    q_rope: jnp.ndarray,
+    c: jnp.ndarray,
+    k_rope: jnp.ndarray,
+    pos: jnp.ndarray,
+    c_scale: jnp.ndarray | None = None,
+    logit_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Materializing MLA absorbed-latent decode oracle.
+
+    q_lat (b, nh, L) scores against the latent cache c (b, S, L) and
+    q_rope (b, nh, R) against the shared RoPE key cache k_rope (b, S, R);
+    the attention output *is* the probability-weighted latent (b, nh, L) —
+    the v_up absorption stays outside.  ``c_scale`` (b, S) dequantizes an
+    int8 latent cache up front (the temporary the fused kernel avoids).
+    """
+    cap = c.shape[1]
+    cf = c.astype(jnp.float32)
+    if c_scale is not None:
+        cf = cf * c_scale[..., None].astype(jnp.float32)
+    scores = jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32), cf)
+    scores = scores + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                                 k_rope.astype(jnp.float32))
+    scores = scores * jnp.float32(logit_scale)
+    live = jnp.arange(cap, dtype=jnp.int32)[None, :] <= pos[:, None]
+    scores = jnp.where(live[:, None], scores, ATTN_NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsl->bhl", probs, cf)
 
 
 def block_matmul_ref(

@@ -48,7 +48,10 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
     ``cfg.kv_cache_dtype`` ('bf16' | 'int8').  A multi-device ``mesh`` runs
     the whole pipeline sharded: params and KV cache are placed onto the
     plan's NamedShardings, and the fused qmatmuls execute tensor-parallel
-    over the mesh's 'model' axis inside the jitted steps."""
+    over the mesh's 'model' axis inside the jitted steps.  (For repeated
+    min-timed decode measurements use
+    ``benchmarks.bench_serve.paired_decode_tok_s``, which interleaves both
+    KV formats' compiled loops.)"""
     if loop not in ("scan", "host"):
         raise ValueError(f"unknown decode loop {loop!r}")
     if kv_cache is not None:
@@ -156,6 +159,7 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
         "decode_loop": loop,
         "kv_cache_dtype": cfg.kv_cache_dtype,
         "kernel_backend": pre_plan.meta["kernel_backend"],
+        "attention": pre_plan.meta["attention"],
     }
 
 
@@ -196,7 +200,7 @@ def main(argv=None):
                       loop=args.loop, temperature=args.temperature,
                       kv_cache=args.kv_cache)
     print(f"[serve] backend={out['kernel_backend']} loop={out['decode_loop']} "
-          f"kv={out['kv_cache_dtype']} "
+          f"kv={out['kv_cache_dtype']} attention={out['attention']} "
           f"prefill {out['prefill_tok_s']:.1f} tok/s, "
           f"decode {out['decode_tok_s']:.1f} tok/s")
     print("[serve] sample tokens:", out["tokens"][0][:16])

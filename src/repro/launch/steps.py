@@ -51,6 +51,14 @@ def _meta_backend(kernel_backend: str | None) -> str:
     return kernel_backend or f"auto:{dispatch.default_backend()}"
 
 
+def _meta_attention(kernel_backend: str | None) -> str:
+    """Which attention body the step traces: the fused flash kernels
+    (qattention routes prefill + quantized-KV decode through Pallas) or the
+    portable einsum oracle."""
+    return ("fused" if dispatch.fused_backend_active(kernel_backend)
+            else "einsum-ref")
+
+
 def _meta_sharding(mesh, rules) -> dict:
     """Layout record for the plan: mesh shape, model parallelism (the degree
     the fused qmatmuls shard over inside the step's shard_scope), and the
@@ -264,6 +272,7 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
             donate_argnums=(2,),
             meta={"kind": kind,
                   "kernel_backend": _meta_backend(kernel_backend),
+                  "attention": _meta_attention(kernel_backend),
                   "sharding": _meta_sharding(mesh, rules)},
         )
 
@@ -288,6 +297,7 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         donate_argnums=(2,),
         meta={"kind": kind,
               "kernel_backend": _meta_backend(kernel_backend),
+              "attention": _meta_attention(kernel_backend),
               "sharding": _meta_sharding(mesh, rules)},
     )
 
@@ -364,5 +374,6 @@ def build_generate_plan(cfg, mesh, shape_cfg, *, gen: int,
         donate_argnums=(2,),
         meta={"kind": "generate", "gen": gen, "temperature": temperature,
               "kernel_backend": _meta_backend(kernel_backend),
+              "attention": _meta_attention(kernel_backend),
               "sharding": _meta_sharding(mesh, rules)},
     )

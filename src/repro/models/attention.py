@@ -15,10 +15,12 @@ any baseline runs its fused dequant-matmul on TPU and its oracle elsewhere.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dispatch import qmatmul
+from repro.kernels.dispatch import fused_backend_active, qattention, qmatmul
 from repro.models.common import (
     P,
     apply_rope,
@@ -45,23 +47,43 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 
-def chunked_causal_attention(q, k, v, *, chunk=512, logit_scale=None):
+def chunked_causal_attention(q, k, v, *, chunk=512, logit_scale=None,
+                             positions=None):
     """q (b,s,nh,hd), k/v (b,s,nkv,hd) -> (b,s,nh,hd); causal.
 
-    GQA keys/values are expanded to the full head count *before* the score
-    einsum: a (nkv, g) reshape of a TP-sharded head dim is not representable
-    in GSPMD and silently replicates the (b,h,chunk,s) score tensors — the
-    expansion keeps everything head-sharded (the TPU Pallas flash kernel
-    avoids the expansion natively; this is the portable pure-JAX path).
-    The chunk body is rematerialized: backward keeps only (q-chunk, out).
+    On the fused backends (pallas/interpret) this routes through
+    ``dispatch.qattention("prefill", ...)`` — the streaming-softmax flash
+    kernel that reads the *unexpanded* GQA KV heads and never materializes
+    a score matrix.  The chunked einsum body below is the portable path
+    and the fused kernel's parity oracle.
+
+    ``positions`` (b, s) int32 drives the causal mask (ragged / shifted
+    sequences mask per batch row; -1 marks dead padding rows); None means
+    the standard aligned arange.
+
+    Ref-path notes: GQA keys/values are expanded to the full head count
+    *before* the score einsum — a (nkv, g) reshape of a TP-sharded head
+    dim is not representable in GSPMD and silently replicates the
+    (b,h,chunk,s) score tensors, while the expansion keeps everything
+    head-sharded (the flash kernel avoids the expansion natively via its
+    KV index map).  The chunk body is rematerialized: backward keeps only
+    (q-chunk, out).
     """
     b, s, nh, hd = q.shape
     nkv = k.shape[2]
     g = nh // nkv
-    scale = logit_scale if logit_scale is not None else 1.0 / jnp.sqrt(hd)
+    scale = logit_scale if logit_scale is not None else 1.0 / math.sqrt(hd)
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if fused_backend_active():
+        out = qattention("prefill", q, k, v, positions,
+                         logit_scale=float(scale))
+        return out.astype(q.dtype)
+
     chunk = min(chunk, s)
     if s % chunk:  # odd smoke-test lengths: fall back to a divisor
-        import math
         chunk = math.gcd(chunk, s) or s
     nc = s // chunk
 
@@ -70,15 +92,17 @@ def chunked_causal_attention(q, k, v, *, chunk=512, logit_scale=None):
         v = jnp.repeat(v, g, axis=2)
         k = shard(k, "batch", "seq", "heads", "head_dim")
         v = shard(v, "batch", "seq", "heads", "head_dim")
-    kpos = jnp.arange(s, dtype=jnp.int32)
+    kpos = positions  # (b, s)
 
     def body(carry, inputs):
         qc, ci = inputs  # (b, chunk, nh, hd), scalar chunk index
-        qpos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        qpos = jax.lax.dynamic_slice_in_dim(positions, ci * chunk, chunk,
+                                            axis=1)          # (b, chunk)
         scores = f32_einsum(
             "bcnh,bsnh->bncs", qc * jnp.asarray(scale, qc.dtype), k)
-        mask = qpos[:, None] >= kpos[None, :]  # (chunk, s)
-        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        mask = (kpos[:, None, :] <= qpos[:, :, None]) \
+            & (kpos[:, None, :] >= 0)                        # (b, chunk, s)
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
         out = f32_einsum("bncs,bsnh->bcnh", probs, v)
         return carry, out.astype(q.dtype)
@@ -110,23 +134,27 @@ def decode_attention(q, k_cache, v_cache, pos, *, logit_scale=None,
     """q (b,1,nh,hd) vs cache (b,S,nkv,hd); positions<=pos are live.
 
     With ``k_scale``/``v_scale`` (b,S,nkv) the caches hold per-head int8
-    codes; dequantization happens here, right at the score/output einsums.
-    The guaranteed win is cache *footprint* (~2x more capacity per HBM
-    byte); the per-token *traffic* win additionally needs the
-    convert-multiply fused into the attention reads — XLA may materialize
-    a bf16 temp on this portable einsum path, so the full roofline number
-    (int8 codes + one f32 scale per (token, head), reported by
-    bench_serve) is the target for a fused decode-attention kernel.
+    codes.  On the fused backends the whole read side routes through
+    ``dispatch.qattention("decode", ...)`` — the cache streams through the
+    flash-decode kernel once, *as stored*, with the per-(token, head)
+    scales folded into the in-kernel dot products: int8 KV pays int8
+    bandwidth (the full roofline number bench_serve reports).  The einsum
+    body below is the portable path / parity oracle; it dequantizes the
+    entire cache up front, which is why int8 used to *lose* to bf16 here.
     """
     b, _, nh, hd = q.shape
     nkv = k_cache.shape[2]
     g = nh // nkv
     cap = k_cache.shape[1]
+    scale = logit_scale if logit_scale is not None else 1.0 / math.sqrt(hd)
+    if fused_backend_active():
+        out = qattention("decode", q[:, 0], k_cache, v_cache, pos,
+                         k_scale, v_scale, logit_scale=float(scale))
+        return out[:, None].astype(q.dtype)  # (b, 1, nh, hd_v)
     if k_scale is not None:
         k_cache = kv_dequantize(k_cache, k_scale, dtype=q.dtype)
     if v_scale is not None:
         v_cache = kv_dequantize(v_cache, v_scale, dtype=q.dtype)
-    scale = logit_scale if logit_scale is not None else 1.0 / jnp.sqrt(hd)
     qg = q.reshape(b, nkv, g, hd)
     scores = f32_einsum(
         "bngh,bsnh->bngs", qg * jnp.asarray(scale, qg.dtype), k_cache)
@@ -172,7 +200,8 @@ def gqa_train(params, x, cfg, quant, positions, chunk=512):
     b, s, d = x.shape
     nh, hd = cfg.num_heads, cfg.resolved_head_dim
     q, k, v = _gqa_qkv(params, x, cfg, quant, positions)
-    out = chunked_causal_attention(q, k, v, chunk=chunk)
+    out = chunked_causal_attention(q, k, v, chunk=chunk,
+                                   positions=positions)
     out = out.reshape(b, s, nh * hd)
     return qmatmul(params["wo"], out, quant, d, nh * hd)
 
@@ -229,7 +258,8 @@ def gqa_prefill(params, x, cfg, quant, positions, cache, chunk=512):
     b, s, d = x.shape
     nh, hd = cfg.num_heads, cfg.resolved_head_dim
     q, k, v = _gqa_qkv(params, x, cfg, quant, positions)
-    out = chunked_causal_attention(q, k, v, chunk=chunk)
+    out = chunked_causal_attention(q, k, v, chunk=chunk,
+                                   positions=positions)
     out = out.reshape(b, s, nh * hd)
     new_cache = {**_kv_store(cache, "k", k), **_kv_store(cache, "v", v)}
     return qmatmul(params["wo"], out, quant, d, nh * hd), new_cache
@@ -327,8 +357,9 @@ def mla_train(params, x, cfg, quant, positions, chunk=512):
         axis=-1,
     )
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    out = chunked_causal_attention(q, k, v, chunk=chunk, logit_scale=scale)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = chunked_causal_attention(q, k, v, chunk=chunk, logit_scale=scale,
+                                   positions=positions)
     out = out.reshape(b, s, nh * m.v_head_dim)
     return qmatmul(params["wo"], out, quant, d, nh * m.v_head_dim)
 
@@ -376,25 +407,36 @@ def mla_decode(params, x, cfg, quant, cache, pos):
     new_cache = {**_kv_store(cache, "c", c_new, pos),
                  **_kv_store(cache, "k_rope", k_rope_new, pos)}
     r_cache = new_cache["k_rope"]
-    if "c_scale" in new_cache:
-        c_cache = kv_dequantize(new_cache["c"], new_cache["c_scale"],
-                                dtype=r_cache.dtype)
-    else:
-        c_cache = new_cache["c"]
-    cap = c_cache.shape[1]
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
 
     # absorb k_up into q:  q_lat (b,1,nh,kv_lora)
     w_kup = _dequant(params["k_up"], cfg, quant, nh * m.qk_nope_dim, m.kv_lora_rank)
     w_kup = w_kup.reshape(nh, m.qk_nope_dim, m.kv_lora_rank)
     q_lat = f32_einsum("bthn,hnl->bthl", q_nope, w_kup.astype(q_nope.dtype))
-    scores = f32_einsum("bthl,bsl->bhts", q_lat.astype(c_cache.dtype), c_cache)
-    scores += f32_einsum("bthr,bsr->bhts", q_rope.astype(r_cache.dtype),
-                         r_cache)
-    scores *= 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    live = jnp.arange(cap, dtype=jnp.int32)[None, :] <= pos[:, None]
-    scores = jnp.where(live[:, None, None], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
-    lat = f32_einsum("bhts,bsl->bthl", probs, c_cache)
+
+    if fused_backend_active():
+        # fused path: the (possibly int8) latent cache streams through the
+        # flash-decode kernel once, as stored — no full-cache dequant temp
+        lat = qattention(
+            "mla_decode", q_lat[:, 0], q_rope[:, 0], new_cache["c"],
+            r_cache, pos, new_cache.get("c_scale"),
+            logit_scale=scale)[:, None]
+    else:
+        if "c_scale" in new_cache:
+            c_cache = kv_dequantize(new_cache["c"], new_cache["c_scale"],
+                                    dtype=r_cache.dtype)
+        else:
+            c_cache = new_cache["c"]
+        cap = c_cache.shape[1]
+        scores = f32_einsum("bthl,bsl->bhts", q_lat.astype(c_cache.dtype),
+                            c_cache)
+        scores += f32_einsum("bthr,bsr->bhts", q_rope.astype(r_cache.dtype),
+                             r_cache)
+        scores *= scale
+        live = jnp.arange(cap, dtype=jnp.int32)[None, :] <= pos[:, None]
+        scores = jnp.where(live[:, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+        lat = f32_einsum("bhts,bsl->bthl", probs, c_cache)
     w_vup = _dequant(params["v_up"], cfg, quant, nh * m.v_head_dim, m.kv_lora_rank)
     w_vup = w_vup.reshape(nh, m.v_head_dim, m.kv_lora_rank)
     out = f32_einsum("bthl,hvl->bthv", lat.astype(w_vup.dtype), w_vup)

@@ -1,0 +1,381 @@
+"""Attention fast path: fused flash-prefill / quantized-KV flash-decode
+kernels vs the materializing ref oracles — parity (cosine + max-abs-err) on
+non-tile-aligned shapes for GQA and MLA, ragged per-sequence positions,
+causal-mask boundary rows, int8 and bf16 caches, the jaxpr guard that the
+jitted decode step never materializes a score matrix or a dequantized
+cache, attention autotune-key persistence, and sharded-vs-single-device
+parity under the 8-device harness."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from multidevice_compat import multidevice, single_mesh, tp_mesh
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.kernels import dispatch, ref
+from repro.kernels.dispatch import autotune_qattention, qattention
+from repro.models import attention as attn
+from repro.models import split_tree
+from repro.models.common import kv_quantize
+
+
+def _cos(a, b):
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(a @ b / max(np.linalg.norm(a) * np.linalg.norm(b), 1e-30))
+
+
+def _maxerr(a, b):
+    return float(np.max(np.abs(np.asarray(a, np.float32)
+                               - np.asarray(b, np.float32))))
+
+
+# ---------------------------------------------------------------------------
+# prefill kernel: fused vs ref on non-tile-aligned shapes
+# ---------------------------------------------------------------------------
+
+# deliberately off the 8/128 tile grid: odd seq lengths, GQA group > 1
+PREFILL_SHAPES = [(2, 17, 4, 2, 16), (1, 23, 8, 2, 16), (2, 33, 4, 4, 24)]
+
+
+@pytest.mark.parametrize("b,s,nh,nkv,hd", PREFILL_SHAPES)
+def test_prefill_fused_matches_ref_nonaligned(b, s, nh, nkv, hd):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sc = 1.0 / hd ** 0.5
+    y_ref = qattention("prefill", q, k, v, pos, logit_scale=sc,
+                       backend="ref")
+    y_int = qattention("prefill", q, k, v, pos, logit_scale=sc,
+                       backend="interpret")
+    assert _cos(y_int, y_ref) > 0.9999
+    assert _maxerr(y_int, y_ref) < 3e-5
+
+
+def test_prefill_causal_boundary_rows():
+    """Row 0 (sees only itself) and the last row (sees everything) are the
+    mask boundary cases the tiled kernel must get exactly right."""
+    b, s, nh, nkv, hd = 1, 16, 2, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, s, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, nkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sc = 1.0 / hd ** 0.5
+    y = qattention("prefill", q, k, v, pos, logit_scale=sc,
+                   backend="interpret")
+    # row 0 attends only to key 0: softmax over one element == v[0]
+    np.testing.assert_allclose(
+        np.asarray(y[0, 0, 0], np.float32),
+        np.asarray(v[0, 0, 0], np.float32), rtol=3e-5, atol=3e-5)
+    # the last row's softmax spans every key — pin it to the dense oracle
+    y_ref = qattention("prefill", q, k, v, pos, logit_scale=sc,
+                       backend="ref")
+    np.testing.assert_allclose(np.asarray(y[0, -1], np.float32),
+                               np.asarray(y_ref[0, -1], np.float32),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_prefill_ragged_positions_and_padding_rows():
+    """Per-sequence ragged positions: one sequence ends early (pos = -1
+    padding rows), the other is shifted — fused and ref must agree on every
+    live row, on tile-unaligned lengths."""
+    b, s, nh, nkv, hd = 2, 19, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, s, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(7), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, s, nkv, hd))
+    pos = np.broadcast_to(np.arange(s, dtype=np.int32)[None], (b, s)).copy()
+    pos[0, 13:] = -1                      # sequence 0: dead tail
+    pos[1] = np.arange(7, 7 + s)          # sequence 1: shifted window
+    pos = jnp.asarray(pos)
+    sc = 1.0 / hd ** 0.5
+    y_ref = qattention("prefill", q, k, v, pos, logit_scale=sc,
+                       backend="ref")
+    y_int = qattention("prefill", q, k, v, pos, logit_scale=sc,
+                       backend="interpret")
+    live = np.asarray(pos) >= 0
+    d = np.abs(np.asarray(y_int, np.float32)
+               - np.asarray(y_ref, np.float32))[live]
+    assert d.max() < 3e-5
+    # dead rows (pos == -1) are zeroed by the kernel's l == 0 guard —
+    # the documented contract, not softmax-of-all-masked garbage
+    np.testing.assert_array_equal(
+        np.asarray(y_int, np.float32)[~live], 0.0)
+
+
+def test_prefill_fused_gradients_match_ref():
+    """The fused prefill carries a custom VJP (backward recomputes through
+    the oracle): grads wrt q/k/v must match differentiating the ref."""
+    b, s, nh, nkv, hd = 1, 12, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(9), (b, s, nh, hd))
+    k = jax.random.normal(jax.random.PRNGKey(10), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(11), (b, s, nkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sc = 1.0 / hd ** 0.5
+
+    def loss(backend):
+        def f(qq, kk, vv):
+            return jnp.sum(qattention("prefill", qq, kk, vv, pos,
+                                      logit_scale=sc, backend=backend) ** 2)
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    for gi, gr in zip(loss("interpret"), loss("ref")):
+        np.testing.assert_allclose(np.asarray(gi), np.asarray(gr),
+                                   rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode kernels: GQA + MLA, int8 + bf16 caches, non-aligned cache lengths
+# ---------------------------------------------------------------------------
+
+DECODE_SHAPES = [(2, 23, 8, 2, 16), (1, 30, 4, 4, 24), (3, 9, 8, 1, 16)]
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("b,cap,nh,nkv,hd", DECODE_SHAPES)
+def test_gqa_decode_fused_matches_ref(b, cap, nh, nkv, hd, quantized):
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, nh, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, cap, nkv, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, cap, nkv, hd))
+    # ragged live lengths incl. the pos=0 boundary (single live slot)
+    pos = jnp.asarray(np.linspace(0, cap - 1, b).astype(np.int32))
+    sc = 1.0 / hd ** 0.5
+    if quantized:
+        kcod, ks = kv_quantize(kc)
+        vcod, vs = kv_quantize(vc)
+        args = (q, kcod, vcod, pos, ks, vs)
+    else:
+        args = (q, kc, vc, pos)
+    y_ref = qattention("decode", *args, logit_scale=sc, backend="ref")
+    y_int = qattention("decode", *args, logit_scale=sc, backend="interpret")
+    assert _cos(y_int, y_ref) > 0.9999
+    assert _maxerr(y_int, y_ref) < 3e-5
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_mla_decode_fused_matches_ref(quantized):
+    b, cap, nh, lat, rope = 2, 21, 4, 16, 8
+    ql = jax.random.normal(jax.random.PRNGKey(3), (b, nh, lat))
+    qr = jax.random.normal(jax.random.PRNGKey(4), (b, nh, rope))
+    c = jax.random.normal(jax.random.PRNGKey(5), (b, cap, lat))
+    kr = jax.random.normal(jax.random.PRNGKey(6), (b, cap, rope))
+    pos = jnp.array([0, cap - 1], jnp.int32)
+    sc = 1.0 / (lat + rope) ** 0.5
+    if quantized:
+        ccod, cs = kv_quantize(c)
+        args = (ql, qr, ccod, kr, pos, cs)
+    else:
+        args = (ql, qr, c, kr, pos)
+    y_ref = qattention("mla_decode", *args, logit_scale=sc, backend="ref")
+    y_int = qattention("mla_decode", *args, logit_scale=sc,
+                       backend="interpret")
+    assert _cos(y_int, y_ref) > 0.9999
+    assert _maxerr(y_int, y_ref) < 3e-5
+
+
+# ---------------------------------------------------------------------------
+# model level: fused attention inside gqa/mla decode tracks the ref backend
+# ---------------------------------------------------------------------------
+
+
+def _attn_setup(arch, kv, seed=0):
+    cfg = smoke_variant(get_config(arch)).with_(kv_cache_dtype=kv)
+    key = jax.random.PRNGKey(seed)
+    init = attn.mla_init if cfg.attn_kind == "mla" else attn.gqa_init
+    cache_init_fn = (attn.mla_cache_init if cfg.attn_kind == "mla"
+                     else attn.gqa_cache_init)
+    params, _ = split_tree(init(key, cfg, cfg.quant))
+    cache, _ = split_tree(cache_init_fn(cfg, 2, 12))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    return cfg, params, cache, x
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "minicpm3-4b"])
+@pytest.mark.parametrize("kv", ["bf16", "int8"])
+def test_model_decode_fused_vs_ref_backend(arch, kv):
+    """Full mixer prefill + ragged decode step: the interpret (fused
+    kernels) and ref backends must agree through the real cache plumbing."""
+    outs = {}
+    for backend in ("ref", "interpret"):
+        cfg, params, cache, x = _attn_setup(arch, kv)
+        pre = attn.mla_prefill if cfg.attn_kind == "mla" else attn.gqa_prefill
+        dec = attn.mla_decode if cfg.attn_kind == "mla" else attn.gqa_decode
+        positions = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None],
+                                     (2, 8))
+        with dispatch.backend_scope(backend):
+            _, cache = pre(params, x, cfg, cfg.quant, positions, cache)
+            pos = jnp.array([3, 8], jnp.int32)  # ragged
+            y, _ = dec(params, x[:, :1], cfg, cfg.quant, cache, pos)
+        outs[backend] = np.asarray(y, np.float32)
+    assert _cos(outs["interpret"], outs["ref"]) > 0.999
+
+
+# ---------------------------------------------------------------------------
+# jaxpr guard: the jitted decode step materializes neither a score matrix
+# nor a dequantized cache (the PR 3 no-(N,K)-temporary check, for serving)
+# ---------------------------------------------------------------------------
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue  # tile-level internals live in VMEM, not HBM
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _walk_eqns(sub)
+
+
+def _subjaxprs(val):
+    if isinstance(val, jax.extend.core.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "minicpm3-4b"])
+def test_decode_step_jaxpr_no_score_or_dequant_temporary(arch):
+    """The fused decode step's jaxpr must contain (a) no f32 tensor with a
+    trailing cache-capacity axis of per-head score shape — the (b, n, S)
+    temporary the einsum path materializes — and (b) no float tensor of the
+    full cache's shape outside kernel launches — the out-of-kernel bf16
+    dequant of the int8 cache."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_plan
+    from repro.models import cache_init, model_init
+
+    cfg = smoke_variant(get_config(arch)).with_(num_layers=2,
+                                                kv_cache_dtype="int8")
+    # capacity deliberately distinct from every model dim of both smoke
+    # configs (hd=16, d=64, qk=24, q_lora=32, ...) so a trailing-40 float
+    # axis can only be a cache-length score
+    batch, cap = 2, 40
+    mesh = make_host_mesh()
+    plan = build_plan(cfg, mesh, ShapeCfg("d", cap, batch, "decode"),
+                      kernel_backend="interpret")
+    params, _ = split_tree(model_init(jax.random.PRNGKey(0), cfg))
+    cache, _ = split_tree(cache_init(cfg, batch, cap))
+    tok = {"tokens": jnp.zeros((batch,), jnp.int32)}
+    pos = jnp.zeros((batch,), jnp.int32)
+
+    # shapes of the int8 cache leaves: a float array of any of these shapes
+    # outside a pallas_call is a full-cache dequant temporary
+    cache_shapes = {tuple(l.shape[1:]) for l in jax.tree.leaves(cache)
+                    if l.dtype == jnp.int8}
+
+    def temporaries(step_fn):
+        jaxpr = jax.make_jaxpr(step_fn)(params, tok, cache, pos)
+        bad = []
+        for eqn in _walk_eqns(jaxpr.jaxpr):
+            for v in eqn.outvars:
+                aval = v.aval
+                shape = tuple(getattr(aval, "shape", ()))
+                if not shape or not jnp.issubdtype(aval.dtype, jnp.floating):
+                    continue
+                # (a) score temporary: the einsum path's (b, n, g, S) /
+                # (b, n, 1, S) per-(query-head, token) f32 scores.  3D
+                # (b, heads, S) f32 is *allowed*: that is the
+                # per-(token, head) scale layout the fused roofline
+                # budgets for.
+                if (len(shape) >= 4 and shape[-1] == cap
+                        and shape[0] == batch
+                        and any(d in (cfg.num_heads, cfg.num_kv_heads)
+                                for d in shape[1:-1])):
+                    bad.append(("score", eqn.primitive.name, shape))
+                # (b) full-cache dequant temporary (per stacked layer)
+                if shape in cache_shapes or shape[1:] in cache_shapes:
+                    bad.append(("dequant", eqn.primitive.name, shape))
+        return bad
+
+    bad = temporaries(plan.step_fn)
+    assert not bad, f"serving-path temporaries found: {bad}"
+
+    # negative control: the einsum/ref step must trip both detectors —
+    # otherwise the guard above is vacuous
+    ref_plan = build_plan(cfg, mesh, ShapeCfg("d", cap, batch, "decode"),
+                          kernel_backend="ref")
+    ref_bad = temporaries(ref_plan.step_fn)
+    assert any(kind == "score" for kind, *_ in ref_bad), ref_bad
+    assert any(kind == "dequant" for kind, *_ in ref_bad), ref_bad
+
+
+# ---------------------------------------------------------------------------
+# autotune-key persistence for attention entries (REPRO_AUTOTUNE_CACHE)
+# ---------------------------------------------------------------------------
+
+
+def test_attention_autotune_key_roundtrips(tmp_path, monkeypatch):
+    path = str(tmp_path / "tiles.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    b, cap, nh, nkv, hd = 1, 16, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, nh, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, cap, nkv, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, cap, nkv, hd))
+    kcod, ks = kv_quantize(kc)
+    vcod, vs = kv_quantize(vc)
+    pos = jnp.array([cap - 1], jnp.int32)
+    best, timings = autotune_qattention(
+        "decode", q, kcod, vcod, pos, ks, vs, logit_scale=1.0 / hd ** 0.5,
+        backend="interpret", candidates=[(8, 8), (8, 16)], iters=1)
+    assert best is not None and timings and os.path.exists(path)
+    akey = dispatch.autotune_key("attn_gqa", cap, nh, hd, "attn", jnp.int8)
+    assert akey in dispatch.autotune_table()
+    # simulate a fresh process: drop the entry, reload from the JSON cache
+    dispatch._AUTOTUNE.pop(akey)
+    assert dispatch.load_autotune_table() >= 1
+    got = dispatch.lookup_tiles("attn_gqa", cap, nh, hd, "attn", jnp.int8)
+    assert got == (best[0], best[1], 1)
+    entries = json.load(open(path))["entries"]
+    assert any(e["key"][0] == "attn_gqa" for e in entries)
+    dispatch._AUTOTUNE.pop(akey, None)  # don't leak tuned tiles to others
+
+
+# ---------------------------------------------------------------------------
+# sharded-vs-single-device parity (8-way host-CPU harness from PR 4)
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+def test_sharded_fused_attention_generate_matches_single_device():
+    """int8-KV generate with the fused attention kernels under a pure
+    tensor-parallel mesh (heads shard over 'model' inside qattention's
+    shard_map): token-for-token identical to the 1x1 mesh."""
+    from repro.launch.serve import serve_batch
+
+    cfg = smoke_variant(get_config("llama3-8b")).with_(num_layers=2)
+    prompts = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    kw = dict(batch=2, prompt_len=8, gen=4, seed=11, prompts=prompts,
+              kernel_backend="interpret", kv_cache="int8")
+    out_1 = serve_batch(cfg, mesh=single_mesh(), **kw)
+    out_8 = serve_batch(cfg, mesh=tp_mesh(), **kw)
+    assert out_1["attention"] == "fused"
+    np.testing.assert_array_equal(out_8["tokens"], out_1["tokens"])
+
+
+@multidevice
+def test_sharded_qattention_decode_matches_unsharded():
+    """Kernel-level: qattention('decode') under shard_scope over an 8-way
+    model mesh must match the unsharded fused call (heads 8 % 8 == 0,
+    nkv 8 % 8 == 0 — the head-local psum-free route)."""
+    b, cap, nh, nkv, hd = 2, 16, 8, 8, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, nh, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, cap, nkv, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, cap, nkv, hd))
+    kcod, ks = kv_quantize(kc)
+    vcod, vs = kv_quantize(vc)
+    pos = jnp.array([5, 15], jnp.int32)
+    sc = 1.0 / hd ** 0.5
+    y0 = qattention("decode", q, kcod, vcod, pos, ks, vs, logit_scale=sc,
+                    backend="interpret")
+    mesh = tp_mesh()
+    with dispatch.shard_scope(mesh):
+        y8 = qattention("decode", q, kcod, vcod, pos, ks, vs,
+                        logit_scale=sc, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y0),
+                               rtol=3e-5, atol=3e-5)

@@ -4,7 +4,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
-	bench-attn serve-smoke serve-smoke-interpret train-smoke-interpret
+	bench-attn serve-smoke serve-smoke-interpret serve-trace-smoke \
+	train-smoke-interpret
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -39,6 +40,13 @@ serve-smoke-interpret:  ## serve smoke with fused kernels in interpret mode + in
 	$(PY) -m repro.launch.serve --arch llama3-8b --smoke \
 		--batch 2 --prompt-len 8 --gen 4 \
 		--kernel-backend interpret --kv-cache int8
+
+# continuous-batching engine smoke: a Poisson request trace replayed through
+# the paged int8 KV pipeline (chunked prefill interleaved with burst decode,
+# small page pool) with the fused kernels in interpret mode
+serve-trace-smoke:  ## engine trace replay: paged int8 pool + chunked prefill, interpret kernels
+	$(PY) -m benchmarks.bench_serve --trace 4 --backend interpret \
+		--slots 2 --page-size 8 --total-pages 8 --max-pages 5 --chunk 16
 
 bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
 	$(PY) -m benchmarks.bench_train

@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Select subsets with
-``python -m benchmarks.run [table ...]`` (default: all).
+``python -m benchmarks.run [table ...]`` (default: all); unknown table
+names fail fast before any benchmark runs, and ``--list`` prints the
+table registry and exits.
 
   ptq          Table 1  — PTQ method comparison (4-bit)
   refine       Table 2  — iterative-refinement impact
@@ -29,7 +31,17 @@ TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
 
 
 def main() -> None:
-    want = sys.argv[1:] or TABLES
+    argv = sys.argv[1:]
+    if "--list" in argv or "-l" in argv:
+        for t in TABLES:
+            print(t)
+        return
+    want = argv or TABLES
+    unknown = [t for t in want if t not in TABLES]
+    if unknown:
+        raise SystemExit(
+            f"unknown table(s): {', '.join(unknown)} — pick from: "
+            f"{', '.join(TABLES)} (or --list)")
     rows = []
 
     def report(name: str, us_per_call: float, derived: str):

@@ -86,6 +86,10 @@ _ACT_AXES = {
     "vocab": "model",
     "expert": "model", "capacity": None,
     "cache_seq": None,
+    # paged KV pool: pages are global (shared across slots) — never sharded
+    # over data; the kv_heads dim keeps its model rule like the contiguous
+    # cache it replaces
+    "kv_pages": None, "page_slot": None,
     "kv_lora": None, "rope_dim": None, "state": None,
     "mlstm_in": "model", "slstm_in": "model",
 }

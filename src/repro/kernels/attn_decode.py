@@ -31,6 +31,19 @@ minimize):
 positions beyond each sequence's ``pos`` and cache padding never
 contribute, with the same finite-NEG_INF / alpha-correction NaN hygiene as
 :mod:`repro.kernels.attn_prefill`.
+
+Paged variants — the continuous-batching engine stores KV in a global pool
+of fixed-size pages (page == kv tile) with a per-sequence page table
+``pt`` (b, np) int32.  ``pt`` rides in as a *scalar-prefetch* operand
+(:class:`pltpu.PrefetchScalarGridSpec`), so the BlockSpec index maps
+dereference it directly —
+
+    k_pool tile for (seq b, logical page pi) = k_pool[pt[b, pi]]
+
+— and the pool tiles DMA straight from their stored (possibly int8)
+layout, exactly like the contiguous kernels: no gather into a contiguous
+per-sequence temp, no out-of-kernel dequant.  The kernel bodies are the
+*same functions* as the contiguous path; only the index maps change.
 """
 from __future__ import annotations
 
@@ -44,6 +57,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.ref import ATTN_NEG_INF
 
 __all__ = ["attn_decode_gqa_pallas", "attn_decode_mla_pallas",
+           "attn_decode_gqa_paged_pallas", "attn_decode_mla_paged_pallas",
            "DECODE_ROWS"]
 
 DECODE_ROWS = 8     # sublane multiple query rows are padded to
@@ -267,3 +281,166 @@ def attn_decode_mla_pallas(
         ],
         interpret=interpret,
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged variants: KV tiles indexed through the page map
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("logit_scale", "interpret"))
+def attn_decode_gqa_paged_pallas(
+    pt: jnp.ndarray,
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    kmask: jnp.ndarray,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    *,
+    logit_scale: float,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged GQA decode: q (b, nkv, g8, hd) vs a page pool.
+
+    ``pt`` (b, np) int32 maps logical page ``pi`` of sequence ``b`` to its
+    physical page in ``k_pool``/``v_pool`` (P, ps, nkv, hd) [+ scale pools
+    (P, ps, nkv)].  ``kmask`` (b, np*ps) masks the logical window (dead
+    beyond ``pos``, so dummy/unallocated pages never contribute).  The kv
+    tile size *is* the page size; grid (b, nkv, np) with ``pt`` consulted
+    inside the index maps (scalar prefetch) — the pool is read once, as
+    stored, with scales folded in-kernel.  Returns (b, nkv, g8, hd_v) f32.
+    """
+    b, nkv, g8, hd = q.shape
+    ps = k_pool.shape[1]
+    hdv = v_pool.shape[-1]
+    npages = pt.shape[1]
+    quantized = k_scale is not None
+    if quantized != (v_scale is not None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    if ps % 8 or g8 % DECODE_ROWS:
+        raise ValueError(
+            f"page size {ps} % 8 or rows {g8} % {DECODE_ROWS}")
+    if kmask.shape != (b, npages * ps):
+        raise ValueError(
+            f"kmask {kmask.shape} != (b, np*ps) = {(b, npages * ps)}")
+    grid = (b, nkv, npages)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g8, hd), lambda bi, hi, ki, pt_ref: (bi, hi, 0, 0)),
+        pl.BlockSpec((1, ps, 1, hd),
+                     lambda bi, hi, ki, pt_ref: (pt_ref[bi, ki], 0, hi, 0)),
+        pl.BlockSpec((1, ps, 1, hdv),
+                     lambda bi, hi, ki, pt_ref: (pt_ref[bi, ki], 0, hi, 0)),
+        pl.BlockSpec((1, ps), lambda bi, hi, ki, pt_ref: (bi, ki)),
+    ]
+    args = [q, k_pool, v_pool, kmask]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, ps, 1),
+                         lambda bi, hi, ki, pt_ref: (pt_ref[bi, ki], 0, hi)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda bi, hi, ki, pt_ref: (pt_ref[bi, ki], 0, hi)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+
+    body = functools.partial(
+        _gqa_kernel, scale=float(logit_scale), nk=npages,
+        quantized=quantized)
+
+    def kern(pt_ref, *refs):  # scalar-prefetch operand arrives first
+        del pt_ref
+        body(*refs)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g8, hdv),
+                               lambda bi, hi, ki, pt_ref: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((g8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((g8, hdv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g8, hdv), jnp.float32),
+        interpret=interpret,
+    )(pt, *args)
+
+
+@functools.partial(jax.jit, static_argnames=("logit_scale", "interpret"))
+def attn_decode_mla_paged_pallas(
+    pt: jnp.ndarray,
+    q_lat: jnp.ndarray,
+    q_rope: jnp.ndarray,
+    c_pool: jnp.ndarray,
+    k_rope_pool: jnp.ndarray,
+    kmask: jnp.ndarray,
+    c_scale: jnp.ndarray | None = None,
+    *,
+    logit_scale: float,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged absorbed-latent MLA decode: q_lat (b, nh8, L) / q_rope
+    (b, nh8, R) vs c_pool (P, ps, L) + k_rope_pool (P, ps, R) [+ c_scale
+    pool (P, ps)] through ``pt`` (b, np); kmask (b, np*ps).  Same kernel
+    body as the contiguous MLA decode; returns the weighted latent
+    (b, nh8, L) f32."""
+    b, nh8, lat = q_lat.shape
+    ps = c_pool.shape[1]
+    rope = q_rope.shape[-1]
+    npages = pt.shape[1]
+    quantized = c_scale is not None
+    if ps % 8 or nh8 % DECODE_ROWS:
+        raise ValueError(
+            f"page size {ps} % 8 or rows {nh8} % {DECODE_ROWS}")
+    if kmask.shape != (b, npages * ps):
+        raise ValueError(
+            f"kmask {kmask.shape} != (b, np*ps) = {(b, npages * ps)}")
+    grid = (b, npages)
+
+    in_specs = [
+        pl.BlockSpec((1, nh8, lat), lambda bi, ki, pt_ref: (bi, 0, 0)),
+        pl.BlockSpec((1, nh8, rope), lambda bi, ki, pt_ref: (bi, 0, 0)),
+        pl.BlockSpec((1, ps, lat),
+                     lambda bi, ki, pt_ref: (pt_ref[bi, ki], 0, 0)),
+        pl.BlockSpec((1, ps, rope),
+                     lambda bi, ki, pt_ref: (pt_ref[bi, ki], 0, 0)),
+        pl.BlockSpec((1, ps), lambda bi, ki, pt_ref: (bi, ki)),
+    ]
+    args = [q_lat, q_rope, c_pool, k_rope_pool, kmask]
+    if quantized:
+        in_specs.append(
+            pl.BlockSpec((1, ps), lambda bi, ki, pt_ref: (pt_ref[bi, ki], 0)))
+        args.append(c_scale.astype(jnp.float32))
+
+    body = functools.partial(
+        _mla_kernel, scale=float(logit_scale), nk=npages,
+        quantized=quantized)
+
+    def kern(pt_ref, *refs):
+        del pt_ref
+        body(*refs)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, nh8, lat),
+                               lambda bi, ki, pt_ref: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nh8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((nh8, _STAT_LANES), jnp.float32),
+            pltpu.VMEM((nh8, lat), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nh8, lat), jnp.float32),
+        interpret=interpret,
+    )(pt, *args)

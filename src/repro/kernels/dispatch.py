@@ -92,7 +92,9 @@ from jax.sharding import PartitionSpec
 from repro.kernels import ref
 from repro.kernels.attn_decode import (
     DECODE_ROWS,
+    attn_decode_gqa_paged_pallas,
     attn_decode_gqa_pallas,
+    attn_decode_mla_paged_pallas,
     attn_decode_mla_pallas,
 )
 from repro.kernels.attn_prefill import attn_prefill_pallas
@@ -916,6 +918,20 @@ def qmatmul(params: dict, x: jnp.ndarray, spec, n: int, m: int, *,
 #   kind="mla_decode"  fused absorbed-latent MLA decode
 #                      (attn_decode_mla_pallas): int8 latent + per-token
 #                      scale, output is the weighted latent.
+#   kind="chunk_prefill"
+#                      the prefill kernel with *separate* q / key positions
+#                      (q length != key length): chunk queries against the
+#                      gathered prefix window + the raw in-flight chunk —
+#                      the chunked-prefill step of the continuous-batching
+#                      engine.  Serving-only: no VJP.
+#   kind="paged_decode" / "paged_mla_decode"
+#                      block-paged variants of the decode kinds: the KV
+#                      lives in a global page pool (P, ps, ...) and a
+#                      per-sequence page table (b, np) rides into the
+#                      Pallas index maps as a scalar-prefetch operand — the
+#                      int8 pool streams once, as stored, no gather into a
+#                      contiguous temp (the ref oracles *do* gather; that
+#                      gather is the jaxpr-guard negative control).
 #
 # Sharding: attention is head-local and batch-local, so inside a
 # shard_scope the fused kernels run under shard_map with heads on the
@@ -924,9 +940,12 @@ def qmatmul(params: dict, x: jnp.ndarray, spec, n: int, m: int, *,
 # the unsharded call (GSPMD handles the ref path directly).
 
 _ATTN_CODEBOOK = "attn"     # codebook slot of attention autotune keys
-_ATTN_KINDS = ("prefill", "decode", "mla_decode")
-_ATTN_METHOD = {"prefill": "attn_prefill", "decode": "attn_gqa",
-                "mla_decode": "attn_mla"}
+_ATTN_KINDS = ("prefill", "chunk_prefill", "decode", "mla_decode",
+               "paged_decode", "paged_mla_decode")
+_ATTN_METHOD = {"prefill": "attn_prefill", "chunk_prefill": "attn_chunk",
+                "decode": "attn_gqa", "mla_decode": "attn_mla",
+                "paged_decode": "attn_gqa_paged",
+                "paged_mla_decode": "attn_mla_paged"}
 
 
 def attn_tile_for(kind: str, seq: int, heads: int, depth: int, kv_dtype,
@@ -1040,6 +1059,50 @@ def _attn_prefill_bwd(logit_scale, backend, tiles, res, g):
 
 
 _attn_prefill_qdisp.defvjp(_attn_prefill_fwd, _attn_prefill_bwd)
+
+
+# ---- chunked prefill (q length != key length) ----
+
+
+def _attn_chunk_run(q, k, v, qpos, kpos, logit_scale, backend, tiles):
+    """q (b,s,nh,hd) at qpos (b,s) vs k/v (b,S,nkv,hd) at kpos (b,S) →
+    (b,s,nh,hdv) f32.  Same kernel as prefill — the flash kernel already
+    takes separate query/key position arrays; only the padding differs
+    (q and kv lengths round up to their tiles independently)."""
+    b, s, nh, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    bq, bkv = tiles or attn_tile_for(
+        "chunk_prefill", skv, nh, hd, k.dtype, (128, 128))
+    bq = min(bq, _round_up(s, 8))
+    bkv = min(bkv, _round_up(skv, 8))
+    sq, sk = _round_up(s, bq), _round_up(skv, bkv)
+    qt = _pad_axis(q, 1, sq)
+    kt = _pad_axis(k, 1, sk)
+    vt = _pad_axis(v, 1, sk)
+    qp = _pad_axis(qpos, 1, sq, value=-1)
+    kp = _pad_axis(kpos, 1, sk, value=-1)
+    y = attn_prefill_pallas(
+        qt, kt, vt, qp, kp, logit_scale=float(logit_scale),
+        bq=bq, bkv=bkv, interpret=(backend == "interpret"))
+    return y[:, :s]
+
+
+def _attn_chunk_fused(q, k, v, qpos, kpos, logit_scale, backend, tiles):
+    tp = _attn_shard(backend, q.shape[2], k.shape[2])
+    if tp is None:
+        return _attn_chunk_run(q, k, v, qpos, kpos, logit_scale, backend,
+                               tiles)
+    mesh, axis = tp
+    dp = _dp_axes(mesh, axis, q.shape[0])
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    hspec = PartitionSpec(bspec, None, axis, None)
+    pspec = PartitionSpec(bspec, None)
+    return shard_map(
+        lambda ql, kl, vl, qpl, kpl: _attn_chunk_run(
+            ql, kl, vl, qpl, kpl, logit_scale, backend, tiles),
+        mesh=mesh, in_specs=(hspec, hspec, hspec, pspec, pspec),
+        out_specs=hspec, check_rep=False,
+    )(q, k, v, qpos, kpos)
 
 
 # ---- GQA decode ----
@@ -1162,6 +1225,118 @@ def _attn_mla_fused(q_lat, q_rope, c, k_rope, pos, c_scale, logit_scale,
     )(q_lat, q_rope, c, k_rope, pos, c_scale)
 
 
+# ---- paged GQA decode ----
+
+
+def _attn_paged_run(q, k_pool, v_pool, pt, pos, k_scale, v_scale,
+                    logit_scale, backend):
+    """q (b,nh,hd) vs page pools (P,ps,nkv,hd) [+ scale pools (P,ps,nkv)]
+    through the page table pt (b,np) → (b,nh,hdv) f32.  The kv tile is the
+    page — no tile padding of the pool, and no gather: pt rides into the
+    kernel's index maps."""
+    b, nh, hd = q.shape
+    ps, nkv = k_pool.shape[1], k_pool.shape[2]
+    g = nh // nkv
+    g8 = _round_up(g, DECODE_ROWS)
+    qg = _pad_axis(q.reshape(b, nkv, g, hd), 2, g8)
+    cap = pt.shape[1] * ps
+    y = attn_decode_gqa_paged_pallas(
+        pt, qg, k_pool, v_pool, _decode_kmask(pos, cap), k_scale, v_scale,
+        logit_scale=float(logit_scale), interpret=(backend == "interpret"))
+    return y[:, :, :g].reshape(b, nh, v_pool.shape[-1])
+
+
+def _attn_paged_fused(q, k_pool, v_pool, pt, pos, k_scale, v_scale,
+                      logit_scale, backend):
+    tp = _attn_shard(backend, q.shape[1], k_pool.shape[2])
+    if tp is None:
+        return _attn_paged_run(q, k_pool, v_pool, pt, pos, k_scale, v_scale,
+                               logit_scale, backend)
+    mesh, axis = tp
+    dp = _dp_axes(mesh, axis, q.shape[0])
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    qspec = PartitionSpec(bspec, axis, None)
+    # the pool is global (slots share it): kv heads shard on the model
+    # axis exactly like the contiguous cache, pages replicate over data
+    poolspec = PartitionSpec(None, None, axis, None)
+    spoolspec = PartitionSpec(None, None, axis)
+    ptspec = PartitionSpec(bspec, None)
+    pspec = PartitionSpec(bspec)
+
+    def body(ql, kl, vl, ptl, posl, ksl, vsl):
+        return _attn_paged_run(ql, kl, vl, ptl, posl, ksl, vsl, logit_scale,
+                               backend)
+
+    if k_scale is None:
+        return shard_map(
+            lambda ql, kl, vl, ptl, posl: body(ql, kl, vl, ptl, posl, None,
+                                               None),
+            mesh=mesh, in_specs=(qspec, poolspec, poolspec, ptspec, pspec),
+            out_specs=qspec, check_rep=False,
+        )(q, k_pool, v_pool, pt, pos)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, poolspec, poolspec, ptspec, pspec, spoolspec,
+                  spoolspec),
+        out_specs=qspec, check_rep=False,
+    )(q, k_pool, v_pool, pt, pos, k_scale, v_scale)
+
+
+# ---- paged MLA decode ----
+
+
+def _attn_mla_paged_run(q_lat, q_rope, c_pool, k_rope_pool, pt, pos,
+                        c_scale, logit_scale, backend):
+    """q_lat (b,nh,L) / q_rope (b,nh,R) vs c_pool (P,ps,L) +
+    k_rope_pool (P,ps,R) [+ c_scale pool (P,ps)] through pt (b,np) →
+    weighted latent (b,nh,L) f32."""
+    b, nh, _ = q_lat.shape
+    ps = c_pool.shape[1]
+    nh8 = _round_up(nh, DECODE_ROWS)
+    qlp = _pad_axis(q_lat, 1, nh8)
+    qrp = _pad_axis(q_rope, 1, nh8)
+    cap = pt.shape[1] * ps
+    y = attn_decode_mla_paged_pallas(
+        pt, qlp, qrp, c_pool, k_rope_pool, _decode_kmask(pos, cap), c_scale,
+        logit_scale=float(logit_scale), interpret=(backend == "interpret"))
+    return y[:, :nh]
+
+
+def _attn_mla_paged_fused(q_lat, q_rope, c_pool, k_rope_pool, pt, pos,
+                          c_scale, logit_scale, backend):
+    tp = _attn_shard(backend, q_lat.shape[1], q_lat.shape[1])
+    if tp is None:
+        return _attn_mla_paged_run(q_lat, q_rope, c_pool, k_rope_pool, pt,
+                                   pos, c_scale, logit_scale, backend)
+    mesh, axis = tp
+    dp = _dp_axes(mesh, axis, q_lat.shape[0])
+    bspec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    qspec = PartitionSpec(bspec, axis, None)    # heads shard
+    poolspec = PartitionSpec(None, None, None)  # latent pool replicates
+    spoolspec = PartitionSpec(None, None)
+    ptspec = PartitionSpec(bspec, None)
+    pspec = PartitionSpec(bspec)
+
+    def body(qll, qrl, cl, krl, ptl, posl, csl):
+        return _attn_mla_paged_run(qll, qrl, cl, krl, ptl, posl, csl,
+                                   logit_scale, backend)
+
+    if c_scale is None:
+        return shard_map(
+            lambda qll, qrl, cl, krl, ptl, posl: body(qll, qrl, cl, krl,
+                                                      ptl, posl, None),
+            mesh=mesh,
+            in_specs=(qspec, qspec, poolspec, poolspec, ptspec, pspec),
+            out_specs=qspec, check_rep=False,
+        )(q_lat, q_rope, c_pool, k_rope_pool, pt, pos)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, qspec, poolspec, poolspec, ptspec, pspec,
+                  spoolspec),
+        out_specs=qspec, check_rep=False,
+    )(q_lat, q_rope, c_pool, k_rope_pool, pt, pos, c_scale)
+
+
 # ---- public entry point ----
 
 
@@ -1170,11 +1345,20 @@ def qattention(kind: str, *args, logit_scale: float,
                tiles: tuple[int, int] | None = None) -> jnp.ndarray:
     """Unified fused-attention entry point (see the section comment).
 
-    kind="prefill":     qattention("prefill", q, k, v, positions, ...)
-    kind="decode":      qattention("decode", q, k, v, pos,
-                                   k_scale=None, v_scale=None, ...)
-    kind="mla_decode":  qattention("mla_decode", q_lat, q_rope, c, k_rope,
-                                   pos, c_scale=None, ...)
+    kind="prefill":       qattention("prefill", q, k, v, positions, ...)
+    kind="chunk_prefill": qattention("chunk_prefill", q, k, v, qpos,
+                                     kpos, ...)
+    kind="decode":        qattention("decode", q, k, v, pos,
+                                     k_scale=None, v_scale=None, ...)
+    kind="mla_decode":    qattention("mla_decode", q_lat, q_rope, c,
+                                     k_rope, pos, c_scale=None, ...)
+    kind="paged_decode":  qattention("paged_decode", q, k_pool, v_pool,
+                                     pt, pos, k_scale=None,
+                                     v_scale=None, ...)
+    kind="paged_mla_decode":
+                          qattention("paged_mla_decode", q_lat, q_rope,
+                                     c_pool, k_rope_pool, pt, pos,
+                                     c_scale=None, ...)
 
     Fused backends (pallas/interpret) run the Pallas kernels with
     pad-to-tile and optional shard_map; ``ref``/``dense`` run the
@@ -1192,6 +1376,33 @@ def qattention(kind: str, *args, logit_scale: float,
             return _attn_prefill_qdisp(q, k, v, positions,
                                        float(logit_scale), backend, tiles)
         return ref.attn_prefill_ref(q, k, v, positions, float(logit_scale))
+    if kind == "chunk_prefill":
+        q, k, v, qpos, kpos = args
+        if backend in _FUSED:
+            return _attn_chunk_fused(q, k, v, qpos, kpos,
+                                     float(logit_scale), backend, tiles)
+        return ref.attn_chunk_prefill_ref(q, k, v, qpos, kpos,
+                                          float(logit_scale))
+    if kind == "paged_decode":
+        q, k_pool, v_pool, pt, pos = args[:5]
+        k_scale = args[5] if len(args) > 5 else None
+        v_scale = args[6] if len(args) > 6 else None
+        if backend in _FUSED:
+            return _attn_paged_fused(q, k_pool, v_pool, pt, pos, k_scale,
+                                     v_scale, float(logit_scale), backend)
+        return ref.attn_decode_paged_ref(pt, q, k_pool, v_pool, pos,
+                                         k_scale, v_scale,
+                                         float(logit_scale))
+    if kind == "paged_mla_decode":
+        q_lat, q_rope, c_pool, k_rope_pool, pt, pos = args[:6]
+        c_scale = args[6] if len(args) > 6 else None
+        if backend in _FUSED:
+            return _attn_mla_paged_fused(q_lat, q_rope, c_pool, k_rope_pool,
+                                         pt, pos, c_scale,
+                                         float(logit_scale), backend)
+        return ref.attn_mla_decode_paged_ref(pt, q_lat, q_rope, c_pool,
+                                             k_rope_pool, pos, c_scale,
+                                             float(logit_scale))
     if kind == "decode":
         q, k, v, pos = args[:4]
         k_scale = args[4] if len(args) > 4 else None
@@ -1212,9 +1423,16 @@ def qattention(kind: str, *args, logit_scale: float,
 
 _ATTN_CANDIDATES = {
     "prefill": ((128, 128), (128, 256), (256, 128), (64, 128), (128, 512)),
+    "chunk_prefill": ((128, 128), (128, 256), (64, 128), (64, 256),
+                      (128, 512)),
     "decode": ((DECODE_ROWS, 128), (DECODE_ROWS, 256), (DECODE_ROWS, 512)),
     "mla_decode": ((DECODE_ROWS, 128), (DECODE_ROWS, 256),
                    (DECODE_ROWS, 512)),
+    # paged decode has no tile freedom (the kv tile IS the page size); a
+    # single sentinel candidate still times + registers the autotune key so
+    # paged launches are attributable in the persisted table
+    "paged_decode": ((DECODE_ROWS, 0),),
+    "paged_mla_decode": ((DECODE_ROWS, 0),),
 }
 
 
@@ -1233,10 +1451,22 @@ def autotune_qattention(kind: str, *args, logit_scale: float,
         q, k = args[0], args[1]
         seq, heads, depth, kv_dtype = q.shape[1], q.shape[2], q.shape[3], \
             k.dtype
+    elif kind == "chunk_prefill":
+        q, k = args[0], args[1]
+        seq, heads, depth, kv_dtype = k.shape[1], q.shape[2], q.shape[3], \
+            k.dtype
     elif kind == "decode":
         q, k = args[0], args[1]
         seq, heads, depth, kv_dtype = k.shape[1], q.shape[1], q.shape[2], \
             k.dtype
+    elif kind == "paged_decode":
+        q, k_pool, pt = args[0], args[1], args[3]
+        seq = pt.shape[1] * k_pool.shape[1]
+        heads, depth, kv_dtype = q.shape[1], q.shape[2], k_pool.dtype
+    elif kind == "paged_mla_decode":
+        q_lat, c_pool, pt = args[0], args[2], args[4]
+        seq = pt.shape[1] * c_pool.shape[1]
+        heads, depth, kv_dtype = q_lat.shape[1], q_lat.shape[2], c_pool.dtype
     else:
         q_lat, c = args[0], args[2]
         seq, heads, depth, kv_dtype = c.shape[1], q_lat.shape[1], \

@@ -22,8 +22,11 @@ __all__ = [
     "block_matmul_t_ref",
     "block_grads_ref",
     "attn_prefill_ref",
+    "attn_chunk_prefill_ref",
     "attn_decode_ref",
     "attn_mla_decode_ref",
+    "attn_decode_paged_ref",
+    "attn_mla_decode_paged_ref",
     "ATTN_NEG_INF",
 ]
 
@@ -258,6 +261,83 @@ def attn_mla_decode_ref(
     scores = jnp.where(live[:, None], scores, ATTN_NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhs,bsl->bhl", probs, cf)
+
+
+def attn_chunk_prefill_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    qpos: jnp.ndarray,
+    kpos: jnp.ndarray,
+    logit_scale: float,
+) -> jnp.ndarray:
+    """Two-positions variant of :func:`attn_prefill_ref` for chunked
+    prefill: q (b, s, nh, hd) at ``qpos`` (b, s) attends keys (b, S, nkv,
+    hd) at ``kpos`` (b, S) — q and key lengths may differ (prefix window +
+    current chunk).  Mask: ``kpos <= qpos``, both non-negative."""
+    b, s, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    qf = q.astype(jnp.float32) * jnp.float32(logit_scale)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, s, nkv, g, hd)
+    scores = jnp.einsum("bqngh,bknh->bngqk", qg, kf)
+    live = (kpos[:, None, :] <= qpos[:, :, None]) \
+        & (kpos[:, None, :] >= 0) & (qpos[:, :, None] >= 0)   # (b, q, k)
+    scores = jnp.where(live[:, None, None], scores, ATTN_NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngqk,bknh->bqngh", probs, vf)
+    return out.reshape(b, s, nh, vf.shape[-1])
+
+
+def _gather_pool(pool: jnp.ndarray, pt: jnp.ndarray) -> jnp.ndarray:
+    """(P, ps, ...) pool → contiguous (b, np*ps, ...) per-sequence window —
+    the exact gather temp the paged kernels exist to avoid (this oracle is
+    the negative control for the no-gather jaxpr guard)."""
+    b, npages = pt.shape
+    ps = pool.shape[1]
+    flat = pool.reshape((pool.shape[0] * ps,) + pool.shape[2:])
+    idx = (pt[:, :, None] * ps
+           + jnp.arange(ps, dtype=pt.dtype)[None, None, :]).reshape(b, -1)
+    return jnp.take(flat, idx, axis=0)
+
+
+def attn_decode_paged_ref(
+    pt: jnp.ndarray,
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    pos: jnp.ndarray,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    logit_scale: float | None = None,
+) -> jnp.ndarray:
+    """Paged GQA decode oracle: gather each sequence's pages into the
+    contiguous (b, np*ps, nkv, hd) cache the fused paged kernel never
+    materializes, then defer to :func:`attn_decode_ref`."""
+    k = _gather_pool(k_pool, pt)
+    v = _gather_pool(v_pool, pt)
+    ks = None if k_scale is None else _gather_pool(k_scale, pt)
+    vs = None if v_scale is None else _gather_pool(v_scale, pt)
+    return attn_decode_ref(q, k, v, pos, ks, vs, logit_scale)
+
+
+def attn_mla_decode_paged_ref(
+    pt: jnp.ndarray,
+    q_lat: jnp.ndarray,
+    q_rope: jnp.ndarray,
+    c_pool: jnp.ndarray,
+    k_rope_pool: jnp.ndarray,
+    pos: jnp.ndarray,
+    c_scale: jnp.ndarray | None = None,
+    logit_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Paged MLA decode oracle (gather + :func:`attn_mla_decode_ref`)."""
+    c = _gather_pool(c_pool, pt)
+    kr = _gather_pool(k_rope_pool, pt)
+    cs = None if c_scale is None else _gather_pool(c_scale, pt)
+    return attn_mla_decode_ref(q_lat, q_rope, c, kr, pos, cs, logit_scale)
 
 
 def block_matmul_ref(

@@ -1,0 +1,461 @@
+"""Continuous-batching serving engine over the block-paged KV cache.
+
+The fixed-capacity :func:`repro.launch.serve.serve_batch` allocates
+``prompt_len + gen`` cache rows per sequence and runs one batch to
+completion — ragged real traffic wastes cache memory on short requests and
+stalls everyone behind the longest prompt.  This engine serves a *stream*:
+
+  * **Page pool** — every layer's KV lives in a global pool of fixed-size
+    pages (``models.paged_cache_init``); a request holds only the pages its
+    tokens actually fill, via a per-slot page table.  Page 0 is a dummy:
+    unmapped table entries point at it, so dead slots/rows write there and
+    never corrupt live state.
+  * **Scheduler** — FIFO admission while free pages last; decode pages are
+    allocated on demand, and when the pool runs dry the *youngest* admitted
+    request is evicted (pages freed, request requeued at the front for
+    recompute) so the oldest always completes — no livelock.
+  * **Chunked prefill** — prompts prefill ``chunk`` tokens per tick
+    (``steps.build_prefill_chunk_plan``), interleaved with decode steps, so
+    a long prompt never stalls the decode batch.
+  * **Fixed-shape steps** — every tick reuses two jitted step functions
+    (chunk prefill + paged decode burst) with constant shapes: slot
+    activity is encoded in the *data* (dead rows: positions -1, page-table
+    rows 0), never in the shapes, so the engine never recompiles no matter
+    the arrival pattern.  Pools are donated through every step.
+
+Decode semantics match ``serve_batch`` token for token: token 1 is sampled
+from the prefill logits at the prompt's last live row, decode step k runs
+at position ``prompt_len + k - 1``.  The parity tests pin the engine to the
+PR 2 ``loop='scan'`` path bitwise under greedy sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (
+    build_paged_generate_plan,
+    build_prefill_chunk_plan,
+)
+from repro.models import model_init, paged_cache_init, split_tree
+
+__all__ = ["Request", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: ``tokens`` is the prompt (1-D int array),
+    ``max_new`` the generation budget, ``arrival`` the trace-relative
+    arrival time in seconds (0 = available immediately)."""
+    rid: int
+    tokens: np.ndarray
+    max_new: int
+    arrival: float = 0.0
+
+
+_FREE, _PREFILL, _DECODE = "free", "prefill", "decode"
+
+
+@dataclasses.dataclass
+class _Slot:
+    state: str = _FREE
+    req: Request | None = None
+    pages: list = dataclasses.field(default_factory=list)
+    chunk_done: int = 0       # prompt tokens already prefilled
+    tok: int = 0              # last generated token (next decode input)
+    pos: int = 0              # next decode write position
+    out: list = dataclasses.field(default_factory=list)
+    admit_seq: int = -1       # admission order (eviction picks the max)
+    admit_t: float = 0.0
+    first_tok_t: float | None = None
+
+
+class Engine:
+    """Continuous-batching engine; see the module docstring.
+
+    Geometry: ``slots`` concurrent sequences, a pool of ``total_pages``
+    pages of ``page_size`` tokens (page 0 reserved), per-slot page tables
+    of ``max_pages`` entries (the per-request capacity ceiling), prompts
+    prefilled ``chunk`` tokens at a time (``chunk % page_size == 0``).
+    ``burst`` decode steps run as one on-device scan when no prefill or
+    arrival is waiting (1 while interleaving, so prompts never stall).
+    """
+
+    def __init__(self, cfg, *, slots: int, total_pages: int, page_size: int,
+                 max_pages: int, chunk: int, burst: int = 8, mesh=None,
+                 kernel_backend: str | None = None,
+                 temperature: float = 0.0, seed: int = 0, params=None):
+        if cfg.input_kind != "tokens":
+            raise ValueError("the paged engine serves token models")
+        if chunk % page_size:
+            raise ValueError(f"chunk {chunk} % page_size {page_size}")
+        if total_pages < 2:
+            raise ValueError("need at least one real page beyond the dummy")
+        self.cfg = cfg
+        self.slots = slots
+        self.total_pages = total_pages
+        self.page_size = page_size
+        self.max_pages = max_pages
+        self.chunk = chunk
+        self.burst = max(int(burst), 1)
+        self.temperature = temperature
+        self.mesh = mesh or make_host_mesh()
+
+        kw = dict(slots=slots, total_pages=total_pages, page_size=page_size,
+                  max_pages=max_pages, temperature=temperature,
+                  kernel_backend=kernel_backend)
+        self.chunk_plan = build_prefill_chunk_plan(
+            cfg, self.mesh, chunk=chunk, **kw)
+        self.decode_plan = build_paged_generate_plan(
+            cfg, self.mesh, gen=1, **kw)
+        self.burst_plan = (build_paged_generate_plan(
+            cfg, self.mesh, gen=self.burst, **kw)
+            if self.burst > 1 else self.decode_plan)
+
+        if params is None:
+            params, _ = split_tree(model_init(jax.random.PRNGKey(seed), cfg))
+        pools, _ = split_tree(
+            paged_cache_init(cfg, total_pages, page_size))
+        if int(np.prod(tuple(self.mesh.shape.values()))) > 1:
+            params = jax.device_put(params, self.chunk_plan.in_shardings[0])
+            pools = jax.device_put(pools, self.chunk_plan.in_shardings[2])
+        self.params = params
+        self.pools = pools
+        self._key = jax.random.PRNGKey(seed + 1)
+
+        self._chunk_step = jax.jit(self.chunk_plan.step_fn,
+                                   donate_argnums=(2,))
+        self._decode_step = jax.jit(self.decode_plan.step_fn,
+                                    donate_argnums=(2,))
+        self._burst_step = (jax.jit(self.burst_plan.step_fn,
+                                    donate_argnums=(2,))
+                            if self.burst > 1 else self._decode_step)
+
+        self._slots = [_Slot() for _ in range(slots)]
+        self._free_pages = list(range(1, total_pages))  # page 0 = dummy
+        self._admit_seq = 0
+        self._warm = False
+        self.stats: dict = {}
+
+    def warmup(self):
+        """Compile and steady-state every step function before serving:
+        two calls each, because the first call sees uncommitted input
+        buffers and the second (donated, committed) hits a separate jit
+        cache entry — without this the second compile lands inside the
+        first timed run.  All-dead inputs (positions -1, page tables 0)
+        only ever write the dummy page, so the pools stay semantically
+        empty."""
+        if self._warm:
+            return
+        z_tok = jnp.zeros((self.slots, self.chunk), jnp.int32)
+        z_qpos = jnp.full((self.slots, self.chunk), -1, jnp.int32)
+        z_pos = jnp.zeros((self.slots,), jnp.int32)
+        z_pt = jnp.zeros((self.slots, self.max_pages), jnp.int32)
+        z_t = jnp.zeros((self.slots,), jnp.int32)
+        for _ in range(2):
+            tok1, self.pools = self._chunk_step(
+                self.params, z_tok, self.pools, z_pt, z_qpos, z_pos,
+                self._split_key())
+            toks, self.pools = self._decode_step(
+                self.params, z_t, self.pools, z_pt, z_pos,
+                self._split_key())
+            if self._burst_step is not self._decode_step:
+                toks, self.pools = self._burst_step(
+                    self.params, z_t, self.pools, z_pt, z_pos,
+                    self._split_key())
+            jax.block_until_ready(toks)
+        self._warm = True
+
+    # ---- page accounting ------------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        """Pages a request holds at peak: prompt chunks round up to the
+        chunk grid, and decode writes through plen + max_new - 2."""
+        plen = len(req.tokens)
+        hi = max(-(-plen // self.chunk) * self.chunk,
+                 plen + req.max_new - 1)
+        return -(-hi // self.page_size)
+
+    def _validate(self, req: Request):
+        need = self._pages_needed(req)
+        cap = min(self.max_pages, self.total_pages - 1)
+        if need > cap:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages "
+                f"(prompt {len(req.tokens)} + gen {req.max_new}, page size "
+                f"{self.page_size}) but the ceiling is {cap} "
+                f"(max_pages={self.max_pages}, pool={self.total_pages})")
+        if not req.max_new:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
+
+    def _evict_youngest(self, queue: deque) -> bool:
+        """Free the youngest admitted slot and requeue its request at the
+        front (recompute-on-readmit).  Returns False if nothing is active."""
+        active = [s for s in self._slots if s.state != _FREE]
+        if not active:
+            return False
+        victim = max(active, key=lambda s: s.admit_seq)
+        self._free_pages.extend(victim.pages)
+        queue.appendleft(victim.req)
+        self._reset(victim)
+        self.stats["evictions"] += 1
+        return True
+
+    def _try_page(self, slot: _Slot, logical: int) -> bool:
+        """Grow slot's page list through logical index ``logical`` from the
+        free pool; False (no allocation rollback needed — partial growth is
+        still valid) if the pool runs dry."""
+        while len(slot.pages) <= logical:
+            if not self._free_pages:
+                return False
+            slot.pages.append(self._free_pages.pop())
+        return True
+
+    def _claim(self, slots_, need_fn, queue: deque, can_wait: bool):
+        """Partition a phase's slots into those whose pages are available
+        this tick.  A starved slot *stalls* — skips the tick and keeps its
+        pages; the pool refills as siblings complete, so stalling is almost
+        always cheaper than eviction-recompute.  Eviction is the last
+        resort: only when no slot in the phase can move and there is no
+        other progress to wait on (``can_wait``) does the scheduler evict
+        the youngest admitted request to break the deadlock."""
+        ready, stalled = [], []
+        for s in slots_:
+            (ready if self._try_page(s, need_fn(s)) else stalled).append(s)
+        while not ready and stalled and not can_wait:
+            if not self._evict_youngest(queue):
+                break
+            # the victim may have been anywhere, including `stalled`
+            stalled = [s for s in stalled if s.req is not None]
+            retry, stalled = stalled, []
+            for s in retry:
+                (ready if self._try_page(s, need_fn(s))
+                 else stalled).append(s)
+        return [s for s in ready if s.req is not None]
+
+    def _reset(self, slot: _Slot):
+        slot.state = _FREE
+        slot.req = None
+        slot.pages = []
+        slot.chunk_done = 0
+        slot.tok = 0
+        slot.pos = 0
+        slot.out = []
+        slot.admit_seq = -1
+        slot.first_tok_t = None
+
+    def _split_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ---- run loop -------------------------------------------------------
+
+    def run(self, requests, *, timeout_s: float = 300.0) -> dict:
+        """Replay ``requests`` (any order; sorted by arrival) to completion.
+
+        Returns a stats dict: per-request records plus goodput
+        (completed generated tokens / wall second), latency percentiles,
+        per-phase prefill/decode milliseconds, and eviction/step counts.
+        """
+        for r in requests:
+            self._validate(r)
+        self.warmup()
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        queue: deque = deque()
+        records = []
+        self.stats = {"evictions": 0, "chunk_steps": 0, "decode_steps": 0,
+                      "prefill_ms": 0.0, "decode_ms": 0.0}
+        t0 = time.perf_counter()
+        self._t0 = t0
+
+        def now():
+            return time.perf_counter() - t0
+
+        def finish(slot: _Slot):
+            t = now()
+            records.append({
+                "rid": slot.req.rid,
+                "arrival": slot.req.arrival,
+                "admitted": slot.admit_t,
+                "first_token": slot.first_tok_t,
+                "finished": t,
+                "latency": t - slot.req.arrival,
+                "prompt_len": int(len(slot.req.tokens)),
+                "tokens": list(slot.out),
+            })
+            self._free_pages.extend(slot.pages)
+            self._reset(slot)
+
+        while pending or queue or any(s.state != _FREE for s in self._slots):
+            if now() > timeout_s:
+                raise RuntimeError(
+                    f"engine run exceeded {timeout_s}s with "
+                    f"{len(pending) + len(queue)} requests unserved")
+            while pending and pending[0].arrival <= now():
+                queue.append(pending.popleft())
+
+            # admission: FIFO while a slot is free and the pool can cover
+            # the whole prompt (gating on full prompt pages, not just the
+            # first chunk, keeps overcommit — and eviction thrash — down;
+            # pages past the first chunk are still allocated lazily)
+            for slot in self._slots:
+                if not queue or slot.state != _FREE:
+                    continue
+                req = queue[0]
+                if len(self._free_pages) < -(-len(req.tokens)
+                                             // self.page_size):
+                    break
+                first = -(-min(len(req.tokens), self.chunk)
+                          // self.page_size)
+                queue.popleft()
+                slot.state = _PREFILL
+                slot.req = req
+                slot.pages = [self._free_pages.pop() for _ in range(first)]
+                slot.admit_seq = self._admit_seq
+                self._admit_seq += 1
+                slot.admit_t = now()
+
+            prefilling = [s for s in self._slots if s.state == _PREFILL]
+            if prefilling:
+                self._run_chunk(prefilling, queue, finish)
+
+            decoding = [s for s in self._slots if s.state == _DECODE]
+            if decoding:
+                # burst only when nothing competes for the device: no
+                # prefill in flight, and no admissible work waiting (a
+                # non-empty queue with every slot busy can't be admitted,
+                # so it doesn't force single-stepping)
+                can_admit = any(s.state == _FREE for s in self._slots)
+                waiting = bool(queue) or (
+                    pending and pending[0].arrival <= now() + 1e-3)
+                quiet = not prefilling and not (can_admit and waiting)
+                n = self.burst if quiet else 1
+                n = min(n, max(len(s.req.tokens) + s.req.max_new - s.pos - 1
+                               for s in decoding))
+                self._run_decode(decoding, max(n, 1), queue, finish)
+
+            if not prefilling and not decoding and not queue and pending:
+                time.sleep(min(max(pending[0].arrival - now(), 0.0), 0.05))
+
+        wall = now()
+        lat = sorted(r["latency"] for r in records)
+
+        def pct(p):
+            return lat[min(int(p * len(lat)), len(lat) - 1)] if lat else 0.0
+
+        gen_tokens = sum(len(r["tokens"]) for r in records)
+        self.stats.update({
+            "requests": len(records),
+            "all_completed": len(records) == len(requests),
+            "wall_s": wall,
+            "goodput_tok_s": gen_tokens / max(wall, 1e-9),
+            "generated_tokens": gen_tokens,
+            "latency_p50_s": pct(0.50),
+            "latency_p99_s": pct(0.99),
+            "records": records,
+        })
+        return dict(self.stats)
+
+    # ---- phase steps ----------------------------------------------------
+
+    def _run_chunk(self, prefilling, queue, finish):
+        cs = self.chunk
+
+        def pages_for_chunk(s):
+            # pages ahead of this chunk are allocated lazily so a long
+            # prompt doesn't hold its whole footprint from tick 0
+            return (min(s.chunk_done + cs, len(s.req.tokens)) - 1) \
+                // self.page_size
+
+        prefilling = self._claim(
+            prefilling, pages_for_chunk, queue,
+            can_wait=any(s.state == _DECODE for s in self._slots))
+        if not prefilling:
+            return
+        tokens = np.zeros((self.slots, cs), np.int32)
+        qpos = np.full((self.slots, cs), -1, np.int32)
+        pos0 = np.zeros((self.slots,), np.int32)
+        live = {id(s) for s in prefilling}
+        for s in prefilling:
+            i = self._slots.index(s)
+            seg = np.asarray(s.req.tokens[s.chunk_done: s.chunk_done + cs],
+                             np.int32)
+            tokens[i, : len(seg)] = seg
+            qpos[i, : len(seg)] = s.chunk_done + np.arange(len(seg))
+            pos0[i] = s.chunk_done
+        pt = np.zeros((self.slots, self.max_pages), np.int32)
+        for i, s in enumerate(self._slots):
+            if id(s) in live:
+                pt[i, : len(s.pages)] = s.pages
+        t0 = time.perf_counter()
+        tok1, self.pools = self._chunk_step(
+            self.params, jnp.asarray(tokens), self.pools, jnp.asarray(pt),
+            jnp.asarray(qpos), jnp.asarray(pos0), self._split_key())
+        tok1 = np.asarray(tok1)
+        self.stats["prefill_ms"] += (time.perf_counter() - t0) * 1e3
+        self.stats["chunk_steps"] += 1
+        for s in prefilling:
+            i = self._slots.index(s)
+            s.chunk_done += cs
+            if s.chunk_done < len(s.req.tokens):
+                continue
+            s.state = _DECODE
+            s.tok = int(tok1[i])
+            s.pos = len(s.req.tokens)
+            s.out = [s.tok]
+            s.first_tok_t = time.perf_counter() - self._t0
+            if len(s.out) >= s.req.max_new:
+                finish(s)
+
+    def _run_decode(self, decoding, n, queue, finish):
+        def pages_for_burst(s):
+            # decode writes positions pos .. pos+n-1, capped at the
+            # request's true last write (plen + max_new - 2); overrun
+            # steps past that land in the dummy page
+            return min((s.pos + n - 1) // self.page_size,
+                       (len(s.req.tokens) + s.req.max_new - 2)
+                       // self.page_size)
+
+        decoding = self._claim(decoding, pages_for_burst, queue,
+                               can_wait=False)
+        if not decoding:
+            return
+        tok = np.zeros((self.slots,), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        live = {id(s) for s in decoding}
+        for s in decoding:
+            i = self._slots.index(s)
+            tok[i] = s.tok
+            pos[i] = s.pos
+        pt = np.zeros((self.slots, self.max_pages), np.int32)
+        for i, s in enumerate(self._slots):
+            if id(s) in live:
+                pt[i, : len(s.pages)] = s.pages
+        step = self._burst_step if n == self.burst and self.burst > 1 \
+            else self._decode_step
+        if n not in (1, self.burst):
+            step = self._decode_step
+            n = 1
+        t0 = time.perf_counter()
+        toks, self.pools = step(
+            self.params, jnp.asarray(tok), self.pools, jnp.asarray(pt),
+            jnp.asarray(pos), self._split_key())
+        toks = np.asarray(toks)
+        self.stats["decode_ms"] += (time.perf_counter() - t0) * 1e3
+        self.stats["decode_steps"] += n
+        for s in decoding:
+            i = self._slots.index(s)
+            for j in range(toks.shape[1]):
+                if len(s.out) >= s.req.max_new:
+                    break
+                s.out.append(int(toks[i, j]))
+                s.tok = int(toks[i, j])
+                s.pos += 1
+            if len(s.out) >= s.req.max_new:
+                finish(s)

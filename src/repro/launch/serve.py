@@ -88,12 +88,21 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
         prefill = jax.jit(pre_plan.step_fn, donate_argnums=(2,))
 
         t0 = time.time()
+        # dead-padding prefill: only the first prompt_len columns are live
+        # (-1 positions mask the rest out of attention and the last-token
+        # logits come from column prompt_len-1, not the padded window end)
+        positions = jnp.arange(capacity, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(
+            jnp.where(positions < prompt_len, positions, -1),
+            (batch, capacity))
         if cfg.input_kind == "tokens":
-            batch_in = {"tokens": jnp.asarray(prompts)}
+            batch_in = {"tokens": jnp.asarray(prompts),
+                        "positions": positions}
             step_embeds = None
         else:
             batch_in = {"embeds": jax.random.normal(
-                key, (batch, capacity, cfg.d_model), jnp.bfloat16)}
+                key, (batch, capacity, cfg.d_model), jnp.bfloat16),
+                "positions": positions}
             # the per-step frontend is stubbed: every decode step feeds the
             # same embedding (matching the legacy loop, which reused `key`)
             step_embeds = jax.random.normal(
@@ -156,6 +165,7 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
         "prefill_ms": t_prefill * 1e3,
         "decode_tok_s": (batch * (gen - 1) / max(t_decode, 1e-9)
                          if gen > 1 else 0.0),
+        "decode_ms": t_decode * 1e3,
         "decode_loop": loop,
         "kv_cache_dtype": cfg.kv_cache_dtype,
         "kernel_backend": pre_plan.meta["kernel_backend"],

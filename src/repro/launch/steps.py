@@ -35,14 +35,18 @@ from repro.models import (
     activation_rules,
     cache_init,
     forward_decode,
+    forward_decode_paged,
     forward_prefill,
+    forward_prefill_chunk,
     forward_train,
     model_init,
+    paged_cache_init,
     split_tree,
 )
 from repro.optim import adamw_init, adamw_update
 
-__all__ = ["StepPlan", "build_plan", "build_generate_plan", "sample_token"]
+__all__ = ["StepPlan", "build_plan", "build_generate_plan", "sample_token",
+           "build_prefill_chunk_plan", "build_paged_generate_plan"]
 
 
 def _meta_backend(kernel_backend: str | None) -> str:
@@ -256,10 +260,14 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
         batch.pop("labels"), batch_sh.pop("labels")
 
         def prefill_step(params, batch, cache):
+            # optional "positions" (b, s) rides in the batch dict: ragged
+            # prompt lengths mask their padding out of the window (see
+            # forward_prefill); absent = the aligned arange as before
             with activation_rules(rules.act_rules), \
                     dispatch.backend_scope(kernel_backend), \
                     dispatch.shard_scope(mesh):
-                logits, new_cache = forward_prefill(params, cfg, batch, cache)
+                logits, new_cache = forward_prefill(
+                    params, cfg, batch, cache, batch.get("positions"))
             return logits, new_cache
 
         return StepPlan(
@@ -373,6 +381,148 @@ def build_generate_plan(cfg, mesh, shape_cfg, *, gen: int,
         rules=rules,
         donate_argnums=(2,),
         meta={"kind": "generate", "gen": gen, "temperature": temperature,
+              "kernel_backend": _meta_backend(kernel_backend),
+              "attention": _meta_attention(kernel_backend),
+              "sharding": _meta_sharding(mesh, rules)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged serving steps (continuous-batching engine; launch/engine.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _PagedShape:
+    """Minimal ShapeCfg stand-in for the paged plans (they key off explicit
+    slots/pages arguments, not a named benchmark shape)."""
+    seq_len: int
+    global_batch: int
+    kind: str
+    name: str = "paged"
+
+
+def _pool_state(cfg, mesh, rules, total_pages, page_size):
+    """Abstract page pools + shardings (pages replicate over data, kv heads
+    keep their model rule — see gqa_paged_cache_init)."""
+    pools_ptree = jax.eval_shape(
+        lambda: paged_cache_init(cfg, total_pages, page_size))
+    vals, axes = split_tree(pools_ptree)
+    sh = tree_shardings(axes, vals, rules.act_rules, mesh, rules.dropped)
+    return vals, sh
+
+
+def build_prefill_chunk_plan(cfg, mesh, *, slots: int, chunk: int,
+                             total_pages: int, page_size: int,
+                             max_pages: int, temperature: float = 0.0,
+                             force_2d: bool | None = None,
+                             budget_gb: float = 8.0,
+                             kernel_backend: str | None = None) -> StepPlan:
+    """One fixed-shape chunk of paged prefill over the whole slot batch.
+
+    step_fn(params, tokens (slots, chunk), pools, pt (slots, max_pages),
+    qpos (slots, chunk), pos0 (slots,), key) -> (tok1 (slots,), pools).
+    Dead slots (qpos all -1, pt row all zeros) write only the dummy page
+    and produce garbage tok1 the scheduler ignores; ``tok1`` is each row's
+    token sampled from its last live logits — the first generated token for
+    slots whose prompt ends in this chunk.  Donate pools (argnums 2)."""
+    if chunk % page_size:
+        raise ValueError(f"chunk {chunk} must be a multiple of the page "
+                         f"size {page_size}")
+    rules, values, shard_tree = _plan_state(
+        cfg, mesh, _PagedShape(chunk, slots, "prefill"), "prefill",
+        budget_gb=budget_gb, force_2d=force_2d)
+    pool_vals, pool_sh = _pool_state(cfg, mesh, rules, total_pages,
+                                     page_size)
+    b = slots
+    toks = jax.ShapeDtypeStruct((b, chunk), jnp.int32)
+    pt = jax.ShapeDtypeStruct((b, max_pages), jnp.int32)
+    qpos = jax.ShapeDtypeStruct((b, chunk), jnp.int32)
+    pos0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+    key_arg = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def chunk_step(params, tokens, pools, pt, qpos, pos0, key):
+        with activation_rules(rules.act_rules), \
+                dispatch.backend_scope(kernel_backend), \
+                dispatch.shard_scope(mesh):
+            logits, pools = forward_prefill_chunk(
+                params, cfg, {"tokens": tokens}, pools, pt, qpos, pos0)
+            tok1 = sample_token(logits[:, -1, : cfg.vocab_size], key,
+                                temperature)
+        return tok1, pools
+
+    return StepPlan(
+        name=f"chunk_prefill:{cfg.name}:b{slots}c{chunk}",
+        step_fn=chunk_step,
+        abstract_args=(values, toks, pool_vals, pt, qpos, pos0, key_arg),
+        in_shardings=(shard_tree, None, pool_sh, None, None, None, None),
+        out_shardings=(None, pool_sh),
+        rules=rules,
+        donate_argnums=(2,),
+        meta={"kind": "chunk_prefill", "chunk": chunk,
+              "page_size": page_size, "total_pages": total_pages,
+              "kernel_backend": _meta_backend(kernel_backend),
+              "attention": _meta_attention(kernel_backend),
+              "sharding": _meta_sharding(mesh, rules)},
+    )
+
+
+def build_paged_generate_plan(cfg, mesh, *, slots: int, gen: int,
+                              total_pages: int, page_size: int,
+                              max_pages: int, temperature: float = 0.0,
+                              force_2d: bool | None = None,
+                              budget_gb: float = 8.0,
+                              kernel_backend: str | None = None) -> StepPlan:
+    """``gen`` paged decode steps as one on-device scan (the paged
+    analogue of :func:`build_generate_plan`; gen=1 is the single decode
+    step the engine interleaves with prefill chunks).
+
+    step_fn(params, tok0 (slots,), pools, pt (slots, max_pages),
+    pos0 (slots,), key) -> (tokens (slots, gen), pools).  The page table is
+    fixed across the burst — the scheduler pre-allocates every page the
+    burst can write, so mid-burst writes never land on an unmapped page
+    (unmapped entries point at the dummy page 0, whose reads are masked).
+    Dead slots run with pt row 0 / pos 0 and their tokens are ignored.
+    Donate pools (argnums 2)."""
+    rules, values, shard_tree = _plan_state(
+        cfg, mesh, _PagedShape(max_pages * page_size, slots, "decode"),
+        "decode", budget_gb=budget_gb, force_2d=force_2d)
+    pool_vals, pool_sh = _pool_state(cfg, mesh, rules, total_pages,
+                                     page_size)
+    b = slots
+    tok0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pt = jax.ShapeDtypeStruct((b, max_pages), jnp.int32)
+    pos0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+    key_arg = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def generate_step(params, tok0, pools, pt, pos0, key):
+        with activation_rules(rules.act_rules), \
+                dispatch.backend_scope(kernel_backend), \
+                dispatch.shard_scope(mesh):
+            def body(carry, _):
+                tok, pools, pos, key = carry
+                logits, pools = forward_decode_paged(
+                    params, cfg, {"tokens": tok}, pools, pt, pos)
+                key, sub = jax.random.split(key)
+                nxt = sample_token(logits[:, -1, : cfg.vocab_size], sub,
+                                   temperature)
+                return (nxt, pools, pos + 1, key), nxt
+
+            (_, pools, _, _), toks = jax.lax.scan(
+                body, (tok0, pools, pos0, key), None, length=gen)
+        return jnp.moveaxis(toks, 0, 1), pools  # (slots, gen)
+
+    return StepPlan(
+        name=f"paged_generate:{cfg.name}:b{slots}g{gen}",
+        step_fn=generate_step,
+        abstract_args=(values, tok0, pool_vals, pt, pos0, key_arg),
+        in_shardings=(shard_tree, None, pool_sh, None, None, None),
+        out_shardings=(None, pool_sh),
+        rules=rules,
+        donate_argnums=(2,),
+        meta={"kind": "paged_generate", "gen": gen,
+              "page_size": page_size, "total_pages": total_pages,
+              "temperature": temperature,
               "kernel_backend": _meta_backend(kernel_backend),
               "attention": _meta_attention(kernel_backend),
               "sharding": _meta_sharding(mesh, rules)},

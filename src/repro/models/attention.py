@@ -15,6 +15,7 @@ any baseline runs its fused dequant-matmul on TPU and its oracle elsewhere.
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
@@ -37,6 +38,9 @@ __all__ = [
     "gqa_init", "gqa_train", "gqa_decode",
     "mla_init", "mla_train", "mla_decode",
     "gqa_cache_init", "mla_cache_init",
+    "gqa_paged_cache_init", "mla_paged_cache_init",
+    "gqa_decode_paged", "mla_decode_paged",
+    "gqa_prefill_chunk", "mla_prefill_chunk",
 ]
 
 NEG_INF = -1e30
@@ -449,3 +453,248 @@ def _dequant(ptree, cfg, quant, n, mdim):
     from repro.core import dequantize_weight
 
     return dequantize_weight(ptree, quant, n, mdim)
+
+
+# ---------------------------------------------------------------------------
+# block-paged KV (continuous-batching serving)
+# ---------------------------------------------------------------------------
+#
+# The paged cache replaces the per-sequence (b, S, ...) cache with a global
+# pool (P, ps, ...) of fixed-size pages plus a per-sequence page table
+# (b, np) int32: logical page pi of slot b lives at physical page pt[b, pi].
+# Page 0 is reserved as a dummy/scratch page — the engine points every
+# unallocated (or inactive-slot) table entry at it, so fixed-shape decode
+# steps can always run the full batch: dead slots scatter into page 0 and
+# their reads are masked.  Decode reads go through
+# qattention("paged_decode"/"paged_mla_decode") — the page table rides into
+# the Pallas index maps, the int8 pool streams once as stored (the ref
+# backend gathers; that's the jaxpr-guard negative control, not the serving
+# path).  Writes are scatters into the flattened pool — never a gather.
+
+
+def _paged_scatter_token(pool_arr, new, pt, pos):
+    """Scatter per-sequence entries ``new`` (b, 1, ...) into the pool
+    (P, ps, ...) at each slot's current position through the page table."""
+    P_, ps = pool_arr.shape[:2]
+    flat = pool_arr.reshape((P_ * ps,) + pool_arr.shape[2:])
+    page = jnp.take_along_axis(pt, (pos // ps)[:, None], axis=1)[:, 0]
+    idx = page * ps + pos % ps                                     # (b,)
+    flat = flat.at[idx].set(new[:, 0].astype(pool_arr.dtype))
+    return flat.reshape(pool_arr.shape)
+
+
+def _paged_scatter_chunk(pool_arr, new, pt, pos0):
+    """Write a prefill chunk ``new`` (b, cs, ...) as whole pages.
+
+    Requires cs % ps == 0 and pos0 % ps == 0 (the engine aligns its chunk
+    size to the page size), so the chunk covers cs/ps full pages per slot
+    and the write is a page-granular scatter.  Rows past a slot's prompt
+    carry garbage (dead qpos) — they land in pages that decode either masks
+    (beyond pos) or overwrites token-by-token as pos advances."""
+    b, cs = new.shape[:2]
+    ps = pool_arr.shape[1]
+    npg = cs // ps
+    tiles = new.reshape((b * npg, ps) + new.shape[2:])
+    lp = pos0[:, None] // ps + jnp.arange(npg, dtype=pt.dtype)[None]
+    phys = jnp.take_along_axis(pt, lp, axis=1).reshape(-1)     # (b*npg,)
+    return pool_arr.at[phys].set(tiles.astype(pool_arr.dtype))
+
+
+def _paged_store(pool, name, new, pt, pos=None, pos0=None):
+    """Paged analogue of :func:`_kv_store`: quantize ``new`` to the pool's
+    storage format and scatter it through the page table.  Exactly one of
+    ``pos`` (b,) (single-token decode write) / ``pos0`` (b,) (page-aligned
+    chunk write) must be given."""
+    scatter = (functools.partial(_paged_scatter_token, pt=pt, pos=pos)
+               if pos is not None
+               else functools.partial(_paged_scatter_chunk, pt=pt,
+                                      pos0=pos0))
+    if f"{name}_scale" in pool:
+        codes, scale = kv_quantize(new)
+        return {name: scatter(pool[name], codes),
+                f"{name}_scale": scatter(pool[f"{name}_scale"], scale)}
+    return {name: scatter(pool[name], new)}
+
+
+def _paged_window(pool, name, pt, dtype):
+    """Gather + dequantize the full logical window (b, np*ps, ...) of slot
+    ``name`` — the *prefix* read of chunked prefill (a chunk's queries
+    attend to everything earlier sequences of chunks wrote).  Decode never
+    calls this: its reads go through the paged kernels."""
+    arr = pool[name]
+    P_, ps = arr.shape[:2]
+    b = pt.shape[0]
+    flat = arr.reshape((P_ * ps,) + arr.shape[2:])
+    idx = (pt[:, :, None] * ps
+           + jnp.arange(ps, dtype=pt.dtype)[None, None]).reshape(b, -1)
+    win = jnp.take(flat, idx, axis=0)                   # (b, np*ps, ...)
+    if f"{name}_scale" in pool:
+        sarr = pool[f"{name}_scale"]
+        swin = jnp.take(sarr.reshape((P_ * ps,) + sarr.shape[2:]), idx,
+                        axis=0)
+        return kv_dequantize(win, swin, dtype=dtype)
+    return win.astype(dtype)
+
+
+def gqa_paged_cache_init(cfg, total_pages, page_size, dtype=jnp.bfloat16):
+    """Global page pool: (P, ps, nkv, hd) [+ scale pools (P, ps, nkv)].
+
+    Pages never shard over data (every slot shares the pool); the kv_heads
+    dim keeps the same model-axis rule as the contiguous cache."""
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    shape = (total_pages, page_size, nkv, hd)
+    axes = ("kv_pages", "page_slot", "kv_heads", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        s_axes = ("kv_pages", "page_slot", "kv_heads")
+        return {
+            "k": P(jnp.zeros(shape, jnp.int8), axes),
+            "v": P(jnp.zeros(shape, jnp.int8), axes),
+            "k_scale": P(jnp.zeros(shape[:3], jnp.float32), s_axes),
+            "v_scale": P(jnp.zeros(shape[:3], jnp.float32), s_axes),
+        }
+    return {"k": P(jnp.zeros(shape, dtype), axes),
+            "v": P(jnp.zeros(shape, dtype), axes)}
+
+
+def mla_paged_cache_init(cfg, total_pages, page_size, dtype=jnp.bfloat16):
+    """MLA latent page pool: c (P, ps, kv_lora) + k_rope (P, ps, rope)."""
+    m = cfg.mla
+    pool = {
+        "c": P(jnp.zeros((total_pages, page_size, m.kv_lora_rank), dtype),
+               ("kv_pages", "page_slot", "kv_lora")),
+        "k_rope": P(jnp.zeros((total_pages, page_size, m.qk_rope_dim),
+                              dtype),
+                    ("kv_pages", "page_slot", "rope_dim")),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        pool["c"] = P(
+            jnp.zeros((total_pages, page_size, m.kv_lora_rank), jnp.int8),
+            ("kv_pages", "page_slot", "kv_lora"))
+        pool["c_scale"] = P(jnp.zeros((total_pages, page_size), jnp.float32),
+                            ("kv_pages", "page_slot"))
+    return pool
+
+
+def gqa_decode_paged(params, x, cfg, quant, pool, pt, pos):
+    """One paged decode step: x (b,1,d); pt (b,np); pos (b,) int32.
+
+    Identical math to :func:`gqa_decode` — the new token's KV scatters into
+    its slot's current page and attention reads the pool through the page
+    table (the paged kinds route to the gather oracle off the fused
+    backends, so every backend works; only the fused path is gather-free).
+    """
+    b, _, d = x.shape
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = qmatmul(params["wq"], x, quant, nh * hd, d).reshape(b, 1, nh, hd)
+    k = qmatmul(params["wk"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
+    v = qmatmul(params["wv"], x, quant, nkv * hd, d).reshape(b, 1, nkv, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    new_pool = {**_paged_store(pool, "k", k, pt, pos=pos),
+                **_paged_store(pool, "v", v, pt, pos=pos)}
+    new_pool = {
+        kk: shard(vv, "kv_pages", "page_slot", "kv_heads", "head_dim"
+                  ) if vv.ndim == 4
+        else shard(vv, "kv_pages", "page_slot", "kv_heads")
+        for kk, vv in new_pool.items()
+    }
+    scale = 1.0 / math.sqrt(hd)
+    out = qattention("paged_decode", q[:, 0], new_pool["k"], new_pool["v"],
+                     pt, pos, new_pool.get("k_scale"),
+                     new_pool.get("v_scale"), logit_scale=scale)
+    out = out[:, None].astype(x.dtype).reshape(b, 1, nh * hd)
+    y = qmatmul(params["wo"], out, quant, d, nh * hd)
+    return y, new_pool
+
+
+def mla_decode_paged(params, x, cfg, quant, pool, pt, pos):
+    """Paged absorbed-latent MLA decode (see :func:`mla_decode`)."""
+    m, d, nh = cfg.mla, cfg.d_model, cfg.num_heads
+    b = x.shape[0]
+    q_nope, q_rope = _mla_q(params, x, cfg, quant, pos[:, None])
+    c_new, k_rope_new = _mla_latents(params, x, cfg, quant, pos[:, None])
+    new_pool = {**_paged_store(pool, "c", c_new, pt, pos=pos),
+                **_paged_store(pool, "k_rope", k_rope_new, pt, pos=pos)}
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    w_kup = _dequant(params["k_up"], cfg, quant, nh * m.qk_nope_dim,
+                     m.kv_lora_rank)
+    w_kup = w_kup.reshape(nh, m.qk_nope_dim, m.kv_lora_rank)
+    q_lat = f32_einsum("bthn,hnl->bthl", q_nope, w_kup.astype(q_nope.dtype))
+    lat = qattention(
+        "paged_mla_decode", q_lat[:, 0], q_rope[:, 0], new_pool["c"],
+        new_pool["k_rope"], pt, pos, new_pool.get("c_scale"),
+        logit_scale=scale)[:, None]
+    w_vup = _dequant(params["v_up"], cfg, quant, nh * m.v_head_dim,
+                     m.kv_lora_rank)
+    w_vup = w_vup.reshape(nh, m.v_head_dim, m.kv_lora_rank)
+    out = f32_einsum("bthl,hvl->bthv", lat.astype(w_vup.dtype), w_vup)
+    out = out.reshape(b, 1, nh * m.v_head_dim).astype(x.dtype)
+    y = qmatmul(params["wo"], out, quant, d, nh * m.v_head_dim)
+    return y, new_pool
+
+
+def gqa_prefill_chunk(params, x, cfg, quant, qpos, pos0, pool, pt):
+    """One chunk of paged prefill: x (b, cs, d) at positions ``qpos``
+    (b, cs; -1 = dead row), chunk start ``pos0`` (b,) page-aligned.
+
+    The chunk's KV is written into its slot's pages, then the chunk queries
+    attend over [gathered prefix window (< pos0) ++ raw in-chunk KV] via
+    qattention("chunk_prefill").  Keeping the in-chunk KV *raw* (not read
+    back from the pool) makes a single-chunk prefill bit-identical to the
+    contiguous prefill even with an int8 pool — the chunk never sees its
+    own quantization error, exactly like the contiguous path."""
+    b, cs, d = x.shape
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _gqa_qkv(params, x, cfg, quant, qpos)
+    new_pool = {**_paged_store(pool, "k", k, pt, pos0=pos0),
+                **_paged_store(pool, "v", v, pt, pos0=pos0)}
+    cap = pt.shape[1] * pool["k"].shape[1]
+    kw = _paged_window(new_pool, "k", pt, k.dtype)
+    vw = _paged_window(new_pool, "v", pt, v.dtype)
+    prefix_pos = jnp.arange(cap, dtype=jnp.int32)[None]
+    prefix_pos = jnp.where(prefix_pos < pos0[:, None], prefix_pos, -1)
+    kcat = jnp.concatenate([kw, k], axis=1)
+    vcat = jnp.concatenate([vw, v], axis=1)
+    kpos = jnp.concatenate([prefix_pos, qpos], axis=1)
+    scale = 1.0 / math.sqrt(hd)
+    out = qattention("chunk_prefill", q, kcat, vcat, qpos, kpos,
+                     logit_scale=scale)
+    out = out.astype(x.dtype).reshape(b, cs, nh * hd)
+    return qmatmul(params["wo"], out, quant, d, nh * hd), new_pool
+
+
+def mla_prefill_chunk(params, x, cfg, quant, qpos, pos0, pool, pt):
+    """Chunked paged MLA prefill: latents for the chunk are written to the
+    pool; attention runs in the *train* (non-absorbed) form over
+    [gathered prefix latents ++ raw chunk latents], up-projected to k/v."""
+    m, d, nh = cfg.mla, cfg.d_model, cfg.num_heads
+    b, cs, _ = x.shape
+    q_nope, q_rope = _mla_q(params, x, cfg, quant, qpos)
+    c, k_rope = _mla_latents(params, x, cfg, quant, qpos)
+    new_pool = {**_paged_store(pool, "c", c, pt, pos0=pos0),
+                **_paged_store(pool, "k_rope", k_rope, pt, pos0=pos0)}
+    cap = pt.shape[1] * pool["c"].shape[1]
+    cw = _paged_window(new_pool, "c", pt, c.dtype)
+    rw = _paged_window(new_pool, "k_rope", pt, k_rope.dtype)
+    ccat = jnp.concatenate([cw, c], axis=1)            # (b, cap+cs, L)
+    rcat = jnp.concatenate([rw, k_rope], axis=1)       # (b, cap+cs, R)
+    W = cap + cs
+    k_nope = qmatmul(
+        params["k_up"], ccat, quant, nh * m.qk_nope_dim, m.kv_lora_rank
+    ).reshape(b, W, nh, m.qk_nope_dim)
+    vcat = qmatmul(
+        params["v_up"], ccat, quant, nh * m.v_head_dim, m.kv_lora_rank
+    ).reshape(b, W, nh, m.v_head_dim)
+    kcat = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(rcat[:, :, None], (b, W, nh, m.qk_rope_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    prefix_pos = jnp.arange(cap, dtype=jnp.int32)[None]
+    prefix_pos = jnp.where(prefix_pos < pos0[:, None], prefix_pos, -1)
+    kpos = jnp.concatenate([prefix_pos, qpos], axis=1)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    out = qattention("chunk_prefill", q, kcat, vcat, qpos, kpos,
+                     logit_scale=scale)
+    out = out.astype(x.dtype).reshape(b, cs, nh * m.v_head_dim)
+    return qmatmul(params["wo"], out, quant, d, nh * m.v_head_dim), new_pool

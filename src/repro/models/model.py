@@ -41,6 +41,7 @@ from repro.models.common import (
 __all__ = [
     "model_init", "cache_init", "forward_train", "forward_prefill",
     "forward_decode",
+    "paged_cache_init", "forward_decode_paged", "forward_prefill_chunk",
 ]
 
 
@@ -134,6 +135,42 @@ def cache_init(cfg, batch, capacity):
     return stack_periods(period_caches)
 
 
+def paged_cache_init(cfg, total_pages, page_size):
+    """Stacked per-layer page pools (the paged analogue of `cache_init`).
+
+    Paged serving needs every mixer to be a page-table reader, so it is
+    attention-only: recurrent mixers (mamba/xlstm) keep O(1) state that
+    the fixed-capacity path already serves without a cache window."""
+    kinds = cfg.layer_kinds()
+    if any(k[0] != "attn" for k in kinds):
+        raise ValueError(
+            "paged serving requires an attention-only layer stack; "
+            f"got mixers {sorted({k[0] for k in kinds})}")
+    pool_init = (attn.mla_paged_cache_init if cfg.attn_kind == "mla"
+                 else attn.gqa_paged_cache_init)
+    periods = []
+    for _ in range(cfg.num_periods):
+        periods.append({
+            f"blk{i}": pool_init(cfg, total_pages, page_size)
+            for i in range(cfg.period)
+        })
+    return stack_periods(periods)
+
+
+def _mlp_residual(blk, x, cfg, mlp_kind):
+    """Shared post-mixer MLP residual (inference paths discard moe aux)."""
+    q = cfg.quant
+    if mlp_kind == "dense":
+        h = rmsnorm(blk["ln2"], x, cfg.norm_eps)
+        x = x + moe_mod.dense_mlp_apply(blk["mlp"], h, cfg.d_model, cfg.d_ff,
+                                        q)
+    elif mlp_kind == "moe":
+        h = rmsnorm(blk["ln2"], x, cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(blk["mlp"], h, cfg, q)
+        x = x + y
+    return x
+
+
 def _block_decode(blk, x, cfg, kind, cache, pos):
     mixer_kind, mlp_kind = kind
     q = cfg.quant
@@ -150,14 +187,7 @@ def _block_decode(blk, x, cfg, kind, cache, pos):
     else:
         y, cache = ssm.slstm_decode(blk["mixer"], h, cfg, q, cache, pos)
     x = x + y
-    if mlp_kind == "dense":
-        h = rmsnorm(blk["ln2"], x, cfg.norm_eps)
-        x = x + moe_mod.dense_mlp_apply(blk["mlp"], h, cfg.d_model, cfg.d_ff, q)
-    elif mlp_kind == "moe":
-        h = rmsnorm(blk["ln2"], x, cfg.norm_eps)
-        y, _ = moe_mod.moe_apply(blk["mlp"], h, cfg, q)
-        x = x + y
-    return x, cache
+    return _mlp_residual(blk, x, cfg, mlp_kind), cache
 
 
 def _block_prefill(blk, x, cfg, kind, cache, positions):
@@ -175,14 +205,7 @@ def _block_prefill(blk, x, cfg, kind, cache, positions):
         # zero states (prefill for SSM archs is exercised via train path).
         y = _mixer_train(blk["mixer"], h, cfg, mixer_kind, positions)
     x = x + y
-    if mlp_kind == "dense":
-        h = rmsnorm(blk["ln2"], x, cfg.norm_eps)
-        x = x + moe_mod.dense_mlp_apply(blk["mlp"], h, cfg.d_model, cfg.d_ff, q)
-    elif mlp_kind == "moe":
-        h = rmsnorm(blk["ln2"], x, cfg.norm_eps)
-        y, _ = moe_mod.moe_apply(blk["mlp"], h, cfg, q)
-        x = x + y
-    return x, cache
+    return _mlp_residual(blk, x, cfg, mlp_kind), cache
 
 
 # ---------------------------------------------------------------------------
@@ -304,13 +327,22 @@ def forward_train(params, cfg, batch):
     return loss, {"loss": loss, "aux_loss": aux, "tokens": cnt}
 
 
-def forward_prefill(params, cfg, batch, cache):
-    """Full-sequence forward filling caches; returns (last logits, cache)."""
+def forward_prefill(params, cfg, batch, cache, positions=None):
+    """Full-sequence forward filling caches; returns (last logits, cache).
+
+    ``positions`` (b, s) int32 makes the window ragged: -1 rows are dead
+    padding (masked out of attention), and the returned logits come from
+    each row's *last live* token instead of column s-1 — so a batch of
+    mixed-length prompts prefills in one fixed-shape call without the
+    padding leaking into the numerics.  None = the aligned arange (every
+    row fully live, logits from the last column, as before)."""
     if cfg.input_kind == "tokens":
         b, s = batch["tokens"].shape
     else:
         b, s, _ = batch["embeds"].shape
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = _embed_in(params, cfg, batch)
     kinds = cfg.layer_kinds()
 
@@ -335,7 +367,9 @@ def forward_prefill(params, cfg, batch, cache):
                              _index_period(cache, p)))
             outs.append(nc)
         new_cache = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outs)
-    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    last = jnp.argmax(positions, axis=1)                   # (b,) last live
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (b, 1, d)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = _head_matrix(params, cfg)
     logits = f32_einsum("btd,vd->btv", x.astype(head.dtype), head)
     return logits, new_cache
@@ -371,3 +405,91 @@ def forward_decode(params, cfg, batch, cache, pos):
     head = _head_matrix(params, cfg)
     logits = f32_einsum("btd,vd->btv", x.astype(head.dtype), head)
     return logits, new_cache
+
+
+def forward_decode_paged(params, cfg, batch, pools, pt, pos):
+    """One decode step against the page pools.  batch: token (b,) or embed
+    (b,1,d); pt (b, np) page table; pos (b,) int32 current positions."""
+    if cfg.input_kind == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"][:, None], axis=0)
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    dec = (attn.mla_decode_paged if cfg.attn_kind == "mla"
+           else attn.gqa_decode_paged)
+    q = cfg.quant
+    kinds = cfg.layer_kinds()
+
+    def period_body(x, inp):
+        layer_params, layer_pools = inp
+        new_pools = {}
+        for i in range(cfg.period):
+            blk = layer_params[f"blk{i}"]
+            h = rmsnorm(blk["ln1"], x, cfg.norm_eps)
+            y, new_pools[f"blk{i}"] = dec(blk["mixer"], h, cfg, q,
+                                          layer_pools[f"blk{i}"], pt, pos)
+            x = x + y
+            x = _mlp_residual(blk, x, cfg, kinds[i][1])
+        return x, new_pools
+
+    if cfg.scan_layers:
+        x, new_pools = jax.lax.scan(period_body, x, (params["layers"],
+                                                     pools))
+    else:
+        outs = []
+        for p in range(cfg.num_periods):
+            x, np_ = period_body(x, (_index_period(params["layers"], p),
+                                     _index_period(pools, p)))
+            outs.append(np_)
+        new_pools = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = _head_matrix(params, cfg)
+    logits = f32_einsum("btd,vd->btv", x.astype(head.dtype), head)
+    return logits, new_pools
+
+
+def forward_prefill_chunk(params, cfg, batch, pools, pt, qpos, pos0):
+    """One chunk of paged prefill.  batch: tokens (b, cs); qpos (b, cs)
+    in-chunk positions (-1 = dead row); pos0 (b,) page-aligned chunk start.
+
+    Returns (last-live-row logits (b, 1, V), new pools).  The logits are
+    each row's argmax(qpos) column — only meaningful for slots whose final
+    prompt token is in this chunk (the scheduler samples token 1 from them
+    then, and ignores them for slots still mid-prompt)."""
+    if cfg.input_kind == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    x = shard(x, "batch", "seq", None)
+    pre = (attn.mla_prefill_chunk if cfg.attn_kind == "mla"
+           else attn.gqa_prefill_chunk)
+    q = cfg.quant
+    kinds = cfg.layer_kinds()
+
+    def period_body(x, inp):
+        layer_params, layer_pools = inp
+        new_pools = {}
+        for i in range(cfg.period):
+            blk = layer_params[f"blk{i}"]
+            h = rmsnorm(blk["ln1"], x, cfg.norm_eps)
+            y, new_pools[f"blk{i}"] = pre(blk["mixer"], h, cfg, q, qpos,
+                                          pos0, layer_pools[f"blk{i}"], pt)
+            x = x + y
+            x = _mlp_residual(blk, x, cfg, kinds[i][1])
+        return x, new_pools
+
+    if cfg.scan_layers:
+        x, new_pools = jax.lax.scan(period_body, x, (params["layers"],
+                                                     pools))
+    else:
+        outs = []
+        for p in range(cfg.num_periods):
+            x, np_ = period_body(x, (_index_period(params["layers"], p),
+                                     _index_period(pools, p)))
+            outs.append(np_)
+        new_pools = jax.tree.map(lambda *ls: jnp.stack(ls, 0), *outs)
+    last = jnp.argmax(qpos, axis=1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = _head_matrix(params, cfg)
+    logits = f32_einsum("btd,vd->btv", x.astype(head.dtype), head)
+    return logits, new_pools

@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
 	bench-attn serve-smoke serve-smoke-interpret serve-trace-smoke \
-	train-smoke-interpret
+	train-smoke-interpret chaos-smoke
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -47,6 +47,18 @@ serve-smoke-interpret:  ## serve smoke with fused kernels in interpret mode + in
 serve-trace-smoke:  ## engine trace replay: paged int8 pool + chunked prefill, interpret kernels
 	$(PY) -m benchmarks.bench_serve --trace 4 --backend interpret \
 		--slots 2 --page-size 8 --total-pages 8 --max-pages 5 --chunk 16
+
+# seeded fault-injection smoke: the same trace replayed clean vs under a
+# deterministic FaultPlan (page-alloc failures, a step failure, a NaN burst,
+# overload + preemption); the scenarios self-assert exactly-one-terminal-
+# status, failure isolation (token-identical untouched requests) and a clean
+# page-pool audit, and also run the hardened-engine robustness tests
+chaos-smoke:     ## fault-injected serving: chaos scenarios + hardened-engine tests
+	$(PY) -m benchmarks.bench_chaos
+	$(PY) -m pytest -x -q tests/test_faults.py
+	$(PY) -m pytest -x -q tests/test_paged_engine.py \
+		-k "timeout or deadline or sheds or quarantine or step_failure \
+		or preemption or chaos or audit"
 
 bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
 	$(PY) -m benchmarks.bench_train

@@ -1,0 +1,138 @@
+"""Chaos benchmark — graceful degradation under injected faults (PR 7).
+
+Replays the same seeded Poisson trace through the paged engine twice —
+clean, then under a deterministic :class:`repro.robustness.FaultPlan` —
+and *asserts* the degradation contract rather than just recording numbers:
+
+  * ``Engine.run`` returns under injection (never raises away completed
+    work);
+  * every request ends in exactly one terminal status
+    (``completed | timeout | rejected | failed``);
+  * fault-untouched requests produce token-for-token identical output vs
+    the clean run (failure isolation, checked under greedy decoding with
+    shared params);
+  * the page-pool audit (``free + held == total_pages - 1``, no page in
+    two places) is clean after every recovery action and at exit.
+
+Two scenarios:
+
+  * **recover** — page-allocation failures, an injected step-compute
+    failure, and a NaN-logits burst: everything the engine can absorb
+    by stall/evict, retry/requeue and slot quarantine.
+  * **degrade** — overload (admission budget + tight per-request
+    deadlines) plus a mid-run preemption: the engine must *shed*
+    structuredly (``rejected``/``timeout`` records, partial tokens kept)
+    and drain in-flight work.
+
+Results merge into ``BENCH_serve.json`` under ``"chaos"``; also runnable
+as ``python -m benchmarks.bench_serve --chaos`` or
+``python -m benchmarks.run chaos``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import benchmarks.common  # noqa: F401  (sets REPRO_CPU_EXEC before jax use)
+
+from repro.configs import get_config, smoke_variant
+from repro.robustness import FaultPlan
+
+_GEOM = dict(slots=4, page_size=8, max_pages=6, total_pages=14, chunk=16,
+             burst=4)
+
+
+def _cfg():
+    return smoke_variant(get_config("llama3-8b")).with_(
+        head_dim=64, kv_cache_dtype="int8")
+
+
+def chaos_scenarios(backend: str = "ref", seed: int = 11) -> dict:
+    """Run both scenarios; returns {name: chaos_replay record}.  Raises
+    AssertionError if any part of the degradation contract is violated."""
+    from benchmarks.bench_serve import chaos_replay, make_trace
+
+    cfg = _cfg()
+    out = {}
+
+    # recover: faults the engine absorbs without losing untouched requests.
+    # page_alloc failures force stall/evict, the step fault exercises
+    # retry-requeue, the poisoned page trips the in-graph non-finite guard
+    trace = make_trace(cfg, 10, rate_hz=50.0, plen=(8, 16), gen=(4, 20),
+                       seed=seed, gen_skew=2.0)
+    faults = FaultPlan(seed, {
+        "engine.page_alloc": {"prob": 0.25, "max_fires": 6},
+        "engine.step": {"at": (1,)},
+        "engine.nan_logits": {"at": (2,)},
+    })
+    rec = chaos_replay(cfg, trace, backend=backend, faults=faults,
+                       seed=seed, **_GEOM)
+    assert rec["identical_completed"], (
+        "fault isolation violated — completed requests diverged from the "
+        f"clean run: rids {rec['mismatched_rids']}")
+    assert rec["page_audit"]["ok"], rec["page_audit"]
+    assert not rec["audit_failures"], rec["audit_failures"]
+    assert rec["chaos"]["statuses"].get("completed", 0) >= len(trace) - 3, (
+        "recover scenario lost more requests than the injected faults "
+        f"can account for: {rec['chaos']['statuses']}")
+    out["recover"] = rec
+
+    # degrade: overload + deadlines + preemption — the contract is
+    # *structured* shedding, not completion
+    trace = make_trace(cfg, 12, rate_hz=200.0, plen=(8, 16), gen=(4, 16),
+                       seed=seed + 1, gen_skew=2.0)
+    for r in trace:
+        r.deadline_s = 30.0
+    faults = FaultPlan(seed + 1, {"engine.preempt": {"at": (8,)}})
+    rec = chaos_replay(cfg, trace, backend=backend, faults=faults,
+                       seed=seed, admission_budget=4, **_GEOM)
+    assert rec["page_audit"]["ok"], rec["page_audit"]
+    assert not rec["audit_failures"], rec["audit_failures"]
+    assert rec["chaos"]["preempted"], (
+        "preemption fault never fired — drain path untested: "
+        f"{rec['faults']}")
+    assert rec["identical_completed"], rec["mismatched_rids"]
+    out["degrade"] = rec
+    return out
+
+
+def run(report):
+    """benchmarks.run entry point: seeded chaos scenarios on the smoke
+    config + merge into BENCH_serve.json (section ``"chaos"``)."""
+    scenarios = chaos_scenarios(backend="ref")
+    for name, sc in scenarios.items():
+        ch = sc["chaos"]
+        report(f"chaos/{name}/goodput_retained", sc["goodput_retained"],
+               f"statuses={ch['statuses']} evictions={ch['evictions']} "
+               f"retries={ch['retries']} quarantined={ch['quarantined']} "
+               f"shed={ch['shed']} identical={sc['identical_completed']} "
+               f"audit_ok={sc['page_audit']['ok']}")
+
+    path = "BENCH_serve.json"
+    rec = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+    rec["chaos"] = scenarios
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    report("chaos/json", 0.0, f"merged chaos section into {path}")
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="ref",
+                    choices=["pallas", "interpret", "ref", "dense"])
+    ap.add_argument("--seed", type=int, default=11)
+    args = ap.parse_args(argv)
+    for name, sc in chaos_scenarios(args.backend, args.seed).items():
+        print(f"[bench_chaos] {name}: statuses={sc['chaos']['statuses']} "
+              f"identical={sc['identical_completed']} "
+              f"audit_ok={sc['page_audit']['ok']} "
+              f"goodput_retained={sc['goodput_retained']}")
+
+
+if __name__ == "__main__":
+    main()

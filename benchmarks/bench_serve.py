@@ -349,6 +349,78 @@ def replay_trace(cfg, trace, *, slots: int, page_size: int, max_pages: int,
     }
 
 
+def chaos_replay(cfg, trace, *, slots: int, page_size: int, max_pages: int,
+                 total_pages: int, chunk: int, burst: int,
+                 backend: str | None, faults, seed: int = 0,
+                 admission_budget: int | None = None,
+                 preemption_guard=None, timeout_s: float = 600.0) -> dict:
+    """Clean-vs-chaos differential replay: run the same trace + params
+    through the engine twice — once fault-free, once under ``faults`` (a
+    :class:`repro.robustness.FaultPlan`) — and check the degradation
+    contract:
+
+      * ``Engine.run`` returns (never raises) under injection;
+      * every request ends in exactly one terminal status;
+      * requests the faults didn't touch (chaos status ``completed``)
+        produce **token-for-token identical** output vs the clean run
+        (greedy decoding, shared params — failure isolation, not just
+        liveness);
+      * the page-pool audit is clean after every recovery and at exit.
+
+    Returns both runs' summaries, the goodput retained under chaos, the
+    recovery counters and the fault-plan consult/fire log.
+    """
+    from repro.launch.engine import TERMINAL_STATUSES, Engine
+    from repro.models import model_init, split_tree
+
+    params, _ = split_tree(model_init(jax.random.PRNGKey(seed), cfg))
+    eng = Engine(cfg, slots=slots, total_pages=total_pages,
+                 page_size=page_size, max_pages=max_pages, chunk=chunk,
+                 burst=burst, kernel_backend=backend, params=params,
+                 admission_budget=admission_budget,
+                 preemption_guard=preemption_guard)
+    eng.audit_every = True
+    clean = eng.run(trace, timeout_s=timeout_s)
+    assert clean["all_completed"], clean["statuses"]
+    clean_toks = {r["rid"]: r["tokens"] for r in clean["records"]}
+
+    faults.reset()
+    eng.faults = faults
+    chaos = eng.run(trace, timeout_s=timeout_s)
+
+    records = chaos["records"]
+    assert len(records) == len(trace), (
+        f"{len(records)} terminal records for {len(trace)} requests")
+    bad = [r for r in records if r["status"] not in TERMINAL_STATUSES]
+    assert not bad, f"non-terminal statuses: {bad}"
+    mismatched = [r["rid"] for r in records if r["status"] == "completed"
+                  and r["tokens"] != clean_toks[r["rid"]]]
+
+    def summarize(stats):
+        return {
+            "goodput_tok_s": round(stats["goodput_tok_s"], 3),
+            "wall_s": round(stats["wall_s"], 3),
+            "statuses": stats["statuses"],
+            "evictions": stats["evictions"],
+        }
+
+    return {
+        "requests": len(trace),
+        "clean": summarize(clean),
+        "chaos": dict(summarize(chaos), **{
+            k: chaos[k] for k in ("step_failures", "retries", "quarantined",
+                                  "shed", "deadline_cancels",
+                                  "nan_injections", "preempted", "drained")}),
+        "identical_completed": not mismatched,
+        "mismatched_rids": mismatched,
+        "page_audit": chaos["page_audit"],
+        "audit_failures": chaos.get("audit_failures", []),
+        "faults": chaos["faults"],
+        "goodput_retained": round(
+            chaos["goodput_tok_s"] / max(clean["goodput_tok_s"], 1e-9), 3),
+    }
+
+
 def bench(arch: str = "llama3-8b", *, smoke: bool = True, batch: int = 2,
           prompt_len: int = 16, gen: int = 8,
           backend: str | None = None, reps: int = 1,
@@ -541,6 +613,10 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="also paired-time paged vs contiguous decode at "
                          "equal batch/capacity")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the seeded fault-injection scenarios "
+                         "(clean-vs-chaos differential replay: terminal "
+                         "statuses, failure isolation, page-pool audit)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     rec = bench(args.arch, smoke=not args.full, batch=args.batch,
@@ -579,6 +655,15 @@ def main(argv=None):
               f"evictions={eng['evictions']} | baseline "
               f"goodput={rec['trace']['baseline']['goodput_tok_s']} tok/s "
               f"(ratio {rec['trace']['goodput_ratio']}x)")
+    if args.chaos:
+        from benchmarks.bench_chaos import chaos_scenarios
+        rec["chaos"] = chaos_scenarios(backend=args.backend or "ref")
+        for name, sc in rec["chaos"].items():
+            print(f"[bench_serve] chaos/{name}: "
+                  f"statuses={sc['chaos']['statuses']} "
+                  f"identical={sc['identical_completed']} "
+                  f"audit_ok={sc['page_audit']['ok']} "
+                  f"goodput_retained={sc['goodput_retained']}")
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     rl = rec["roofline"]["bytes_per_token"]

@@ -20,6 +20,10 @@ table registry and exits.
   attn         §4.4     — attention fast path (fused flash kernels vs the
                           einsum oracle: prefill ms, decode tok/s, cache
                           bytes/token bf16 vs int8) -> BENCH_attn.json
+  chaos        §4.4     — graceful degradation under injected faults
+                          (clean-vs-chaos differential trace replay,
+                          terminal statuses, failure isolation, page-pool
+                          audit) -> BENCH_serve.json ("chaos" section)
 """
 from __future__ import annotations
 
@@ -27,7 +31,7 @@ import sys
 import time
 
 TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
-          "error_ratio", "serve", "train", "attn"]
+          "error_ratio", "serve", "train", "attn", "chaos"]
 
 
 def main() -> None:

@@ -30,6 +30,8 @@ import shutil
 import jax
 import numpy as np
 
+from repro.distributed.fault_tolerance import retry_on_transient
+
 __all__ = ["Checkpointer"]
 
 _SEP = "__"
@@ -91,10 +93,23 @@ def _is_sharded(leaf) -> bool:
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 io_retries: int = 2, io_backoff: float = 0.05):
         self.dir = directory
         self.keep = keep
+        self.io_retries = io_retries
+        self.io_backoff = io_backoff
         os.makedirs(directory, exist_ok=True)
+
+    def _io(self, fn):
+        """Every file write/read goes through bounded retry-with-backoff:
+        on networked filesystems (the real deployment target) transient
+        ``OSError``s are routine and must not kill a training run holding
+        hours of optimizer state.  Permanent failures still raise after
+        ``io_retries`` attempts."""
+        return retry_on_transient(fn, retries=self.io_retries,
+                                  backoff=self.io_backoff,
+                                  exceptions=(OSError,))
 
     # -- save ---------------------------------------------------------------
 
@@ -114,7 +129,7 @@ class Checkpointer:
                 files, indices = [], []
                 for j, (idx, data) in enumerate(_shard_entries(leaf)):
                     name = f"leaf_{i:05d}_p{proc}_s{j}.npy"
-                    np.save(os.path.join(tmp, name), data)
+                    self._io(lambda: np.save(os.path.join(tmp, name), data))
                     files.append(name)
                     indices.append(idx)
                 entries.append({
@@ -127,7 +142,7 @@ class Checkpointer:
             else:
                 name = f"leaf_{i:05d}_p{proc}.npy"
                 host = np.asarray(jax.device_get(leaf))
-                np.save(os.path.join(tmp, name), host)
+                self._io(lambda: np.save(os.path.join(tmp, name), host))
                 entries.append({"files": [name], "indices": None,
                                 "dtype": str(host.dtype)})
         spec = {
@@ -137,9 +152,12 @@ class Checkpointer:
             "step": step,
             "num_leaves": len(entries),
         }
-        with open(os.path.join(tmp, "spec.json"), "w") as f:
-            json.dump(spec, f)
-        os.replace(tmp, final)  # atomic on POSIX
+        def write_spec():
+            with open(os.path.join(tmp, "spec.json"), "w") as f:
+                json.dump(spec, f)
+
+        self._io(write_spec)
+        self._io(lambda: os.replace(tmp, final))  # atomic on POSIX
         self._write_manifest(step)
         self._gc()
 
@@ -147,9 +165,13 @@ class Checkpointer:
         man = os.path.join(self.dir, "MANIFEST.json")
         tmp = man + ".tmp"
         steps = sorted(set(self.all_steps() + [step]))
-        with open(tmp, "w") as f:
-            json.dump({"steps": steps, "latest": max(steps)}, f)
-        os.replace(tmp, man)
+
+        def write_man():
+            with open(tmp, "w") as f:
+                json.dump({"steps": steps, "latest": max(steps)}, f)
+            os.replace(tmp, man)
+
+        self._io(write_man)
 
     def _gc(self):
         steps = self.all_steps()
@@ -191,14 +213,15 @@ class Checkpointer:
         # void records; the manifest dtype views them back bit-exactly
         want = _np_dtype(entry["dtype"]) if entry.get("dtype") else None
         if entry.get("indices") is None:
-            arr = np.load(os.path.join(path, entry["files"][0]))
+            arr = self._io(
+                lambda: np.load(os.path.join(path, entry["files"][0])))
             if want is not None and arr.dtype != want:
                 arr = arr.view(want)
             return arr
         out = np.empty(tuple(entry["shape"]), dtype=want)
         for name, idx in zip(entry["files"], entry["indices"]):
             window = tuple(slice(a, b) for a, b in idx)
-            shard = np.load(os.path.join(path, name))
+            shard = self._io(lambda: np.load(os.path.join(path, name)))
             out[window] = shard.view(want) if shard.dtype != want else shard
         return out
 

@@ -40,6 +40,12 @@ class PreemptionGuard:
     def preempted(self) -> bool:
         return self._requested
 
+    def request(self):
+        """Programmatic trigger — same effect as receiving SIGTERM.  Lets
+        orchestrators (and chaos tests) start a graceful drain without
+        delivering a real signal."""
+        self._requested = True
+
     def restore(self):
         for s, h in self._prev.items():
             signal.signal(s, h)

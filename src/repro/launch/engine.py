@@ -27,6 +27,44 @@ Decode semantics match ``serve_batch`` token for token: token 1 is sampled
 from the prefill logits at the prompt's last live row, decode step k runs
 at position ``prompt_len + k - 1``.  The parity tests pin the engine to the
 PR 2 ``loop='scan'`` path bitwise under greedy sampling.
+
+**Failure semantics** (PR 7): every request ends in exactly one terminal
+status — ``completed`` / ``timeout`` / ``rejected`` / ``failed`` — and
+``Engine.run`` *returns* its stats dict under every fault the hardening
+layer covers instead of raising away completed work:
+
+  * **Deadlines.**  ``Request.deadline_s`` (relative to arrival) cancels a
+    late request wherever it is — queued or mid-decode — reclaiming its
+    pages and recording ``status='timeout', reason='deadline'`` with the
+    tokens it did produce.  The global ``timeout_s`` is a *drain guard*:
+    on expiry the engine stops admitting, cancels in-flight work with
+    partial results, marks unserved requests ``timeout``, and returns.
+  * **Retry + requeue.**  A step-compute failure requeues its participants
+    for recompute with a per-request retry budget (``max_retries``);
+    exhausted budgets end in ``failed``.  Injected failures
+    (:class:`repro.robustness.InjectedFault`, raised *before* the launch)
+    are request-scoped — bystander slots keep their KV; an organic
+    mid-launch failure cannot trust the donated pools, so the pool is
+    rebuilt and every active sequence recomputes.
+  * **Overload shedding.**  ``admission_budget`` bounds the admission
+    queue; arrivals beyond it are rejected immediately
+    (``status='rejected', reason='overload'``) instead of growing an
+    unbounded backlog.
+  * **Non-finite quarantine.**  The paged steps sample through
+    ``sample_token_guarded``: a slot whose logits go NaN/Inf emits the
+    ``NONFINITE_TOKEN`` marker, and the engine quarantines *that slot
+    only* (``failed/non_finite``, pages scrubbed then reclaimed) while the
+    rest of the batch keeps decoding.
+  * **Graceful drain.**  A ``PreemptionGuard`` (or the ``engine.preempt``
+    fault point) flips the engine into drain: waiting requests are
+    rejected with ``reason='preempted'``, in-flight requests run to
+    completion, and the stats report ``preempted=True``.
+
+Every recovery action is counted in ``Engine.stats`` (``evictions``,
+``retries``, ``step_failures``, ``quarantined``, ``shed``,
+``deadline_cancels``) and :meth:`Engine.audit_pages` checks the page-pool
+invariant (``free + held == total_pages - 1``, no page in two places)
+after each recovery when faults are active and always at exit.
 """
 from __future__ import annotations
 
@@ -40,23 +78,31 @@ import numpy as np
 
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (
+    NONFINITE_TOKEN,
     build_paged_generate_plan,
     build_prefill_chunk_plan,
 )
 from repro.models import model_init, paged_cache_init, split_tree
+from repro.robustness import NO_FAULTS, InjectedFault
 
-__all__ = ["Request", "Engine"]
+__all__ = ["Request", "Engine", "TERMINAL_STATUSES"]
+
+TERMINAL_STATUSES = ("completed", "timeout", "rejected", "failed")
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request: ``tokens`` is the prompt (1-D int array),
     ``max_new`` the generation budget, ``arrival`` the trace-relative
-    arrival time in seconds (0 = available immediately)."""
+    arrival time in seconds (0 = available immediately), ``deadline_s`` an
+    optional per-request latency budget relative to arrival (None = no
+    deadline) — expiry cancels the request wherever it is and records a
+    ``timeout`` status with whatever tokens it produced."""
     rid: int
     tokens: np.ndarray
     max_new: int
     arrival: float = 0.0
+    deadline_s: float | None = None
 
 
 _FREE, _PREFILL, _DECODE = "free", "prefill", "decode"
@@ -85,12 +131,21 @@ class Engine:
     prefilled ``chunk`` tokens at a time (``chunk % page_size == 0``).
     ``burst`` decode steps run as one on-device scan when no prefill or
     arrival is waiting (1 while interleaving, so prompts never stall).
+
+    Robustness knobs: ``faults`` (a :class:`repro.robustness.FaultPlan`;
+    default :data:`NO_FAULTS` — zero cost), ``admission_budget`` (max
+    queued requests before shedding; None = unbounded),``max_retries``
+    (per-request step-failure budget), ``preemption_guard`` (a
+    :class:`repro.distributed.fault_tolerance.PreemptionGuard` polled each
+    tick for graceful drain).
     """
 
     def __init__(self, cfg, *, slots: int, total_pages: int, page_size: int,
                  max_pages: int, chunk: int, burst: int = 8, mesh=None,
                  kernel_backend: str | None = None,
-                 temperature: float = 0.0, seed: int = 0, params=None):
+                 temperature: float = 0.0, seed: int = 0, params=None,
+                 faults=None, admission_budget: int | None = None,
+                 max_retries: int = 2, preemption_guard=None):
         if cfg.input_kind != "tokens":
             raise ValueError("the paged engine serves token models")
         if chunk % page_size:
@@ -106,6 +161,11 @@ class Engine:
         self.burst = max(int(burst), 1)
         self.temperature = temperature
         self.mesh = mesh or make_host_mesh()
+        self.faults = faults or NO_FAULTS
+        self.admission_budget = admission_budget
+        self.max_retries = max_retries
+        self.audit_every = False   # force post-recovery audits sans faults
+        self._guard = preemption_guard
 
         kw = dict(slots=slots, total_pages=total_pages, page_size=page_size,
                   max_pages=max_pages, temperature=temperature,
@@ -120,9 +180,10 @@ class Engine:
 
         if params is None:
             params, _ = split_tree(model_init(jax.random.PRNGKey(seed), cfg))
+        self._multi = int(np.prod(tuple(self.mesh.shape.values()))) > 1
         pools, _ = split_tree(
             paged_cache_init(cfg, total_pages, page_size))
-        if int(np.prod(tuple(self.mesh.shape.values()))) > 1:
+        if self._multi:
             params = jax.device_put(params, self.chunk_plan.in_shardings[0])
             pools = jax.device_put(pools, self.chunk_plan.in_shardings[2])
         self.params = params
@@ -141,6 +202,11 @@ class Engine:
         self._free_pages = list(range(1, total_pages))  # page 0 = dummy
         self._admit_seq = 0
         self._warm = False
+        self._poisoned: set = set()     # pages holding injected NaNs
+        self._records: list = []
+        self._recorded: set = set()
+        self._retries: dict = {}
+        self._drain_reason: str | None = None
         self.stats: dict = {}
 
     def warmup(self):
@@ -194,6 +260,22 @@ class Engine:
         if not req.max_new:
             raise ValueError(f"request {req.rid}: max_new must be >= 1")
 
+    def _free_slot_pages(self, slot: _Slot):
+        """Return a slot's pages to the free pool, scrubbing any that hold
+        injected NaNs first (a reclaimed page must never leak non-finite
+        state into its next owner)."""
+        doomed = [p for p in slot.pages if p in self._poisoned]
+        if doomed:
+            idx = jnp.asarray(doomed, jnp.int32)
+            self.pools = jax.tree.map(lambda l: l.at[:, idx].set(0),
+                                      self.pools)
+            self._poisoned.difference_update(doomed)
+        self._free_pages.extend(slot.pages)
+
+    def _release(self, slot: _Slot):
+        self._free_slot_pages(slot)
+        self._reset(slot)
+
     def _evict_youngest(self, queue: deque) -> bool:
         """Free the youngest admitted slot and requeue its request at the
         front (recompute-on-readmit).  Returns False if nothing is active."""
@@ -201,18 +283,20 @@ class Engine:
         if not active:
             return False
         victim = max(active, key=lambda s: s.admit_seq)
-        self._free_pages.extend(victim.pages)
-        queue.appendleft(victim.req)
-        self._reset(victim)
+        req = victim.req
+        self._release(victim)
+        queue.appendleft(req)
         self.stats["evictions"] += 1
+        self._post_recovery_audit("eviction")
         return True
 
     def _try_page(self, slot: _Slot, logical: int) -> bool:
         """Grow slot's page list through logical index ``logical`` from the
         free pool; False (no allocation rollback needed — partial growth is
-        still valid) if the pool runs dry."""
+        still valid) if the pool runs dry.  The ``engine.page_alloc`` fault
+        point makes an allocation fail as if the pool were empty."""
         while len(slot.pages) <= logical:
-            if not self._free_pages:
+            if not self._free_pages or self.faults.fires("engine.page_alloc"):
                 return False
             slot.pages.append(self._free_pages.pop())
         return True
@@ -254,51 +338,232 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    # ---- fault handling / accounting ------------------------------------
+
+    def audit_pages(self) -> dict:
+        """Page-pool invariant check: every page except the dummy is in
+        exactly one place (the free list or one slot's table) and nothing
+        is duplicated.  Cheap host-side bookkeeping — safe to run after
+        every recovery action."""
+        held = [p for s in self._slots for p in s.pages]
+        free = list(self._free_pages)
+        issues = []
+        if len(held) != len(set(held)):
+            issues.append("page held by two slots")
+        if len(free) != len(set(free)):
+            issues.append("free-list duplicate")
+        if set(held) & set(free):
+            issues.append("page both free and held")
+        if 0 in held or 0 in free:
+            issues.append("dummy page 0 circulating")
+        if len(set(held)) + len(set(free)) != self.total_pages - 1:
+            issues.append(
+                f"leak: held {len(set(held))} + free {len(set(free))} "
+                f"!= {self.total_pages - 1}")
+        return {"ok": not issues, "free": len(free), "held": len(held),
+                "total_pages": self.total_pages, "issues": issues}
+
+    def _post_recovery_audit(self, label: str):
+        if not (self.faults.enabled or self.audit_every):
+            return
+        a = self.audit_pages()
+        if not a["ok"]:
+            self.stats.setdefault("audit_failures", []).append(
+                dict(a, after=label))
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _record(self, req: Request, status: str, *, reason=None,
+                tokens=(), slot: _Slot | None = None):
+        """Append a request's single terminal record (idempotent per rid)."""
+        if req.rid in self._recorded:
+            return
+        self._recorded.add(req.rid)
+        t = self._now()
+        self._records.append({
+            "rid": req.rid,
+            "arrival": req.arrival,
+            "status": status,
+            "reason": reason,
+            "admitted": slot.admit_t if slot is not None else None,
+            "first_token": slot.first_tok_t if slot is not None else None,
+            "finished": t,
+            "latency": t - req.arrival,
+            "prompt_len": int(len(req.tokens)),
+            "tokens": list(tokens),
+        })
+
+    def _finish(self, slot: _Slot):
+        self._record(slot.req, "completed", tokens=slot.out, slot=slot)
+        self._release(slot)
+
+    def _quarantine(self, slot: _Slot):
+        """Non-finite logits in this slot only: record the failure with the
+        tokens generated before the poison, scrub + reclaim its pages (its
+        own KV writes are suspect too), and keep every other slot going."""
+        self._poisoned.update(slot.pages)
+        self._record(slot.req, "failed", reason="non_finite",
+                     tokens=slot.out, slot=slot)
+        self._release(slot)
+        self.stats["quarantined"] += 1
+        self._post_recovery_audit("quarantine")
+
+    def _reinit_pools(self):
+        """Rebuild the page pool from scratch (organic step failure: the
+        donated pools' state is unknown)."""
+        pools, _ = split_tree(
+            paged_cache_init(self.cfg, self.total_pages, self.page_size))
+        if self._multi:
+            pools = jax.device_put(pools, self.chunk_plan.in_shardings[2])
+        self.pools = pools
+        self._free_pages = list(range(1, self.total_pages))
+        self._poisoned = set()
+
+    def _step_failure(self, participants, queue: deque, *, injected: bool,
+                      phase: str):
+        """Recover from a failed step launch.  Participants are charged a
+        retry (``failed`` once the budget is gone) and requeued at the
+        front for recompute.  Injected faults fire *before* the launch, so
+        bystander slots keep their pages and KV; an organic failure cannot
+        trust the donated pool state, so the pool is rebuilt and every
+        active sequence recomputes."""
+        self.stats["step_failures"] += 1
+        affected = (list(participants) if injected
+                    else [s for s in self._slots if s.state != _FREE])
+        charged = {id(s) for s in participants}
+        # appendleft in reverse admission order keeps the oldest frontmost
+        for s in sorted(affected, key=lambda s: s.admit_seq, reverse=True):
+            req = s.req
+            if id(s) in charged:
+                n = self._retries[req.rid] = self._retries.get(req.rid, 0) + 1
+                self.stats["retries"] += 1
+                if n > self.max_retries:
+                    self._record(req, "failed",
+                                 reason=f"{phase}_step_failure",
+                                 tokens=s.out, slot=s)
+                    if injected:
+                        self._free_slot_pages(s)
+                    self._reset(s)
+                    continue
+            if injected:
+                self._free_slot_pages(s)
+            self._reset(s)
+            queue.appendleft(req)
+        if not injected:
+            self._reinit_pools()
+        self._post_recovery_audit(f"{phase}_step_failure")
+
+    def _enforce_deadlines(self, queue: deque):
+        """Cancel deadline-expired requests wherever they are: queued ones
+        are recorded unserved; in-flight ones free their pages and keep the
+        tokens they produced."""
+        expired = [r for r in queue
+                   if r.deadline_s is not None
+                   and self._now() - r.arrival > r.deadline_s]
+        for r in expired:
+            queue.remove(r)
+            self._record(r, "timeout", reason="deadline")
+            self.stats["deadline_cancels"] += 1
+        for s in self._slots:
+            if s.state == _FREE or s.req.deadline_s is None:
+                continue
+            if self._now() - s.req.arrival > s.req.deadline_s:
+                self._record(s.req, "timeout", reason="deadline",
+                             tokens=s.out, slot=s)
+                self._release(s)
+                self.stats["deadline_cancels"] += 1
+                self._post_recovery_audit("deadline_cancel")
+
+    def _drain_all(self, pending: deque, queue: deque, reason: str):
+        """Global-timeout drain: cancel in-flight work keeping partial
+        output, mark everything still waiting unserved.  Nothing raises —
+        the caller returns the stats dict with all completed records."""
+        for s in self._slots:
+            if s.state != _FREE:
+                self._record(s.req, "timeout", reason=reason,
+                             tokens=s.out, slot=s)
+                self._release(s)
+        while queue:
+            self._record(queue.popleft(), "timeout", reason="unserved")
+        while pending:
+            self._record(pending.popleft(), "timeout", reason="unserved")
+        self._post_recovery_audit("drain")
+
     # ---- run loop -------------------------------------------------------
 
     def run(self, requests, *, timeout_s: float = 300.0) -> dict:
-        """Replay ``requests`` (any order; sorted by arrival) to completion.
+        """Replay ``requests`` (any order; sorted by arrival) to completion
+        or controlled degradation.
 
-        Returns a stats dict: per-request records plus goodput
-        (completed generated tokens / wall second), latency percentiles,
-        per-phase prefill/decode milliseconds, and eviction/step counts.
+        Returns a stats dict: one terminal record per request (status in
+        ``completed | timeout | rejected | failed``), goodput (completed
+        generated tokens / wall second), latency percentiles over completed
+        requests, per-phase prefill/decode milliseconds, recovery counters
+        and the exit page-pool audit.  ``timeout_s`` is a drain guard, not
+        an exception: on expiry the engine stops admitting, keeps partial
+        results, and returns.
         """
         for r in requests:
             self._validate(r)
         self.warmup()
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         queue: deque = deque()
-        records = []
+        self._records = []
+        self._recorded = set()
+        self._retries = {}
+        self._poisoned = set()
+        self._drain_reason = None
         self.stats = {"evictions": 0, "chunk_steps": 0, "decode_steps": 0,
-                      "prefill_ms": 0.0, "decode_ms": 0.0}
+                      "prefill_ms": 0.0, "decode_ms": 0.0,
+                      "step_failures": 0, "retries": 0, "quarantined": 0,
+                      "shed": 0, "deadline_cancels": 0, "nan_injections": 0,
+                      "preempted": False}
         t0 = time.perf_counter()
         self._t0 = t0
-
-        def now():
-            return time.perf_counter() - t0
-
-        def finish(slot: _Slot):
-            t = now()
-            records.append({
-                "rid": slot.req.rid,
-                "arrival": slot.req.arrival,
-                "admitted": slot.admit_t,
-                "first_token": slot.first_tok_t,
-                "finished": t,
-                "latency": t - slot.req.arrival,
-                "prompt_len": int(len(slot.req.tokens)),
-                "tokens": list(slot.out),
-            })
-            self._free_pages.extend(slot.pages)
-            self._reset(slot)
+        now = self._now
 
         while pending or queue or any(s.state != _FREE for s in self._slots):
             if now() > timeout_s:
-                raise RuntimeError(
-                    f"engine run exceeded {timeout_s}s with "
-                    f"{len(pending) + len(queue)} requests unserved")
+                self._drain_reason = "timeout"
+                self._drain_all(pending, queue, "global_timeout")
+                break
+            # fast-forward: nothing is runnable and the next arrival lands
+            # beyond the drain guard — declare the timeout now instead of
+            # sleeping into it
+            if (not queue and pending
+                    and all(s.state == _FREE for s in self._slots)
+                    and pending[0].arrival > timeout_s):
+                self._drain_reason = "timeout"
+                self._drain_all(pending, queue, "global_timeout")
+                break
+
+            if self._drain_reason is None and (
+                    (self._guard is not None and self._guard.preempted)
+                    or self.faults.fires("engine.preempt")):
+                # graceful drain: reject everything waiting (structured,
+                # immediate), let in-flight slots run to completion
+                self._drain_reason = "preempted"
+                self.stats["preempted"] = True
+                while queue:
+                    self._record(queue.popleft(), "rejected",
+                                 reason="preempted")
+                while pending:
+                    self._record(pending.popleft(), "rejected",
+                                 reason="preempted")
+
+            self.faults.fires("engine.straggler")   # sleeps when it fires
+
             while pending and pending[0].arrival <= now():
-                queue.append(pending.popleft())
+                r = pending.popleft()
+                if (self.admission_budget is not None
+                        and len(queue) >= self.admission_budget):
+                    self._record(r, "rejected", reason="overload")
+                    self.stats["shed"] += 1
+                else:
+                    queue.append(r)
+
+            self._enforce_deadlines(queue)
 
             # admission: FIFO while a slot is free and the pool can cover
             # the whole prompt (gating on full prompt pages, not just the
@@ -323,7 +588,7 @@ class Engine:
 
             prefilling = [s for s in self._slots if s.state == _PREFILL]
             if prefilling:
-                self._run_chunk(prefilling, queue, finish)
+                self._run_chunk(prefilling, queue)
 
             decoding = [s for s in self._slots if s.state == _DECODE]
             if decoding:
@@ -338,33 +603,43 @@ class Engine:
                 n = self.burst if quiet else 1
                 n = min(n, max(len(s.req.tokens) + s.req.max_new - s.pos - 1
                                for s in decoding))
-                self._run_decode(decoding, max(n, 1), queue, finish)
+                self._run_decode(decoding, max(n, 1), queue)
 
             if not prefilling and not decoding and not queue and pending:
                 time.sleep(min(max(pending[0].arrival - now(), 0.0), 0.05))
 
         wall = now()
-        lat = sorted(r["latency"] for r in records)
+        records = self._records
+        completed = [r for r in records if r["status"] == "completed"]
+        lat = sorted(r["latency"] for r in completed)
 
         def pct(p):
             return lat[min(int(p * len(lat)), len(lat) - 1)] if lat else 0.0
 
-        gen_tokens = sum(len(r["tokens"]) for r in records)
+        statuses: dict = {}
+        for r in records:
+            statuses[r["status"]] = statuses.get(r["status"], 0) + 1
+        gen_tokens = sum(len(r["tokens"]) for r in completed)
         self.stats.update({
             "requests": len(records),
-            "all_completed": len(records) == len(requests),
+            "completed": len(completed),
+            "statuses": statuses,
+            "all_completed": len(completed) == len(requests),
+            "drained": self._drain_reason,
             "wall_s": wall,
             "goodput_tok_s": gen_tokens / max(wall, 1e-9),
             "generated_tokens": gen_tokens,
             "latency_p50_s": pct(0.50),
             "latency_p99_s": pct(0.99),
             "records": records,
+            "page_audit": self.audit_pages(),
+            "faults": self.faults.summary(),
         })
         return dict(self.stats)
 
     # ---- phase steps ----------------------------------------------------
 
-    def _run_chunk(self, prefilling, queue, finish):
+    def _run_chunk(self, prefilling, queue):
         cs = self.chunk
 
         def pages_for_chunk(s):
@@ -394,9 +669,21 @@ class Engine:
             if id(s) in live:
                 pt[i, : len(s.pages)] = s.pages
         t0 = time.perf_counter()
-        tok1, self.pools = self._chunk_step(
-            self.params, jnp.asarray(tokens), self.pools, jnp.asarray(pt),
-            jnp.asarray(qpos), jnp.asarray(pos0), self._split_key())
+        try:
+            if self.faults.fires("engine.step"):
+                raise InjectedFault("injected chunk-step failure")
+            tok1, self.pools = self._chunk_step(
+                self.params, jnp.asarray(tokens), self.pools,
+                jnp.asarray(pt), jnp.asarray(qpos), jnp.asarray(pos0),
+                self._split_key())
+        except InjectedFault:
+            self._step_failure(prefilling, queue, injected=True,
+                               phase="prefill")
+            return
+        except Exception:
+            self._step_failure(prefilling, queue, injected=False,
+                               phase="prefill")
+            return
         tok1 = np.asarray(tok1)
         self.stats["prefill_ms"] += (time.perf_counter() - t0) * 1e3
         self.stats["chunk_steps"] += 1
@@ -405,15 +692,31 @@ class Engine:
             s.chunk_done += cs
             if s.chunk_done < len(s.req.tokens):
                 continue
+            if int(tok1[i]) == NONFINITE_TOKEN:
+                self._quarantine(s)
+                continue
             s.state = _DECODE
             s.tok = int(tok1[i])
             s.pos = len(s.req.tokens)
             s.out = [s.tok]
             s.first_tok_t = time.perf_counter() - self._t0
             if len(s.out) >= s.req.max_new:
-                finish(s)
+                self._finish(s)
 
-    def _run_decode(self, decoding, n, queue, finish):
+    def _poison_page(self, page: int):
+        """Inject NaNs into one physical page across every float pool leaf
+        (bf16 KV directly; int8 pools through their f32 scales) — the real
+        in-graph non-finite guard then trips on the next read."""
+        def f(leaf):
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf.at[:, page].set(float("nan"))
+            return leaf
+
+        self.pools = jax.tree.map(f, self.pools)
+        self._poisoned.add(int(page))
+        self.stats["nan_injections"] += 1
+
+    def _run_decode(self, decoding, n, queue):
         def pages_for_burst(s):
             # decode writes positions pos .. pos+n-1, capped at the
             # request's true last write (plen + max_new - 2); overrun
@@ -426,6 +729,10 @@ class Engine:
                                can_wait=False)
         if not decoding:
             return
+        if self.faults.fires("engine.nan_logits"):
+            victim = min(decoding, key=lambda s: s.admit_seq)
+            if victim.pages:
+                self._poison_page(victim.pages[0])
         tok = np.zeros((self.slots,), np.int32)
         pos = np.zeros((self.slots,), np.int32)
         live = {id(s) for s in decoding}
@@ -443,19 +750,37 @@ class Engine:
             step = self._decode_step
             n = 1
         t0 = time.perf_counter()
-        toks, self.pools = step(
-            self.params, jnp.asarray(tok), self.pools, jnp.asarray(pt),
-            jnp.asarray(pos), self._split_key())
+        try:
+            if self.faults.fires("engine.step"):
+                raise InjectedFault("injected decode-step failure")
+            toks, self.pools = step(
+                self.params, jnp.asarray(tok), self.pools, jnp.asarray(pt),
+                jnp.asarray(pos), self._split_key())
+        except InjectedFault:
+            self._step_failure(decoding, queue, injected=True,
+                               phase="decode")
+            return
+        except Exception:
+            self._step_failure(decoding, queue, injected=False,
+                               phase="decode")
+            return
         toks = np.asarray(toks)
         self.stats["decode_ms"] += (time.perf_counter() - t0) * 1e3
         self.stats["decode_steps"] += n
         for s in decoding:
             i = self._slots.index(s)
+            poisoned = False
             for j in range(toks.shape[1]):
                 if len(s.out) >= s.req.max_new:
                     break
-                s.out.append(int(toks[i, j]))
-                s.tok = int(toks[i, j])
+                t = int(toks[i, j])
+                if t == NONFINITE_TOKEN:
+                    poisoned = True
+                    break
+                s.out.append(t)
+                s.tok = t
                 s.pos += 1
-            if len(s.out) >= s.req.max_new:
-                finish(s)
+            if poisoned:
+                self._quarantine(s)
+            elif len(s.out) >= s.req.max_new:
+                self._finish(s)

@@ -173,6 +173,44 @@ def serve_batch(cfg, *, batch: int, prompt_len: int, gen: int,
     }
 
 
+def serve_engine(cfg, *, n_requests: int = 8, mesh=None, seed: int = 0,
+                 slots: int = 4, total_pages: int = 48, page_size: int = 8,
+                 max_pages: int = 12, chunk: int = 16, burst: int = 4,
+                 kernel_backend: str | None = None,
+                 deadline_s: float | None = None,
+                 admission_budget: int | None = None,
+                 faults=None, timeout_s: float = 300.0) -> dict:
+    """Drive the continuous-batching :class:`repro.launch.engine.Engine`
+    over a seeded synthetic ragged trace (the CLI's ``--engine N`` mode).
+
+    ``deadline_s`` attaches a per-request latency budget, and
+    ``admission_budget`` bounds the queue (overload shedding); ``faults``
+    takes a :class:`repro.robustness.FaultPlan` for chaos runs.  Returns
+    ``Engine.run``'s stats dict — every request ends in exactly one
+    terminal status even under injected faults.
+    """
+    from repro.launch.engine import Engine, Request
+
+    rng = np.random.default_rng(seed)
+    cap_tokens = min(max_pages, total_pages - 1) * page_size
+    reqs = []
+    t = 0.0
+    for rid in range(n_requests):
+        plen = int(rng.integers(4, max(chunk, 8) + 1))
+        gen = int(rng.integers(4, max(cap_tokens - chunk, 8) + 1))
+        gen = min(gen, cap_tokens - (-(-plen // chunk) * chunk) + 1, 24)
+        prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+        reqs.append(Request(rid, prompt, max(gen, 1), arrival=t,
+                            deadline_s=deadline_s))
+        t += float(rng.exponential(0.01))
+    eng = Engine(cfg, slots=slots, total_pages=total_pages,
+                 page_size=page_size, max_pages=max_pages, chunk=chunk,
+                 burst=burst, mesh=mesh, kernel_backend=kernel_backend,
+                 params=None, seed=seed, faults=faults,
+                 admission_budget=admission_budget)
+    return eng.run(reqs, timeout_s=timeout_s)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -180,6 +218,14 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--engine", type=int, default=None, metavar="N",
+                    help="serve N synthetic ragged requests through the "
+                         "continuous-batching paged engine instead of one "
+                         "fixed batch")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline for --engine mode")
+    ap.add_argument("--admission-budget", type=int, default=None,
+                    help="max queued requests before shedding (--engine)")
     ap.add_argument("--loop", default="scan", choices=["scan", "host"],
                     help="decode driver: single jitted on-device scan "
                          "(default) or the legacy per-token host loop")
@@ -204,6 +250,18 @@ def main(argv=None):
     if args.mesh:
         data, model = (int(v) for v in args.mesh.lower().split("x"))
         mesh = make_host_mesh(data=data, model=model)
+    if args.engine is not None:
+        stats = serve_engine(cfg, n_requests=args.engine, mesh=mesh,
+                             kernel_backend=args.kernel_backend,
+                             deadline_s=args.deadline_s,
+                             admission_budget=args.admission_budget)
+        print(f"[serve] engine: {stats['statuses']} "
+              f"goodput {stats['goodput_tok_s']:.1f} tok/s "
+              f"p50 {stats['latency_p50_s'] * 1e3:.0f}ms "
+              f"p99 {stats['latency_p99_s'] * 1e3:.0f}ms "
+              f"evictions {stats['evictions']} shed {stats['shed']} "
+              f"page_audit_ok {stats['page_audit']['ok']}")
+        return
     out = serve_batch(cfg, batch=args.batch, prompt_len=args.prompt_len,
                       gen=args.gen, mesh=mesh,
                       kernel_backend=args.kernel_backend,

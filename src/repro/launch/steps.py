@@ -43,9 +43,10 @@ from repro.models import (
     paged_cache_init,
     split_tree,
 )
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_init, adamw_update, guarded_update
 
 __all__ = ["StepPlan", "build_plan", "build_generate_plan", "sample_token",
+           "sample_token_guarded", "NONFINITE_TOKEN",
            "build_prefill_chunk_plan", "build_paged_generate_plan"]
 
 
@@ -172,10 +173,19 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
                num_microbatches: int | None = None,
                target_micro_tokens: int = 8192,
                seq_parallel: bool = False,
-               kernel_backend: str | None = None) -> StepPlan:
+               kernel_backend: str | None = None,
+               grad_guard: bool = False) -> StepPlan:
     """``kernel_backend`` pins the quantized-matmul dispatch backend for
     everything traced inside the produced step (None = ambient default:
-    fused Pallas on TPU, interpret/ref per env flags elsewhere)."""
+    fused Pallas on TPU, interpret/ref per env flags elsewhere).
+
+    ``grad_guard`` (train kind only) appends a scalar ``max_gnorm``
+    argument to the step and routes the update through
+    :func:`repro.optim.guarded_update`: a non-finite or
+    above-threshold grad norm applies a *zero* update in-graph (params,
+    moments and the step counter all keep their old values) and reports
+    ``update_skipped`` in the metrics — the train loop's spike detector
+    feeds the threshold and decides on checkpoint rollback."""
     kind = shape_cfg.kind
     dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     rules, values, shard_tree = _plan_state(
@@ -193,7 +203,7 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
                    _pick_microbatches(shape_cfg.global_batch, dp,
                                       shape_cfg.seq_len, tgt))
 
-        def train_step(trainable, frozen, opt_state, batch):
+        def train_step(trainable, frozen, opt_state, batch, max_gnorm=None):
             with activation_rules(rules.act_rules), \
                     dispatch.backend_scope(kernel_backend), \
                     dispatch.shard_scope(mesh):
@@ -232,22 +242,34 @@ def build_plan(cfg, mesh, shape_cfg, *, lr: float = 1e-4,
                     grads = jax.tree.map(lambda g: g / n_micro, grads)
                     loss = loss_sum / n_micro
                     metrics = {"loss": loss}
-                new_t, new_opt, gnorm = adamw_update(
-                    trainable, grads, opt_state, lr)
+                if grad_guard:
+                    new_t, new_opt, gnorm, ok = guarded_update(
+                        trainable, grads, opt_state, lr, max_gnorm)
+                else:
+                    new_t, new_opt, gnorm = adamw_update(
+                        trainable, grads, opt_state, lr)
+                    ok = None
             metrics = dict(metrics, grad_norm=gnorm)
+            if ok is not None:
+                metrics["update_skipped"] = 1.0 - ok.astype(jnp.float32)
             return new_t, new_opt, metrics
 
         batch, batch_sh = _batch_specs(cfg, shape_cfg, mesh, rules)
+        args = (t_vals, f_vals, opt, batch)
+        shardings = (t_sh, f_sh, opt_sh, batch_sh)
+        if grad_guard:
+            args += (jax.ShapeDtypeStruct((), jnp.float32),)
+            shardings += (NamedSharding(mesh, PartitionSpec()),)
         return StepPlan(
             name=f"train:{cfg.name}:{shape_cfg.name}",
             step_fn=train_step,
-            abstract_args=(t_vals, f_vals, opt, batch),
-            in_shardings=(t_sh, f_sh, opt_sh, batch_sh),
+            abstract_args=args,
+            in_shardings=shardings,
             out_shardings=(t_sh, opt_sh, None),
             rules=rules,
             donate_argnums=(0, 2),
             meta={"mode": cfg.quant.mode, "kind": kind,
-                  "num_microbatches": n_micro,
+                  "num_microbatches": n_micro, "grad_guard": grad_guard,
                   "kernel_backend": _meta_backend(kernel_backend),
                   "sharding": _meta_sharding(mesh, rules)},
         )
@@ -322,6 +344,21 @@ def sample_token(logits, key, temperature: float):
     return jax.random.categorical(
         key, logits.astype(jnp.float32) / temperature, axis=-1
     ).astype(jnp.int32)
+
+
+NONFINITE_TOKEN = -1
+
+
+def sample_token_guarded(logits, key, temperature: float):
+    """:func:`sample_token` plus the serving non-finite guard: rows whose
+    logits contain a NaN/Inf emit :data:`NONFINITE_TOKEN` (-1) instead of a
+    garbage sample.  The engine treats -1 as a per-slot poison marker and
+    quarantines only that slot — the rest of the batch keeps decoding.  On
+    finite logits this is bitwise ``sample_token`` (the ``where`` is an
+    identity), so clean-run parity is untouched."""
+    tok = sample_token(logits, key, temperature)
+    ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+    return jnp.where(ok, tok, jnp.int32(NONFINITE_TOKEN))
 
 
 def build_generate_plan(cfg, mesh, shape_cfg, *, gen: int,
@@ -447,8 +484,8 @@ def build_prefill_chunk_plan(cfg, mesh, *, slots: int, chunk: int,
                 dispatch.shard_scope(mesh):
             logits, pools = forward_prefill_chunk(
                 params, cfg, {"tokens": tokens}, pools, pt, qpos, pos0)
-            tok1 = sample_token(logits[:, -1, : cfg.vocab_size], key,
-                                temperature)
+            tok1 = sample_token_guarded(logits[:, -1, : cfg.vocab_size], key,
+                                        temperature)
         return tok1, pools
 
     return StepPlan(
@@ -504,9 +541,13 @@ def build_paged_generate_plan(cfg, mesh, *, slots: int, gen: int,
                 logits, pools = forward_decode_paged(
                     params, cfg, {"tokens": tok}, pools, pt, pos)
                 key, sub = jax.random.split(key)
-                nxt = sample_token(logits[:, -1, : cfg.vocab_size], sub,
-                                   temperature)
-                return (nxt, pools, pos + 1, key), nxt
+                nxt = sample_token_guarded(logits[:, -1, : cfg.vocab_size],
+                                           sub, temperature)
+                # a quarantined (-1) row keeps scanning on token 0 so its
+                # embedding lookup stays in range; the emitted -1 persists
+                # (its KV history is poisoned, logits stay non-finite) and
+                # the engine truncates at the first marker
+                return (jnp.maximum(nxt, 0), pools, pos + 1, key), nxt
 
             (_, pools, _, _), toks = jax.lax.scan(
                 body, (tok0, pools, pos0, key), None, length=gen)

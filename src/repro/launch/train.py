@@ -48,7 +48,10 @@ def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
                  mesh=None, seed: int = 0, log_every: int = 10,
                  num_microbatches: int | None = None,
-                 kernel_backend: str | None = None) -> dict:
+                 kernel_backend: str | None = None,
+                 faults=None, grad_guard: bool = True,
+                 rollback_after: int = 3, spike_factor: float = 10.0,
+                 spike_warmup: int = 10) -> dict:
     """Train ``cfg`` for ``steps``; returns final metrics + loss history.
 
     ``kernel_backend`` pins the quantized-matmul dispatch backend for the
@@ -60,11 +63,29 @@ def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
     sharded (codes + B rows over 'model', dB/dA psum-reduced by the fused
     VJPs), checkpoints save per-shard, and restore resharding onto the
     plan's NamedShardings keeps resume bit-exact.
+
+    **Hardening** (``grad_guard=True``): every update runs through
+    :func:`repro.optim.guarded_update` behind a per-step spike threshold —
+    ``spike_factor`` × an EMA of accepted grad norms (disabled for the
+    first ``spike_warmup`` accepted steps).  A non-finite or spiking
+    gradient *skips* the update in-graph (params + optimizer state
+    untouched, counted in ``skipped_steps``); after ``rollback_after``
+    consecutive skips the loop restores the latest checkpoint — optimizer
+    state and data position included — and resumes from there
+    (``rollbacks``).  ``faults`` (a :class:`repro.robustness.FaultPlan`)
+    can force the detector via the ``train.grad_spike`` point: on a fire
+    the threshold drops to -1 so that step is guaranteed to skip —
+    deterministic detector-path coverage without needing a batch that
+    organically produces NaNs.  Threaded as a traced scalar, so the guard
+    never recompiles.
     """
+    from repro.robustness import NO_FAULTS
+    faults = faults or NO_FAULTS
     mesh = mesh or make_host_mesh()
     plan = build_plan(cfg, mesh, shape_cfg, lr=lr,
                       num_microbatches=num_microbatches,
-                      kernel_backend=kernel_backend)
+                      kernel_backend=kernel_backend,
+                      grad_guard=grad_guard)
     print(f"[train] plan {plan.name} mode={plan.meta['mode']} "
           f"kernels={plan.meta['kernel_backend']} "
           f"mesh={plan.meta['sharding']['mesh']}")
@@ -101,13 +122,59 @@ def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
                            out_shardings=plan.out_shardings,
                            donate_argnums=plan.donate_argnums)
         losses = []
-        for _ in range(steps):
+        gnorm_ema = None
+        accepted = 0
+        consecutive_skips = 0
+        skipped_steps = 0
+        rollbacks = 0
+        done = 0
+        while done < steps:
             step, batch = next(it)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             mon.start_step()
-            trainable, opt, metrics = step_jit(trainable, frozen, opt, batch)
+            if grad_guard:
+                if faults.fires("train.grad_spike"):
+                    thr = -1.0          # detector fires unconditionally
+                elif gnorm_ema is None or accepted < spike_warmup:
+                    thr = float("inf")  # no baseline yet
+                else:
+                    thr = spike_factor * gnorm_ema
+                trainable, opt, metrics = step_jit(
+                    trainable, frozen, opt, batch, jnp.float32(thr))
+            else:
+                trainable, opt, metrics = step_jit(
+                    trainable, frozen, opt, batch)
             loss = float(metrics["loss"])
+            skipped = bool(float(metrics.get("update_skipped", 0.0)) > 0.5)
             mon.end_step(step)
+            done += 1
+            if skipped:
+                skipped_steps += 1
+                consecutive_skips += 1
+                print(f"[train] step {step:5d} SKIPPED "
+                      f"(grad_norm {float(metrics['grad_norm']):.3g} "
+                      f"> threshold {thr:.3g})", flush=True)
+                if consecutive_skips >= rollback_after and ckpt is not None \
+                        and ckpt.latest_step() is not None:
+                    restored = ckpt.restore(
+                        {"trainable": trainable, "opt": opt, "data_step": 0},
+                        shardings=ckpt_sh)
+                    trainable, opt = restored["trainable"], restored["opt"]
+                    it = make_batch_iterator(source,
+                                             int(restored["data_step"]))
+                    rollbacks += 1
+                    consecutive_skips = 0
+                    gnorm_ema, accepted = None, 0
+                    print(f"[train] {rollback_after} consecutive skips — "
+                          f"rolled back to step "
+                          f"{int(restored['data_step'])}", flush=True)
+                continue
+            consecutive_skips = 0
+            gn = float(metrics["grad_norm"])
+            if np.isfinite(gn):
+                gnorm_ema = gn if gnorm_ema is None \
+                    else 0.9 * gnorm_ema + 0.1 * gn
+                accepted += 1
             losses.append(loss)
             if step % log_every == 0:
                 print(f"[train] step {step:5d} loss {loss:.4f}", flush=True)
@@ -121,7 +188,8 @@ def run_training(cfg, shape_cfg, *, steps: int, lr: float = 1e-4,
                                          "data_step": step + 1})
                 break
     return {"losses": losses, "trainable": trainable, "frozen": frozen,
-            "straggler_flags": mon.flags}
+            "straggler_flags": mon.flags, "skipped_steps": skipped_steps,
+            "rollbacks": rollbacks}
 
 
 def main(argv=None):

@@ -1,5 +1,10 @@
 """repro.optim — AdamW, schedules, gradient accumulation & compression."""
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    guarded_update,
+)
 from repro.optim.compress import (  # noqa: F401
     ef_compress,
     ef_decompress,

@@ -10,7 +10,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AdamWState", "adamw_init", "adamw_update"]
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "guarded_update"]
 
 
 class AdamWState(NamedTuple):
@@ -72,3 +72,32 @@ def adamw_update(
     new_nu = jax.tree.map(lambda t: t[2], out,
                           is_leaf=lambda x: isinstance(x, tuple))
     return new_params, AdamWState(new_mu, new_nu, step), gnorm
+
+
+def guarded_update(params, grads, state: AdamWState, lr, max_gnorm,
+                   **adamw_kwargs):
+    """:func:`adamw_update` behind a non-finite / spike guard.
+
+    -> (new_params, new_state, gnorm, applied).  When the (pre-clip) grad
+    norm is non-finite or exceeds ``max_gnorm`` the step is *skipped*
+    in-graph: params, both moments and the step counter all keep their old
+    values exactly (``jnp.where`` on every leaf), so one poisoned batch can
+    never write NaNs into the optimizer state.  ``applied`` is a scalar
+    bool the host loop uses for consecutive-skip counting and checkpoint
+    rollback.  With finite grads under the threshold the output is bitwise
+    ``adamw_update``.
+    """
+    new_params, new_state, gnorm = adamw_update(params, grads, state, lr,
+                                                **adamw_kwargs)
+    ok = jnp.isfinite(gnorm) & (gnorm <= max_gnorm)
+
+    def pick(new, old):
+        return jnp.where(ok, new, old)
+
+    new_params = jax.tree.map(pick, new_params, params)
+    new_state = AdamWState(
+        mu=jax.tree.map(pick, new_state.mu, state.mu),
+        nu=jax.tree.map(pick, new_state.nu, state.nu),
+        step=jnp.where(ok, new_state.step, state.step),
+    )
+    return new_params, new_state, gnorm, ok

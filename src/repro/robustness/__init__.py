@@ -1,0 +1,7 @@
+"""repro.robustness — deterministic fault injection + hardening helpers."""
+from repro.robustness.faults import (  # noqa: F401
+    NO_FAULTS,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+)

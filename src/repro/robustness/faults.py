@@ -1,0 +1,158 @@
+"""Seeded, deterministic fault injection for the serving engine and the
+train loop.
+
+A :class:`FaultPlan` is a named set of injection points the hardened code
+paths *consult* (``plan.fires("engine.page_alloc")``) at well-defined
+moments; the plan decides — deterministically, from its seed and the
+consultation index — whether the fault fires this time.  The consuming code
+then exercises its real recovery path (stall/evict, retry/requeue,
+quarantine, drain, skip/rollback) exactly as it would for an organic fault,
+so chaos tests pin failure *semantics*, not mocks.
+
+Design rules:
+  * **Deterministic.**  Each point gets its own ``np.random.default_rng``
+    seeded from ``(seed, crc32(point))`` plus a consultation counter.  The
+    same seed + spec + consultation order always fires the same faults —
+    a chaos trace is replayable bit-for-bit.
+  * **Zero-cost when disabled.**  Hardened code holds :data:`NO_FAULTS`
+    (whose ``fires`` is a constant ``False``) unless a plan is supplied;
+    there is no per-step dict lookup or RNG draw in clean runs.
+  * **Bounded.**  ``max_fires`` caps a point's total fires so probabilistic
+    faults cannot livelock a bounded-retry loop.
+
+Engine injection points (consulted by ``repro.launch.engine.Engine``):
+  * ``engine.page_alloc`` — one per page-pool pop; firing makes the
+    allocation fail as if the pool were dry (slot stalls / eviction).
+  * ``engine.step``      — one per jitted step launch; firing raises
+    :class:`InjectedFault` *before* the launch (request-scoped failure:
+    participants are retried/requeued, the pool state stays valid).
+  * ``engine.nan_logits``— one per decode launch; firing poisons the first
+    KV page of the oldest decoding slot with NaNs, so the *real* in-graph
+    non-finite guard trips and the engine quarantines that slot only.
+  * ``engine.straggler`` — one per scheduler tick; firing sleeps
+    ``delay_s`` (artificial straggler step — deadline/timeout pressure).
+  * ``engine.preempt``   — one per scheduler tick; firing flips the engine
+    into graceful drain (stop admitting, finish in-flight work).
+
+Train injection points (consulted by ``repro.launch.train.run_training``):
+  * ``train.grad_spike`` — one per step; firing forces the grad-spike
+    detector's threshold below any real norm, so the in-graph guard skips
+    the update (and K consecutive fires exercise checkpoint rollback).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+
+import numpy as np
+
+__all__ = ["FaultSpec", "FaultPlan", "InjectedFault", "NO_FAULTS"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by hardened code when a ``*.step``-style point fires; kept a
+    distinct type so recovery code can tell an injected failure (state
+    known-good: raised before the launch) from an organic one."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """When one injection point fires.
+
+    ``at``: consultation indices (0-based) that fire deterministically.
+    ``prob``: per-consultation fire probability (seeded RNG).
+    ``max_fires``: cap on total fires (None = unbounded).
+    ``delay_s``: sleep this long on fire (straggler-style points).
+    """
+    prob: float = 0.0
+    at: tuple = ()
+    max_fires: int | None = None
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "at", tuple(self.at))
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"prob {self.prob} outside [0, 1]")
+
+
+def _point_rng(seed: int, point: str) -> np.random.Generator:
+    # crc32, not hash(): stable across processes (PYTHONHASHSEED)
+    return np.random.default_rng([seed, zlib.crc32(point.encode())])
+
+
+class FaultPlan:
+    """Seeded fault plan: ``spec`` maps point name -> FaultSpec (or the
+    kwargs dict for one).  Replayable: same seed + spec + consultation
+    order => same fires."""
+
+    enabled = True
+
+    def __init__(self, seed: int, spec: dict):
+        self.seed = int(seed)
+        self.spec: dict[str, FaultSpec] = {
+            k: (v if isinstance(v, FaultSpec) else FaultSpec(**v))
+            for k, v in spec.items()}
+        self._rngs = {k: _point_rng(self.seed, k) for k in self.spec}
+        self._consults: dict[str, int] = {k: 0 for k in self.spec}
+        self._fired: dict[str, int] = {k: 0 for k in self.spec}
+
+    def fires(self, point: str) -> bool:
+        """Consult ``point``; True iff the fault fires this consultation."""
+        s = self.spec.get(point)
+        if s is None:
+            return False
+        i = self._consults[point]
+        self._consults[point] = i + 1
+        hit = i in s.at
+        if not hit and s.prob > 0.0:
+            hit = self._rngs[point].random() < s.prob
+        if not hit:
+            return False
+        if s.max_fires is not None and self._fired[point] >= s.max_fires:
+            return False
+        self._fired[point] += 1
+        if s.delay_s > 0.0:
+            time.sleep(s.delay_s)
+        return True
+
+    def fired(self, point: str) -> int:
+        return self._fired.get(point, 0)
+
+    def consulted(self, point: str) -> int:
+        return self._consults.get(point, 0)
+
+    def reset(self):
+        """Rewind every point to consultation 0 (fresh replay)."""
+        self._rngs = {k: _point_rng(self.seed, k) for k in self.spec}
+        self._consults = {k: 0 for k in self.spec}
+        self._fired = {k: 0 for k in self.spec}
+
+    def summary(self) -> dict:
+        return {"enabled": True, "seed": self.seed,
+                "consults": dict(self._consults),
+                "fired": dict(self._fired)}
+
+
+class _NoFaults:
+    """Null plan: the zero-cost default every hardened path holds."""
+
+    enabled = False
+
+    def fires(self, point: str) -> bool:
+        return False
+
+    def fired(self, point: str) -> int:
+        return 0
+
+    def consulted(self, point: str) -> int:
+        return 0
+
+    def reset(self):
+        pass
+
+    def summary(self) -> dict:
+        return {"enabled": False}
+
+
+NO_FAULTS = _NoFaults()

@@ -278,3 +278,76 @@ def test_sharded_train_save_restore_resume_bit_exact(tmp_path):
     assert la and len(la) == len(lb)
     for xa, xb in zip(la, lb):
         np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+# ---------------------------------------------------------------------------
+# transient-IO retry (PR 7): every save/load file op runs behind
+# retry_on_transient — flaky filesystems don't kill runs, permanent
+# failures still raise after the bounded budget
+# ---------------------------------------------------------------------------
+
+
+class _FlakyIO:
+    """np.save stand-in that raises OSError for the first ``n`` calls."""
+
+    def __init__(self, n):
+        self.remaining = n
+        self.calls = 0
+        self._real = np.save
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        if self.remaining > 0:
+            self.remaining -= 1
+            raise OSError("simulated transient IO failure")
+        return self._real(*args, **kwargs)
+
+
+def test_save_retries_transient_oserror(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path), io_retries=2, io_backoff=0.0)
+    state = _quant_state()
+    flaky = _FlakyIO(2)
+    monkeypatch.setattr(np, "save", flaky)
+    ck.save(1, state)          # 2 transient failures absorbed by retries
+    monkeypatch.undo()
+    assert flaky.remaining == 0 and flaky.calls > 2
+    r = ck.restore(jax.tree.map(np.zeros_like, state))
+    np.testing.assert_array_equal(np.asarray(r["params"]["q"]),
+                                  np.asarray(state["params"]["q"]))
+    np.testing.assert_array_equal(np.asarray(r["params"]["b"]),
+                                  np.asarray(state["params"]["b"]))
+
+
+def test_load_retries_transient_oserror(tmp_path, monkeypatch):
+    ck = Checkpointer(str(tmp_path), io_retries=2, io_backoff=0.0)
+    state = _quant_state()
+    ck.save(3, state)
+    real_load = np.load
+    fails = {"n": 2}
+
+    def flaky_load(*args, **kwargs):
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise OSError("simulated transient read failure")
+        return real_load(*args, **kwargs)
+
+    monkeypatch.setattr(np, "load", flaky_load)
+    r = ck.restore(jax.tree.map(np.zeros_like, state))
+    monkeypatch.undo()
+    assert fails["n"] == 0
+    np.testing.assert_array_equal(np.asarray(r["params"]["q"]),
+                                  np.asarray(state["params"]["q"]))
+
+
+def test_save_raises_after_retry_budget(tmp_path, monkeypatch):
+    """Permanent IO failure: the bounded retry budget is spent, the error
+    propagates, and no committed checkpoint appears (atomicity holds —
+    the tmp dir never got renamed into place)."""
+    ck = Checkpointer(str(tmp_path), io_retries=1, io_backoff=0.0)
+    flaky = _FlakyIO(10**6)
+    monkeypatch.setattr(np, "save", flaky)
+    with pytest.raises(OSError, match="transient"):
+        ck.save(1, _quant_state())
+    monkeypatch.undo()
+    assert flaky.calls == 2        # first try + io_retries=1
+    assert ck.latest_step() is None

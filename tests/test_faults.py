@@ -1,0 +1,162 @@
+"""Fault-injection plumbing + training hardening: FaultPlan determinism,
+the guarded AdamW update (in-graph skip on non-finite/spiking grads), and
+run_training's skip-then-rollback path under the ``train.grad_spike``
+injection point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.launch.train import run_training
+from repro.optim import adamw_init, adamw_update, guarded_update
+from repro.robustness import NO_FAULTS, FaultPlan, FaultSpec
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic_and_replayable():
+    spec = {"engine.page_alloc": {"prob": 0.3},
+            "engine.step": {"at": (2, 5)}}
+    a = FaultPlan(7, spec)
+    b = FaultPlan(7, spec)
+    seq_a = [a.fires("engine.page_alloc") for _ in range(50)]
+    seq_b = [b.fires("engine.page_alloc") for _ in range(50)]
+    assert seq_a == seq_b and any(seq_a) and not all(seq_a)
+    # at-indices fire exactly where asked
+    hits = [i for i in range(8) if a.fires("engine.step")]
+    assert hits == [2, 5]
+    # reset rewinds to consultation 0: identical replay
+    a.reset()
+    assert [a.fires("engine.page_alloc") for _ in range(50)] == seq_a
+    assert a.consulted("engine.page_alloc") == 50
+    assert a.fired("engine.page_alloc") == sum(seq_a)
+
+
+def test_fault_plan_seed_changes_pattern():
+    spec = {"p": {"prob": 0.5}}
+    a = FaultPlan(1, spec)
+    b = FaultPlan(2, spec)
+    assert [a.fires("p") for _ in range(64)] != \
+        [b.fires("p") for _ in range(64)]
+
+
+def test_fault_plan_max_fires_caps_total():
+    plan = FaultPlan(0, {"p": {"prob": 1.0, "max_fires": 3}})
+    fires = [plan.fires("p") for _ in range(10)]
+    assert sum(fires) == 3 and fires[:3] == [True] * 3
+    assert plan.fired("p") == 3 and plan.consulted("p") == 10
+
+
+def test_fault_plan_unknown_point_never_fires():
+    plan = FaultPlan(0, {"p": {"prob": 1.0}})
+    assert not plan.fires("other.point")
+    assert plan.summary()["fired"] == {"p": 0}
+
+
+def test_no_faults_is_inert():
+    assert not NO_FAULTS.enabled
+    assert not NO_FAULTS.fires("anything")
+    assert NO_FAULTS.summary() == {"enabled": False}
+    NO_FAULTS.reset()  # no-op, must not raise
+
+
+def test_fault_spec_validates_prob():
+    with pytest.raises(ValueError, match="prob"):
+        FaultSpec(prob=1.5)
+
+
+# ---------------------------------------------------------------------------
+# guarded AdamW
+# ---------------------------------------------------------------------------
+
+
+def _toy_state(seed=0):
+    params = {"w": jax.random.normal(jax.random.PRNGKey(seed), (4, 4)),
+              "b": jnp.zeros((4,))}
+    return params, adamw_init(params)
+
+
+def test_guarded_update_clean_grads_match_adamw_bitwise():
+    params, state = _toy_state()
+    grads = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), params)
+    p_ref, s_ref, g_ref = adamw_update(params, grads, state, 1e-2)
+    p_new, s_new, gnorm, ok = guarded_update(params, grads, state, 1e-2,
+                                             jnp.float32(np.inf))
+    assert bool(ok)
+    assert float(gnorm) == float(g_ref)
+    for a, b in zip(jax.tree.leaves(p_new), jax.tree.leaves(p_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_new), jax.tree.leaves(s_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("poison", ["nan", "inf", "spike"])
+def test_guarded_update_skips_poisoned_grads(poison):
+    params, state = _toy_state()
+    val = {"nan": np.nan, "inf": np.inf, "spike": 1e9}[poison]
+    grads = jax.tree.map(lambda p: jnp.full(p.shape, val), params)
+    thr = jnp.float32(10.0)
+    p_new, s_new, gnorm, ok = guarded_update(params, grads, state, 1e-2, thr)
+    assert not bool(ok)
+    for a, b in zip(jax.tree.leaves(p_new), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # optimizer moments AND the step counter stay untouched — a poisoned
+    # batch must not advance bias correction either
+    for a, b in zip(jax.tree.leaves(s_new), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(s_new.step) == 0
+
+
+# ---------------------------------------------------------------------------
+# run_training: skip + rollback under train.grad_spike
+# ---------------------------------------------------------------------------
+
+def _tiny():
+    cfg = smoke_variant(get_config("llama3-8b")).with_(
+        num_layers=2, d_model=64)
+    return cfg, ShapeCfg("t", 32, 4, "train")
+
+
+def test_training_skips_injected_spike_step():
+    """One injected detector fire: the step is skipped (no loss recorded,
+    counters tell the story) and training continues to the full budget."""
+    cfg, shape = _tiny()
+    faults = FaultPlan(0, {"train.grad_spike": {"at": (2,)}})
+    out = run_training(cfg, shape, steps=5, lr=1e-3, log_every=1000,
+                       faults=faults)
+    assert out["skipped_steps"] == 1 and out["rollbacks"] == 0
+    assert len(out["losses"]) == 4
+    assert all(np.isfinite(out["losses"]))
+
+
+def test_training_rolls_back_after_consecutive_skips(tmp_path):
+    """K consecutive detector fires trigger a checkpoint rollback: the run
+    restores params + optimizer + data position and finishes training."""
+    cfg, shape = _tiny()
+    ck = str(tmp_path / "ck")
+    faults = FaultPlan(0, {"train.grad_spike": {"at": (2, 3)}})
+    out = run_training(cfg, shape, steps=6, lr=1e-3, log_every=1000,
+                       ckpt_dir=ck, ckpt_every=1, faults=faults,
+                       rollback_after=2)
+    assert out["skipped_steps"] == 2
+    assert out["rollbacks"] == 1
+    assert len(out["losses"]) == 4
+    assert all(np.isfinite(out["losses"]))
+
+
+def test_grad_guard_default_matches_unguarded_run():
+    """grad_guard=True must be a bitwise no-op on a clean run — same final
+    trainables as the legacy unguarded step."""
+    cfg, shape = _tiny()
+    out_g = run_training(cfg, shape, steps=3, lr=1e-3, log_every=1000)
+    out_u = run_training(cfg, shape, steps=3, lr=1e-3, log_every=1000,
+                         grad_guard=False)
+    la, lb = (jax.tree.leaves(out_g["trainable"]),
+              jax.tree.leaves(out_u["trainable"]))
+    assert la and len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

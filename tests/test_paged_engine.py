@@ -411,3 +411,232 @@ def test_paged_decode_kernel_sharded_matches_ref():
                           logit_scale=sc, backend="interpret")
     assert _cos(y_sh, y_ref) > 0.9999
     assert _maxerr(y_sh, y_ref) < 3e-5
+
+
+# ---------------------------------------------------------------------------
+# hardening (PR 7): deadlines, timeout drain, retries, shedding, quarantine,
+# preemption, and the page-pool invariant audit under seeded chaos
+# ---------------------------------------------------------------------------
+
+from repro.distributed.fault_tolerance import PreemptionGuard  # noqa: E402
+from repro.launch.engine import TERMINAL_STATUSES  # noqa: E402
+from repro.robustness import NO_FAULTS, FaultPlan  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def hardened():
+    """One compiled engine shared by the robustness tests (they vary only
+    host-side knobs — faults, budgets, guards — never compiled shapes).
+    Pool: 7 usable pages, 2 slots, 5-page tables."""
+    cfg = _smoke("llama3-8b", "int8")
+    params, _ = split_tree(model_init(jax.random.PRNGKey(0), cfg))
+    eng = Engine(cfg, slots=2, total_pages=8, page_size=8, max_pages=5,
+                 chunk=16, burst=4, kernel_backend="interpret",
+                 params=params)
+    eng.warmup()
+    return cfg, params, eng
+
+
+@pytest.fixture
+def heng(hardened):
+    cfg, params, eng = hardened
+    yield cfg, params, eng
+    eng.faults = NO_FAULTS
+    eng.admission_budget = None
+    eng.max_retries = 2
+    eng._guard = None
+    eng.audit_every = False
+
+
+def _trace(cfg, plens, gens, gap=0.0, seed=7, deadline=None):
+    prompts = _prompts(cfg, plens, seed=seed)
+    return [Request(rid=i, tokens=p, max_new=g, arrival=gap * i,
+                    deadline_s=deadline)
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+
+
+def test_engine_global_timeout_returns_instead_of_raising(heng):
+    """timeout_s is a drain guard: on expiry run() returns the stats dict
+    with every request in a terminal 'timeout' status — never raises."""
+    cfg, params, eng = heng
+    stats = eng.run(_trace(cfg, [10, 6], [6, 6]), timeout_s=0.0)
+    assert stats["drained"] == "timeout"
+    assert len(stats["records"]) == 2
+    assert all(r["status"] == "timeout" for r in stats["records"])
+    assert not stats["all_completed"]
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+def test_engine_mid_run_timeout_keeps_partial_results(heng):
+    """A straggler tick pushes the run past timeout_s mid-decode: the drain
+    cancels in-flight work but keeps the tokens already generated."""
+    cfg, params, eng = heng
+    eng.faults = FaultPlan(0, {"engine.straggler": {"at": (1,),
+                                                    "delay_s": 2.0}})
+    stats = eng.run(_trace(cfg, [10, 6], [16, 16]), timeout_s=0.8)
+    assert stats["drained"] == "timeout"
+    assert len(stats["records"]) == 2
+    assert {r["status"] for r in stats["records"]} == {"timeout"}
+    assert any(r["tokens"] for r in stats["records"]), stats["records"]
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+def test_engine_deadline_cancels_inflight_request(heng):
+    """A per-request deadline expires mid-decode (straggler-stretched
+    tick): that request alone is cancelled with partial tokens; its
+    deadline-free sibling completes token-identically to a clean run."""
+    cfg, params, eng = heng
+    prompts = _prompts(cfg, [10, 6], seed=5)
+    clean = eng.run([Request(0, prompts[0], 10),
+                     Request(1, prompts[1], 24)], timeout_s=600)
+    assert clean["all_completed"]
+    clean_toks = {r["rid"]: r["tokens"] for r in clean["records"]}
+
+    eng.faults = FaultPlan(0, {"engine.straggler": {"at": (2,),
+                                                    "delay_s": 1.0}})
+    stats = eng.run([Request(0, prompts[0], 10),
+                     Request(1, prompts[1], 24, deadline_s=0.5)],
+                    timeout_s=600)
+    rec = {r["rid"]: r for r in stats["records"]}
+    assert rec[1]["status"] == "timeout" and rec[1]["reason"] == "deadline"
+    assert stats["deadline_cancels"] >= 1
+    assert rec[0]["status"] == "completed"
+    assert rec[0]["tokens"] == clean_toks[0]
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+def test_engine_admission_budget_sheds_overload(heng):
+    """Arrivals beyond the admission budget are rejected immediately with
+    a structured 'overload' record instead of growing the backlog."""
+    cfg, params, eng = heng
+    eng.admission_budget = 2
+    stats = eng.run(_trace(cfg, [8] * 5, [4] * 5), timeout_s=600)
+    st = stats["statuses"]
+    assert st.get("rejected", 0) == 3 and stats["shed"] == 3, st
+    assert st.get("completed", 0) == 2, st
+    shed = [r for r in stats["records"] if r["status"] == "rejected"]
+    assert all(r["reason"] == "overload" for r in shed)
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+def test_engine_nan_quarantine_isolates_one_slot(heng):
+    """NaNs injected into one slot's KV page trip the in-graph non-finite
+    guard for that slot only: it fails with reason 'non_finite', the other
+    slot's output stays token-for-token identical to the clean run, and
+    the poisoned pages are scrubbed before reuse."""
+    cfg, params, eng = heng
+    reqs = _trace(cfg, [10, 6], [12, 12], seed=9)
+    clean = eng.run(reqs, timeout_s=600)
+    assert clean["all_completed"]
+    clean_toks = {r["rid"]: r["tokens"] for r in clean["records"]}
+
+    eng.faults = FaultPlan(3, {"engine.nan_logits": {"at": (0,)}})
+    stats = eng.run(reqs, timeout_s=600)
+    rec = {r["rid"]: r for r in stats["records"]}
+    assert rec[0]["status"] == "failed" and rec[0]["reason"] == "non_finite"
+    assert stats["quarantined"] == 1 and stats["nan_injections"] == 1
+    assert rec[1]["status"] == "completed"
+    assert rec[1]["tokens"] == clean_toks[1], "bystander slot corrupted"
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+    assert not eng._poisoned, "poisoned pages must be scrubbed + reclaimed"
+
+
+def test_engine_step_failure_retries_then_recovers(heng):
+    """An injected step failure requeues its participants; the retry
+    recomputes from scratch and the final tokens match the clean run."""
+    cfg, params, eng = heng
+    reqs = _trace(cfg, [10, 6], [8, 8], seed=2)
+    clean = eng.run(reqs, timeout_s=600)
+    assert clean["all_completed"]
+    clean_toks = {r["rid"]: r["tokens"] for r in clean["records"]}
+
+    eng.faults = FaultPlan(0, {"engine.step": {"at": (0,)}})
+    stats = eng.run(reqs, timeout_s=600)
+    assert stats["all_completed"], stats["statuses"]
+    assert stats["step_failures"] == 1 and stats["retries"] >= 1
+    got = {r["rid"]: r["tokens"] for r in stats["records"]}
+    assert got == clean_toks
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+def test_engine_step_failure_budget_exhausts_to_failed(heng):
+    """A step that fails on every launch burns the per-request retry
+    budget and ends in 'failed' — with every page back in the pool."""
+    cfg, params, eng = heng
+    eng.faults = FaultPlan(0, {"engine.step": {"prob": 1.0}})
+    stats = eng.run(_trace(cfg, [8], [4]), timeout_s=600)
+    (rec,) = stats["records"]
+    assert rec["status"] == "failed" and "step_failure" in rec["reason"]
+    assert stats["retries"] == eng.max_retries + 1
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+    assert stats["page_audit"]["free"] == eng.total_pages - 1
+
+
+def test_engine_preemption_guard_drains_gracefully(heng):
+    """A pre-flagged PreemptionGuard flips the engine straight into drain:
+    nothing is admitted, every waiting request gets a structured
+    'rejected/preempted' record."""
+    cfg, params, eng = heng
+    guard = PreemptionGuard(signals=())
+    guard.request()
+    eng._guard = guard
+    stats = eng.run(_trace(cfg, [8, 8], [4, 4]), timeout_s=600)
+    assert stats["preempted"] and stats["drained"] == "preempted"
+    assert all(r["status"] == "rejected" and r["reason"] == "preempted"
+               for r in stats["records"])
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+def test_engine_seeded_chaos_trace_contract(heng):
+    """The PR 7 acceptance trace: an eviction-heavy seeded load under a
+    FaultPlan injecting page-allocation failures, a step failure, a NaN
+    burst and a mid-run preemption.  Contract: run() returns, every
+    request ends in exactly one terminal status, fault-untouched requests
+    are token-for-token identical to the clean run, and the page-pool
+    audit is clean after every recovery path and at exit."""
+    cfg, params, eng = heng
+    # two concurrent 5-page requests overcommit the 7-page pool with
+    # overlapping starvation windows: the clean run must already exercise
+    # stall/evict/recompute
+    reqs = _trace(cfg, [8, 8, 10, 8, 9], [32, 32, 12, 24, 8],
+                  gap=0.02, seed=13)
+    eng.audit_every = True
+    clean = eng.run(reqs, timeout_s=600)
+    assert clean["all_completed"], clean["statuses"]
+    assert clean["evictions"] > 0, "trace was sized to force eviction"
+    assert "audit_failures" not in clean, clean["audit_failures"]
+    clean_toks = {r["rid"]: r["tokens"] for r in clean["records"]}
+
+    eng.faults = FaultPlan(17, {
+        "engine.page_alloc": {"prob": 0.2, "max_fires": 5},
+        "engine.step": {"at": (2,)},
+        "engine.nan_logits": {"at": (1,)},
+        "engine.preempt": {"at": (12,)},
+    })
+    stats = eng.run(reqs, timeout_s=600)
+
+    records = stats["records"]
+    assert len(records) == len(reqs)
+    assert sorted(r["rid"] for r in records) == list(range(len(reqs)))
+    assert all(r["status"] in TERMINAL_STATUSES for r in records)
+    assert sum(stats["statuses"].values()) == len(reqs)
+    for r in records:
+        if r["status"] == "completed":
+            assert r["tokens"] == clean_toks[r["rid"]], (
+                f"rid={r['rid']} diverged from the clean run")
+    assert "audit_failures" not in stats, stats["audit_failures"]
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+    fired = stats["faults"]["fired"]
+    assert fired["engine.page_alloc"] + fired["engine.step"] > 0, fired
+
+
+def test_engine_page_audit_detects_corruption(heng):
+    """The audit helper itself must catch double-ownership — a free-list
+    duplicate flips ok=False with a named issue."""
+    cfg, params, eng = heng
+    assert eng.audit_pages()["ok"]
+    eng._free_pages.append(eng._free_pages[0])
+    a = eng.audit_pages()
+    assert not a["ok"] and any("duplicate" in s for s in a["issues"]), a
+    eng._free_pages.pop()
+    assert eng.audit_pages()["ok"]

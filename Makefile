@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
 	bench-attn serve-smoke serve-smoke-interpret serve-trace-smoke \
-	train-smoke-interpret chaos-smoke
+	train-smoke-interpret chaos-smoke ptq-stream-smoke
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -59,6 +59,16 @@ chaos-smoke:     ## fault-injected serving: chaos scenarios + hardened-engine te
 	$(PY) -m pytest -x -q tests/test_paged_engine.py \
 		-k "timeout or deadline or sheds or quarantine or step_failure \
 		or preemption or chaos or audit"
+
+# crash-safe streaming PTQ: the CLI self-check kills the pipeline at a
+# block boundary, mid-shard-write, pre-ledger-commit and under bitrot,
+# resumes each run, and asserts the artifact is bit-identical to an
+# uninterrupted run (clean ledger/checksum audit included); the test
+# suite then covers the resume contract point by point
+ptq-stream-smoke:  ## streaming-PTQ kill/resume/bitrot self-check + resume-contract tests
+	$(PY) -m repro.launch.ptq_stream --selfcheck --out /tmp/ptq_stream_sc \
+		--blocks 4 --d 64 --dff 96 --tokens 32 --steps 8 --rank 4
+	$(PY) -m pytest -x -q tests/test_ptq_stream.py
 
 bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
 	$(PY) -m benchmarks.bench_train

@@ -1,14 +1,23 @@
 """Table 1 analogue — PTQ method comparison at 4-bit, parity budgets.
 
 Per real-module-shaped matrix (llama3-8b modules / 4): quant-error-reduction
-ratio vs plain block-wise NF4 for GPTQ / AWQ / LoftQ / LoRDS(init) /
-LoRDS(refined), plus tiny-LM eval-loss after whole-model PTQ.
+ratio vs plain block-wise NF4 for GPTQ / AWQ / SmoothRot / LoftQ /
+LoRDS(init) / LoRDS(refined), plus tiny-LM eval-loss after whole-model PTQ.
 Expected ordering (paper): LoRDS(refined) best at equal float budget.
+
+Also checks the layer-streaming pipeline against the in-memory path
+(identical packed codes, block by block) and records the streaming peak
+footprint vs the dense model — persisted to ``BENCH_ptq.json``.
 """
 from __future__ import annotations
 
+import json
+import os
+import tempfile
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import (
     MODULE_SHAPES,
@@ -34,8 +43,8 @@ def _dequant_lords(res):
 
 def run(report):
     key = jax.random.PRNGKey(0)
-    ratios = {m: [] for m in ("gptq", "awq", "loftq", "lords_init",
-                              "lords_refined")}
+    ratios = {m: [] for m in ("gptq", "awq", "smoothrot", "loftq",
+                              "lords_init", "lords_refined")}
     for mod, (n, m) in MODULE_SHAPES.items():
         key, sub = jax.random.split(key)
         w = realistic_weight(sub, n, m)
@@ -50,6 +59,9 @@ def run(report):
         qa, sa, sc = baselines.awq_quantize(w, x, BLOCK, "nf4", n_grid=10)
         outs["awq"] = quantize.dequantize_blockwise(qa, sa, BLOCK,
                                                     "nf4") / sc[None, :]
+        qs, ss, c, signs = baselines.smoothrot_quantize(w, x, BLOCK, "nf4")
+        outs["smoothrot"] = baselines.smoothrot_dequantize(
+            qs, ss, c, signs, BLOCK, "nf4")
         ql, sl, lb, la = baselines.loftq_init(w, BLOCK, "nf4", r=8, iters=3)
         outs["loftq"] = quantize.dequantize_blockwise(ql, sl, BLOCK,
                                                       "nf4") + lb @ la
@@ -94,3 +106,51 @@ def run(report):
         cfg_q = cfg_fp.with_(quant=q)
         l = eval_loss(params_q, cfg_q)
         report(f"ptq_t1/model/{name}", 0.0, f"eval_loss={l:.4f}")
+
+    # streamed vs in-memory PTQ: identical packed codes + peak footprint
+    streaming = _streaming_equivalence(report)
+
+    out = {"err_reduction": {k: [float(v) for v in vs]
+                             for k, vs in ratios.items()},
+           "streaming": streaming}
+    with open("BENCH_ptq.json", "w") as f:
+        json.dump(out, f, indent=1)
+    report("ptq_t1/json", 0.0, "wrote BENCH_ptq.json")
+
+
+def _streaming_equivalence(report) -> dict:
+    """Layer-streaming pipeline vs the in-memory path: the packed artifact
+    must be bit-identical and the streaming peak must undercut the dense
+    model footprint.  Returns the record persisted to BENCH_ptq.json."""
+    from repro.ptq_stream import (ResidualMLPSource, StreamPlan,
+                                  quantize_dense_blocks, read_shard,
+                                  stream_quantize)
+    from repro.ptq_stream.shards import shard_name
+
+    with tempfile.TemporaryDirectory() as root:
+        src = ResidualMLPSource.create(
+            os.path.join(root, "model"), num_blocks=6, d=96, d_ff=192,
+            tokens=48, seed=0)
+        plan = StreamPlan(block_size=32, rank=4, refine_steps=10,
+                          memory_budget=int(src.dense_bytes() * 0.95))
+        out = os.path.join(root, "stream")
+        with timer() as t:
+            s = stream_quantize(src, out, plan)
+        ref, x_digest = quantize_dense_blocks(src, plan)
+        identical = s["status"] == "complete"
+        for i, want in enumerate(ref):
+            got = read_shard(os.path.join(out, shard_name(i)))
+            identical &= sorted(got) == sorted(want) and all(
+                np.array_equal(got[k], want[k]) for k in want)
+        identical &= s["x_final_digest"] == x_digest
+        rec = {"bit_identical": bool(identical),
+               "peak_bytes": s["peak_bytes"],
+               "dense_bytes": src.dense_bytes(),
+               "budget_bytes": plan.memory_budget,
+               "wall_s": t.dt}
+    assert rec["bit_identical"], "streamed artifact diverged from in-memory"
+    assert rec["peak_bytes"] <= rec["budget_bytes"], rec
+    report("ptq_t1/streaming", rec["wall_s"] * 1e6,
+           f"bit_identical={rec['bit_identical']} "
+           f"peak_bytes={rec['peak_bytes']} dense_bytes={rec['dense_bytes']}")
+    return rec

@@ -1,0 +1,171 @@
+"""Streaming-PTQ chaos benchmark — resume parity at every block boundary.
+
+The ``bench_chaos`` pattern applied to the quantization pipeline: run the
+layer-streaming PTQ once clean, then re-run it under injected faults and
+*assert* the crash-safety contract instead of just recording numbers:
+
+  * **boundary sweep** — for *every* block boundary b, kill a fresh run at
+    b, resume it, and require (i) the resumed artifact is bit-identical to
+    the clean run's shards, (ii) blocks < b were reused (never recomputed),
+    and (iii) the post-resume ledger/checksum audit is clean;
+  * **mid-write / pre-commit kills** — the same contract when the kill
+    lands inside a shard write (stray temp file) or between a published
+    shard and its ledger entry (un-journaled work is re-done, to the same
+    bytes);
+  * **bitrot** — a corrupted published shard is detected by the resume
+    audit and exactly that block is recomputed;
+  * **memory watchdog** — an injected allocation spike trips
+    :class:`MemoryBudgetExceeded` (fail fast, diagnosable), and the run
+    still resumes to the identical artifact afterwards.
+
+Writes ``BENCH_ptq_stream.json`` with the scenario records and the peak
+streaming footprint vs the dense model size.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+import benchmarks.common  # noqa: F401  (sets REPRO_CPU_EXEC before jax use)
+
+from repro.ptq_stream import (
+    MemoryBudgetExceeded,
+    ResidualMLPSource,
+    StreamPlan,
+    audit_artifact,
+    read_shard,
+    stream_quantize,
+)
+from repro.ptq_stream.shards import shard_name
+from repro.robustness import FaultPlan, InjectedFault
+
+_MODEL = dict(num_blocks=4, d=64, d_ff=128, tokens=32, seed=0)
+
+
+def _shards(directory: str, n: int) -> list[dict]:
+    return [read_shard(os.path.join(directory, shard_name(i)))
+            for i in range(n)]
+
+
+def _identical(ref: list[dict], directory: str) -> bool:
+    got = _shards(directory, len(ref))
+    return all(
+        sorted(a) == sorted(b) and all(np.array_equal(a[k], b[k]) for k in a)
+        for a, b in zip(ref, got))
+
+
+def _expect_kill(src, out, plan, faults):
+    try:
+        stream_quantize(src, out, plan, faults=faults)
+    except InjectedFault:
+        return True
+    return False
+
+
+def run_scenarios(root: str) -> dict:
+    src = ResidualMLPSource.create(os.path.join(root, "model"), **_MODEL)
+    plan = StreamPlan(block_size=32, rank=4, refine_steps=10)
+    n = src.num_blocks
+
+    clean_dir = os.path.join(root, "clean")
+    clean = stream_quantize(src, clean_dir, plan)
+    assert clean["status"] == "complete", clean
+    ref = _shards(clean_dir, n)
+    results = {"clean": {"peak_bytes": clean["peak_bytes"],
+                         "dense_bytes": src.dense_bytes(),
+                         "wall_s": clean["wall_s"]},
+               "boundary_sweep": [], "scenarios": {}}
+
+    # -- kill + resume at EVERY block boundary ------------------------------
+    for b in range(n):
+        out = os.path.join(root, f"kill_b{b}")
+        faults = FaultPlan(b, {"ptq.kill_at_block": {"at": (b,)}})
+        assert _expect_kill(src, out, plan, faults), f"kill at {b} never fired"
+        s = stream_quantize(src, out, plan, resume=True)
+        rec = {"boundary": b, "reused": s["reused"],
+               "recomputed": s["recomputed"],
+               "bit_identical": _identical(ref, out),
+               "audit_clean": audit_artifact(out, src, plan)["clean"]}
+        assert rec["bit_identical"], f"boundary {b}: artifact diverged"
+        assert rec["audit_clean"], f"boundary {b}: dirty audit"
+        assert s["reused"] == b, (
+            f"boundary {b}: expected {b} reused blocks, got {s['reused']}")
+        results["boundary_sweep"].append(rec)
+
+    # -- kill inside the shard write / before the ledger commit -------------
+    for name, point in [("mid_write", "ptq.kill_mid_write"),
+                        ("pre_commit", "ptq.kill_before_commit")]:
+        out = os.path.join(root, name)
+        faults = FaultPlan(7, {point: {"at": (n // 2,)}})
+        assert _expect_kill(src, out, plan, faults), f"{name} never fired"
+        s = stream_quantize(src, out, plan, resume=True)
+        rec = {"reused": s["reused"], "recomputed": s["recomputed"],
+               "stray_tmp_removed": s["stray_tmp_removed"],
+               "bit_identical": _identical(ref, out),
+               "audit_clean": audit_artifact(out, src, plan)["clean"]}
+        assert rec["bit_identical"] and rec["audit_clean"], (name, rec)
+        results["scenarios"][name] = rec
+
+    # -- bitrot on a published shard ----------------------------------------
+    out = os.path.join(root, "bitrot")
+    faults = FaultPlan(3, {"ptq.corrupt_shard": {"at": (1,)},
+                           "ptq.kill_at_block": {"at": (n - 1,)}})
+    assert _expect_kill(src, out, plan, faults)
+    pre = audit_artifact(out, src, plan)
+    s = stream_quantize(src, out, plan, resume=True)
+    rec = {"audit_caught_corruption": not pre["clean"],
+           "recomputed": s["recomputed"],
+           "bit_identical": _identical(ref, out),
+           "audit_clean": audit_artifact(out, src, plan)["clean"]}
+    assert rec["audit_caught_corruption"], "bitrot escaped the audit"
+    assert 1 in rec["recomputed"], rec
+    assert rec["bit_identical"] and rec["audit_clean"], rec
+    results["scenarios"]["bitrot"] = rec
+
+    # -- injected memory spike trips the watchdog, run still resumes --------
+    out = os.path.join(root, "oom")
+    budget = int(clean["peak_bytes"] * 1.2)
+    plan_b = StreamPlan(block_size=32, rank=4, refine_steps=10,
+                        memory_budget=budget)
+    oom_raised = False
+    try:
+        stream_quantize(src, out, plan_b,
+                        faults=FaultPlan(5, {"ptq.oom_spike": {"at": (9,)}}))
+    except MemoryBudgetExceeded as e:
+        oom_raised = "live charges" in str(e)
+    s = stream_quantize(src, out, plan_b, resume=True)
+    rec = {"oom_diagnostic": oom_raised, "budget": budget,
+           "peak_bytes": s["peak_bytes"],
+           "bit_identical": _identical(ref, out)}
+    assert rec["oom_diagnostic"], "oom spike produced no diagnostic"
+    assert rec["bit_identical"], rec
+    results["scenarios"]["oom_spike"] = rec
+    return results
+
+
+def run(report):
+    """benchmarks.run entry point -> BENCH_ptq_stream.json."""
+    with tempfile.TemporaryDirectory() as root:
+        results = run_scenarios(root)
+    c = results["clean"]
+    report("ptq_stream/clean", c["wall_s"] * 1e6,
+           f"peak_bytes={c['peak_bytes']} dense_bytes={c['dense_bytes']}")
+    for rec in results["boundary_sweep"]:
+        report(f"ptq_stream/kill_b{rec['boundary']}", 0.0,
+               f"reused={rec['reused']} redone={len(rec['recomputed'])} "
+               f"bit_identical={rec['bit_identical']}")
+    for name, rec in results["scenarios"].items():
+        report(f"ptq_stream/{name}", 0.0,
+               f"bit_identical={rec['bit_identical']}")
+    with open("BENCH_ptq_stream.json", "w") as f:
+        json.dump(results, f, indent=1)
+    report("ptq_stream/json", 0.0, "wrote BENCH_ptq_stream.json")
+
+
+if __name__ == "__main__":
+    def _p(name, us, derived):
+        print(f"{name},{us:.1f},{derived}")
+    run(_p)

@@ -24,6 +24,9 @@ table registry and exits.
                           (clean-vs-chaos differential trace replay,
                           terminal statuses, failure isolation, page-pool
                           audit) -> BENCH_serve.json ("chaos" section)
+  ptq_stream   §4.1     — crash-safe layer-streaming PTQ (kill/resume
+                          parity at every block boundary, bitrot + OOM
+                          watchdog drills) -> BENCH_ptq_stream.json
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ import sys
 import time
 
 TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
-          "error_ratio", "serve", "train", "attn", "chaos"]
+          "error_ratio", "serve", "train", "attn", "chaos", "ptq_stream"]
 
 
 def main() -> None:

@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from repro.distributed.fault_tolerance import retry_on_transient
+from repro.robustness import NO_FAULTS, InjectedFault
 
 __all__ = ["Checkpointer"]
 
@@ -94,11 +95,16 @@ def _is_sharded(leaf) -> bool:
 
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3,
-                 io_retries: int = 2, io_backoff: float = 0.05):
+                 io_retries: int = 2, io_backoff: float = 0.05,
+                 faults=NO_FAULTS):
         self.dir = directory
         self.keep = keep
         self.io_retries = io_retries
         self.io_backoff = io_backoff
+        # chaos hook: ``ckpt.save_crash`` is consulted once per leaf write,
+        # so tests can kill a save at any point mid-step and assert the
+        # previous checkpoint stays restorable (atomicity contract).
+        self.faults = faults
         os.makedirs(directory, exist_ok=True)
 
     def _io(self, fn):
@@ -125,6 +131,9 @@ class Checkpointer:
         proc = jax.process_index()
         entries = []
         for i, leaf in enumerate(leaves):
+            if self.faults.fires("ckpt.save_crash"):
+                raise InjectedFault(
+                    f"killed mid checkpoint save (step {step}, leaf {i})")
             if _is_sharded(leaf):
                 files, indices = [], []
                 for j, (idx, data) in enumerate(_shard_entries(leaf)):

@@ -6,8 +6,19 @@
 * QPiSSA: principal-components-to-adapter initialization — Tables 8, 9
 * GPTQ: Hessian-based column-wise quantization           — Table 1
 * AWQ: activation-aware per-channel scale search         — Table 1
+* SmoothRot: channel-wise smoothing + Hadamard rotation  — outlier front end
 
-GPTQ/AWQ consume calibration activations (`repro.data.calibration`).
+GPTQ/AWQ/SmoothRot consume calibration activations (`repro.data.calibration`).
+
+SmoothRot (Czakó et al., 2025) composes two quantization-friendliness
+transforms on the input dimension: SmoothQuant-style per-channel scales
+``c_j = E|x_j|^α / max_i|w_ij|^{1-α}`` migrate activation outliers into the
+weight, then a (sign-randomized) normalized Hadamard rotation spreads the
+remaining per-channel energy across all channels.  Both are exactly
+invertible, so ``smoothrot_dequantize`` returns Ŵ in the *original* basis
+and callers need no activation-side changes.  The channel-scale half also
+folds into the LoRDS S = BA init for free (``repro.core.scaling
+.lords_init_from_weight(channel_scale=...)``) since S is element-wise.
 """
 from __future__ import annotations
 
@@ -32,6 +43,10 @@ __all__ = [
     "qpissa_init",
     "gptq_quantize",
     "awq_quantize",
+    "hadamard_transform",
+    "smooth_scales",
+    "smoothrot_quantize",
+    "smoothrot_dequantize",
 ]
 
 
@@ -230,3 +245,96 @@ def awq_quantize(
             best = (float(err), payload)
     q, s_blk, sc = best[1]
     return q, s_blk, sc
+
+
+# ---------------------------------------------------------------------------
+# SmoothRot (Czakó et al., 2025) — channel smoothing + Hadamard rotation
+# ---------------------------------------------------------------------------
+
+
+def _hadamard_group(m: int) -> int:
+    """Largest power of two dividing m — the block-diagonal FWHT group."""
+    g = m & (-m)
+    return max(g, 1)
+
+
+def hadamard_transform(v: jnp.ndarray, signs: jnp.ndarray | None = None
+                       ) -> jnp.ndarray:
+    """Normalized fast Walsh–Hadamard transform along the last axis.
+
+    Block-diagonal over contiguous groups of size ``g`` = the largest power
+    of two dividing the axis length, so it applies to any dimension (g = 1
+    degenerates to identity).  With the normalization 1/sqrt(g) the
+    transform is a symmetric involution: ``fwht(fwht(x)) == x``.
+
+    ``signs`` (m,) of ±1 pre-multiplies the input (the randomized-Hadamard
+    ``D·H`` construction); the inverse of ``t(x) = fwht(x ⊙ d)`` is
+    ``t⁻¹(y) = fwht(y) ⊙ d``.
+    """
+    v = jnp.asarray(v)
+    m = v.shape[-1]
+    if signs is not None:
+        v = v * jnp.asarray(signs, v.dtype)
+    g = _hadamard_group(m)
+    if g == 1:
+        return v
+    lead = v.shape[:-1]
+    r = v.reshape(*lead, m // g, g)
+    h = 1
+    while h < g:
+        r = r.reshape(*lead, m // g, g // (2 * h), 2, h)
+        a, b = r[..., 0, :], r[..., 1, :]
+        r = jnp.stack([a + b, a - b], axis=-2)
+        h *= 2
+    r = r.reshape(*lead, m) / jnp.sqrt(jnp.asarray(g, v.dtype))
+    return r
+
+
+def hadamard_signs(m: int, seed: int) -> jnp.ndarray:
+    """Deterministic ±1 diagonal for the randomized Hadamard (f32)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2, m) * 2 - 1, jnp.float32)
+
+
+def smooth_scales(w: jnp.ndarray, x_calib: jnp.ndarray,
+                  alpha: float = 0.5) -> jnp.ndarray:
+    """SmoothQuant migration scales c_j = E|x_j|^α / max_i|w_ij|^{1-α}.
+
+    Applied as W ⊙ c (and x ⊘ c): channels with large activations get their
+    weight columns boosted so the *weight* quantizer sees the outlier
+    energy, where block scales can absorb it.
+    """
+    act = jnp.maximum(
+        jnp.mean(jnp.abs(x_calib.astype(jnp.float32)), axis=0), 1e-6)
+    wmax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0), 1e-6)
+    c = act**alpha / wmax ** (1.0 - alpha)
+    return jnp.maximum(c / jnp.sqrt(jnp.max(c) * jnp.min(c)), 1e-6)
+
+
+def smoothrot_quantize(
+    w: jnp.ndarray,
+    x_calib: jnp.ndarray,
+    block_size: int,
+    codebook: str,
+    alpha: float = 0.5,
+    seed: int = 0,
+):
+    """Quantize W in the smoothed+rotated basis; returns (q, s_blk, c, signs).
+
+    W' = fwht((W ⊙ c) ⊙ d) row-wise; y = x Wᵀ is preserved exactly under
+    x' = fwht((x ⊘ c) ⊙ d) since fwht is symmetric-orthogonal and d² = 1.
+    """
+    w = w.astype(jnp.float32)
+    c = smooth_scales(w, x_calib, alpha)
+    signs = hadamard_signs(w.shape[1], seed)
+    w_rot = hadamard_transform(w * c[None, :], signs)
+    q, s_blk = quantize_blockwise(w_rot, block_size, codebook)
+    return q, s_blk, c, signs
+
+
+def smoothrot_dequantize(q, s_blk, c, signs, block_size, codebook):
+    """Ŵ back in the original basis: fwht(Ŵ') ⊙ d ⊘ c per row."""
+    w_rot = dequantize_blockwise(q, s_blk, block_size, codebook)
+    return hadamard_transform(w_rot) * signs[None, :] / c[None, :]

@@ -9,6 +9,20 @@ alternating (per step t):
 
 The whole loop is one ``lax.scan`` → jit-compiles once and runs fast; the
 paper reports < 30 min for an 8B model on one A100 with T = 500, lr = 0.05.
+
+Calibration hooks (used by the layer-streaming pipeline, repro.ptq_stream):
+  * ``col_weight`` — per-input-channel weights (typically E[x_j²] from
+    captured activations, a diagonal-Hessian proxy): the adaptation step
+    minimizes the *activation-weighted* MSE, pushing (B, A) capacity toward
+    the channels that matter for the layer's output.  The quantization step
+    is untouched — per-element positive weights never change an
+    element-wise argmin — so Q stays the exact nearest-level solution.
+  * ``channel_scale`` — SmoothQuant/SmoothRot-style per-input-channel
+    smoothing scales c_j, *folded into the S = BA init* instead of being a
+    runtime transform: because S is element-wise, quantizing W against
+    S₀ = blockscales(W ⊙ c) ⊘ c is identical to quantizing the smoothed
+    weight W ⊙ c against its own block scales — the smoothing costs nothing
+    at inference and the refinement is free to move away from it.
 """
 from __future__ import annotations
 
@@ -58,18 +72,30 @@ def ptq_refine(
     steps: int = 500,
     lr: float = 0.05,
     weight_decay: float = 0.0,
+    col_weight: jnp.ndarray | None = None,
+    channel_scale: jnp.ndarray | None = None,
 ) -> PTQResult:
-    """Run Algorithm 1 on one weight matrix; returns refined (B, A, Q)."""
+    """Run Algorithm 1 on one weight matrix; returns refined (B, A, Q).
+
+    ``col_weight`` (m,): activation-weighted adaptation (see module doc).
+    ``channel_scale`` (m,): smoothing scales folded into the S init.
+    """
     w = w.astype(jnp.float32)
     b0, a0 = scaling.lords_init_from_weight(
-        w, block_size, rank=rank, extra_rank=extra_rank
+        w, block_size, rank=rank, extra_rank=extra_rank,
+        channel_scale=channel_scale,
     )
     levels = lut.codebook(codebook_name)
+    colw = (None if col_weight is None
+            else col_weight.astype(jnp.float32)[None, :])
 
     def recon_loss(ba, qv):
         b, a = ba
         s = scaling.scale_matrix(b, a)
-        return jnp.mean((w - s * qv) ** 2)
+        err = (w - s * qv) ** 2
+        if colw is not None:
+            err = err * colw
+        return jnp.mean(err)
 
     def step_fn(carry, t):
         b, a, st = carry

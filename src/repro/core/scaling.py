@@ -85,13 +85,29 @@ def lords_init_from_weight(
     block_size: int,
     rank: int | None = None,
     extra_rank: int = 0,
+    channel_scale: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Full LoRDS init: block scales -> dense S -> truncated SVD -> (B, A)."""
+    """Full LoRDS init: block scales -> dense S -> truncated SVD -> (B, A).
+
+    ``channel_scale`` (m,): SmoothQuant-style per-input-channel smoothing
+    scales c_j, folded into the init — block scales are computed on the
+    smoothed weight W ⊙ c and the dense S is divided back by c, so
+    quantizing W against this S is exactly quantizing W ⊙ c against its own
+    block scales.  Because S is element-wise the smoothing is free: no
+    runtime transform, no extra stored tensors, and refinement can move off
+    the smoothed manifold if the data prefers.
+    """
     n, m = w.shape
     if rank is None:
         rank = parity_rank(n, m, block_size, extra_rank)
     block_size = eff_block(m, block_size)
-    s = expand_block_scales(blockwise_scales(w, block_size), block_size)
+    if channel_scale is not None:
+        c = jnp.maximum(jnp.abs(channel_scale.astype(w.dtype)), SCALE_EPS)
+        s = expand_block_scales(
+            blockwise_scales(w * c[None, :], block_size), block_size)
+        s = s / c[None, :]
+    else:
+        s = expand_block_scales(blockwise_scales(w, block_size), block_size)
     return svd_init(s, rank)
 
 

@@ -82,6 +82,7 @@ import math
 import os
 import threading
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -311,6 +312,8 @@ def save_autotune_table(path: str | None = None) -> str | None:
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump({"version": 1, "entries": entries}, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)  # atomic rename: readers never see a torn file
     return path
 
@@ -318,8 +321,10 @@ def save_autotune_table(path: str | None = None) -> str | None:
 def load_autotune_table(path: str | None = None, *,
                         overwrite: bool = False) -> int:
     """Merge a persisted table into the process (in-process entries win
-    unless ``overwrite``).  Missing/corrupt files are ignored — a stale
-    cache must never break serving.  Returns the number of entries merged.
+    unless ``overwrite``).  Missing/corrupt files are *tolerated* — a stale
+    or bit-rotted cache must never break serving — but corruption is
+    surfaced with a warning so operators know tiles fell back to the
+    heuristic.  Returns the number of entries merged.
     """
     path = _autotune_cache_path(path)
     if not path or not os.path.exists(path):
@@ -328,20 +333,31 @@ def load_autotune_table(path: str | None = None, *,
         with open(path) as f:
             data = json.load(f)
         entries = data["entries"]
-    except (OSError, ValueError, KeyError, TypeError):
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        warnings.warn(
+            f"autotune cache {path!r} is unreadable ({e!r}); ignoring it — "
+            "kernels fall back to heuristic tiles until re-autotuned",
+            RuntimeWarning, stacklevel=2)
         return 0
-    n = 0
+    n, bad = 0, 0
     for e in entries:
         try:
             key = tuple(e["key"])
             tiles = tuple(int(t) for t in e["tiles"])
         except (KeyError, TypeError, ValueError):
+            bad += 1
             continue
         if len(tiles) != 3:
+            bad += 1
             continue
         if overwrite or key not in _AUTOTUNE:
             _AUTOTUNE[key] = tiles
             n += 1
+    if bad:
+        warnings.warn(
+            f"autotune cache {path!r}: skipped {bad} malformed "
+            f"entr{'y' if bad == 1 else 'ies'} (kept {n})",
+            RuntimeWarning, stacklevel=2)
     return n
 
 

@@ -1,0 +1,189 @@
+"""Streaming-PTQ launcher — quantize, resume, audit, self-check.
+
+Runs the crash-safe layer-streaming pipeline (``repro.ptq_stream``) over a
+disk-backed synthetic source (stand-in for a real checkpoint reader: dense
+weights exist one block at a time).  Modes:
+
+  default      quantize ``--model-dir`` into ``--out`` under ``--budget-mb``
+  --resume     continue a killed/preempted run from its ledger (validates
+               every prior block's checksum + activation digest first)
+  --audit      read-only ledger/checksum/digest-chain audit of ``--out``
+  --selfcheck  in-process crash/resume differential: kill the pipeline at
+               a block boundary, mid-shard-write, and after a shard but
+               before its ledger commit; corrupt a published shard; then
+               resume each and assert the artifact is **bit-identical** to
+               an uninterrupted run (exit 1 on any mismatch)
+
+Fault flags (``--kill-at``, ``--kill-mid-write``, ``--corrupt-shard``)
+inject a single deterministic fault for CI-style kill/resume drills:
+
+  python -m repro.launch.ptq_stream --out /tmp/a --kill-at 1   # dies
+  python -m repro.launch.ptq_stream --out /tmp/a --resume      # finishes
+  python -m repro.launch.ptq_stream --out /tmp/a --audit       # clean
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.ptq_stream import (
+    MemoryBudgetExceeded,
+    ResidualMLPSource,
+    StreamPlan,
+    audit_artifact,
+    read_shard,
+    stream_quantize,
+)
+from repro.ptq_stream.shards import shard_name
+from repro.robustness import NO_FAULTS, FaultPlan, InjectedFault
+
+
+def _ensure_source(args) -> ResidualMLPSource:
+    model_dir = args.model_dir or os.path.join(args.out, "model")
+    if os.path.exists(os.path.join(model_dir, "source.json")):
+        return ResidualMLPSource(model_dir)
+    return ResidualMLPSource.create(
+        model_dir, num_blocks=args.blocks, d=args.d, d_ff=args.dff,
+        tokens=args.tokens, seed=args.model_seed)
+
+
+def _plan(args) -> StreamPlan:
+    budget = (None if args.budget_mb is None
+              else int(args.budget_mb * 1024 * 1024))
+    return StreamPlan(
+        codebook=args.codebook, block_size=args.block_size, rank=args.rank,
+        extra_rank=args.extra_rank, refine_steps=args.steps, lr=args.lr,
+        seed=args.seed, pretransform=args.pretransform,
+        smooth_alpha=args.smooth_alpha, act_weighted=not args.no_act_weighted,
+        memory_budget=budget)
+
+
+def _faults(args):
+    spec = {}
+    if args.kill_at is not None:
+        spec["ptq.kill_at_block"] = {"at": (args.kill_at,)}
+    if args.kill_mid_write is not None:
+        spec["ptq.kill_mid_write"] = {"at": (args.kill_mid_write,)}
+    if args.corrupt_shard is not None:
+        spec["ptq.corrupt_shard"] = {"at": (args.corrupt_shard,)}
+    return FaultPlan(args.fault_seed, spec) if spec else NO_FAULTS
+
+
+def _artifact_equal(dir_a: str, dir_b: str, num_blocks: int) -> bool:
+    for i in range(num_blocks):
+        a = read_shard(os.path.join(dir_a, shard_name(i)))
+        b = read_shard(os.path.join(dir_b, shard_name(i)))
+        if sorted(a) != sorted(b):
+            return False
+        for k in a:
+            if not np.array_equal(a[k], b[k]):
+                return False
+    return True
+
+
+def selfcheck(args) -> int:
+    """Crash/resume differential at every fault class; 0 iff bit-identical."""
+    src = _ensure_source(args)
+    plan = _plan(args)
+    ref_dir = os.path.join(args.out, "ref")
+    s = stream_quantize(src, ref_dir, plan)
+    print(f"[selfcheck] reference run: {s['status']} "
+          f"peak={s['peak_bytes']} dense={src.dense_bytes()}")
+    mid = src.num_blocks // 2
+    scenarios = [
+        ("kill_at_block", {"ptq.kill_at_block": {"at": (mid,)}}),
+        ("kill_mid_write", {"ptq.kill_mid_write": {"at": (mid,)}}),
+        ("kill_before_commit", {"ptq.kill_before_commit": {"at": (mid,)}}),
+        ("corrupt_then_kill", {"ptq.corrupt_shard": {"at": (mid,)},
+                               "ptq.kill_at_block": {"at": (mid + 1,)}}),
+    ]
+    failures = 0
+    for name, spec in scenarios:
+        out = os.path.join(args.out, name)
+        try:
+            stream_quantize(src, out, plan,
+                            faults=FaultPlan(args.fault_seed, spec))
+            print(f"[selfcheck] {name}: FAIL — injected fault never fired")
+            failures += 1
+            continue
+        except InjectedFault:
+            pass
+        s = stream_quantize(src, out, plan, resume=True)
+        aud = audit_artifact(out, src, plan)
+        same = _artifact_equal(ref_dir, out, src.num_blocks)
+        ok = s["status"] == "complete" and aud["clean"] and same
+        print(f"[selfcheck] {name}: {'ok' if ok else 'FAIL'} "
+              f"(resume reused={s['reused']} redone={s['recomputed']} "
+              f"audit={aud['clean']} bit_identical={same})")
+        failures += 0 if ok else 1
+    print(f"[selfcheck] {'PASS' if not failures else 'FAIL'} "
+          f"({len(scenarios) - failures}/{len(scenarios)} scenarios)")
+    return 1 if failures else 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="ptq_stream_out")
+    ap.add_argument("--model-dir", default=None,
+                    help="dense source dir (default: <out>/model; a "
+                         "synthetic source is generated if absent)")
+    ap.add_argument("--blocks", type=int, default=6)
+    ap.add_argument("--d", type=int, default=128)
+    ap.add_argument("--dff", type=int, default=256)
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--model-seed", type=int, default=0)
+    ap.add_argument("--codebook", default="nf4")
+    ap.add_argument("--block-size", type=int, default=32)
+    ap.add_argument("--rank", type=int, default=None)
+    ap.add_argument("--extra-rank", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pretransform", default="none",
+                    choices=["none", "smooth", "smoothrot"])
+    ap.add_argument("--smooth-alpha", type=float, default=0.5)
+    ap.add_argument("--no-act-weighted", action="store_true")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="hard memory budget; the watchdog fails fast "
+                         "with a per-charge diagnostic when exceeded")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--audit", action="store_true")
+    ap.add_argument("--selfcheck", action="store_true")
+    ap.add_argument("--kill-at", type=int, default=None, metavar="N",
+                    help="inject ptq.kill_at_block at consultation N")
+    ap.add_argument("--kill-mid-write", type=int, default=None, metavar="N")
+    ap.add_argument("--corrupt-shard", type=int, default=None, metavar="N")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.selfcheck:
+        sys.exit(selfcheck(args))
+
+    src = _ensure_source(args)
+    plan = _plan(args)
+    if args.audit:
+        aud = audit_artifact(args.out, src, plan)
+        print(json.dumps(aud, indent=1))
+        sys.exit(0 if aud["clean"] else 1)
+    try:
+        s = stream_quantize(src, args.out, plan, resume=args.resume,
+                            faults=_faults(args))
+    except InjectedFault as e:
+        print(f"[ptq-stream] injected fault fired: {e}")
+        sys.exit(17)  # distinct code so drivers can tell kill from crash
+    except MemoryBudgetExceeded as e:
+        print(f"[ptq-stream] {e}")
+        sys.exit(2)
+    print(f"[ptq-stream] {s['status']}: {s['blocks_done']}/{s['num_blocks']} "
+          f"blocks (reused {s['reused']}, redone {len(s['recomputed'])}) "
+          f"peak {s['peak_bytes'] / 1e6:.2f} MB "
+          f"vs dense {src.dense_bytes() / 1e6:.2f} MB "
+          f"in {s['wall_s']:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""repro.ptq_stream — crash-safe layer-streaming PTQ.
+
+Quantizes a model one transformer block at a time under a hard memory
+budget, with every block's artifact atomic, checksummed and journaled so a
+killed run resumes bit-identically instead of restarting.
+"""
+from repro.ptq_stream.ledger import Ledger  # noqa: F401
+from repro.ptq_stream.shards import (  # noqa: F401
+    digest_array,
+    read_shard,
+    shard_digest,
+    write_shard,
+)
+from repro.ptq_stream.source import ResidualMLPSource  # noqa: F401
+from repro.ptq_stream.stream import (  # noqa: F401
+    MemoryBudget,
+    MemoryBudgetExceeded,
+    StreamPlan,
+    audit_artifact,
+    quantize_dense_blocks,
+    stream_quantize,
+)

@@ -1,0 +1,142 @@
+"""Journaled progress ledger for the streaming PTQ pipeline.
+
+``ledger.json`` is the single source of truth for how far a run got: one
+entry per completed block, carrying everything resume needs to *prove* the
+on-disk artifact is still the one this run produced —
+
+  * ``shard`` / ``crc32``   — the shard file name and its content digest
+    (over array bytes + dtypes + shapes, not the zip container, so the
+    digest is stable across archive-metadata differences),
+  * ``x_in`` / ``x_out``    — digests of the block's calibration input and
+    output activations: consecutive entries must chain
+    (``entries[i].x_in == entries[i-1].x_out``), pinning the whole
+    propagation history, not just per-block artifacts,
+  * ``seed``                — the derived per-block RNG seed (drives the
+    randomized-Hadamard signs when the pre-transform is on).
+
+Every mutation rewrites the whole file via write-temp + ``os.replace`` —
+readers never see a torn ledger; a crash between a shard landing and its
+ledger commit simply re-does that block (deterministically, to identical
+bytes).  The plan fingerprint is recorded up front and resume refuses to
+continue a ledger written under different quantization settings.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.distributed.fault_tolerance import retry_on_transient
+
+__all__ = ["Ledger"]
+
+_FILE = "ledger.json"
+
+
+class Ledger:
+    def __init__(self, directory: str, io_retries: int = 2,
+                 io_backoff: float = 0.02):
+        self.dir = directory
+        self.path = os.path.join(directory, _FILE)
+        self.io_retries = io_retries
+        self.io_backoff = io_backoff
+        self._data = {"version": 1, "plan": None, "source": None,
+                      "status": "empty", "entries": []}
+
+    # -- IO -----------------------------------------------------------------
+
+    def _io(self, fn):
+        return retry_on_transient(fn, retries=self.io_retries,
+                                  backoff=self.io_backoff,
+                                  exceptions=(OSError,))
+
+    def _commit(self):
+        os.makedirs(self.dir, exist_ok=True)
+        tmp = self.path + f".tmp.{os.getpid()}"
+
+        def write():
+            with open(tmp, "w") as f:
+                json.dump(self._data, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+
+        self._io(write)
+
+    def load(self) -> bool:
+        """Read ledger.json; returns False when absent/unreadable (fresh)."""
+        if not os.path.exists(self.path):
+            return False
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            assert isinstance(data["entries"], list)
+        except (OSError, ValueError, KeyError, AssertionError):
+            return False
+        self._data = data
+        return True
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self, plan_fp: dict, source_fp: dict):
+        """Begin a fresh run (drops any previous entries) and commit."""
+        self._data = {"version": 1, "plan": plan_fp, "source": source_fp,
+                      "status": "in_progress", "entries": []}
+        self._commit()
+
+    def check_fingerprint(self, plan_fp: dict, source_fp: dict):
+        """Resume guard: refuse to continue under different settings."""
+        if self._data.get("plan") != plan_fp:
+            raise ValueError(
+                "ledger was written under a different quantization plan: "
+                f"ledger={self._data.get('plan')} vs run={plan_fp}")
+        if self._data.get("source") != source_fp:
+            raise ValueError(
+                "ledger was written for a different model/source: "
+                f"ledger={self._data.get('source')} vs run={source_fp}")
+
+    @property
+    def entries(self) -> list[dict]:
+        return self._data["entries"]
+
+    @property
+    def status(self) -> str:
+        return self._data.get("status", "empty")
+
+    def entry(self, block: int) -> dict | None:
+        ents = self._data["entries"]
+        return ents[block] if block < len(ents) else None
+
+    def append(self, entry: dict):
+        if entry["block"] != len(self._data["entries"]):
+            raise ValueError(
+                f"ledger append out of order: got block {entry['block']}, "
+                f"expected {len(self._data['entries'])}")
+        self._data["entries"].append(entry)
+        self._commit()
+
+    def replace(self, block: int, entry: dict):
+        """Overwrite one entry in place (a re-done block on resume)."""
+        self._data["entries"][block] = entry
+        self._commit()
+
+    def complete(self):
+        self._data["status"] = "complete"
+        self._commit()
+
+    def mark_in_progress(self):
+        self._data["status"] = "in_progress"
+        self._commit()
+
+    def cleanup_stray_tmp(self) -> int:
+        """Remove leftover ``*.tmp*`` files from a killed writer."""
+        n = 0
+        if not os.path.isdir(self.dir):
+            return 0
+        for name in os.listdir(self.dir):
+            if ".tmp" in name:
+                try:
+                    os.remove(os.path.join(self.dir, name))
+                    n += 1
+                except OSError:
+                    pass
+        return n

@@ -1,0 +1,130 @@
+"""Atomic, checksummed shard IO for the streaming PTQ pipeline.
+
+A *shard* is one block's quantized artifact: a flat ``{name: array}`` dict
+(npz container, keys like ``up/q``, ``up/b``, ``down/a`` …).  The write
+protocol is crash-safe end to end:
+
+  1. serialize into ``<shard>.tmp.<pid>`` (transient ``OSError`` retried via
+     :func:`repro.distributed.fault_tolerance.retry_on_transient`),
+  2. **verify-on-write**: re-read the temp file from disk and digest its
+     *content* — a torn or bit-flipped write is caught before publication,
+  3. ``os.replace`` onto the final name (atomic on POSIX) — readers only
+     ever see complete shards.
+
+Digests are CRC32 over array bytes + dtype + shape per sorted key, not over
+the zip container, so they are stable across archive metadata (timestamps)
+and directly comparable between a fresh write and a years-old file.
+
+Fault-injection points consulted here (see ``repro.robustness.faults``):
+``ptq.transient_oserror`` (inside the retried write fn), ``ptq.kill_mid_write``
+(between temp write and publish), ``ptq.corrupt_shard`` (flips a byte of the
+*published* file — simulated bitrot the resume audit must catch).
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+import numpy as np
+
+from repro.distributed.fault_tolerance import retry_on_transient
+from repro.robustness import NO_FAULTS, InjectedFault
+
+__all__ = ["digest_array", "shard_digest", "write_shard", "read_shard",
+           "shard_name"]
+
+
+def shard_name(block: int) -> str:
+    return f"block_{block:05d}.npz"
+
+
+def digest_array(x, crc: int = 0) -> int:
+    """CRC32 of one array's content (+dtype/shape so views can't collide)."""
+    a = np.ascontiguousarray(np.asarray(x))
+    crc = zlib.crc32(str(a.dtype).encode(), crc)
+    crc = zlib.crc32(str(a.shape).encode(), crc)
+    return zlib.crc32(a.tobytes(), crc)
+
+
+def _digest_tree(tree: dict) -> int:
+    crc = 0
+    for k in sorted(tree):
+        crc = zlib.crc32(k.encode(), crc)
+        crc = digest_array(tree[k], crc)
+    return crc
+
+
+def read_shard(path: str) -> dict:
+    """Load a shard back to {name: np.ndarray}; raises on a corrupt file."""
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def shard_digest(path: str) -> int:
+    """Content digest of an on-disk shard (raises if unreadable)."""
+    return _digest_tree(read_shard(path))
+
+
+def write_shard(directory: str, block: int, tree: dict, *,
+                faults=NO_FAULTS, io_retries: int = 2,
+                io_backoff: float = 0.02) -> tuple[str, int]:
+    """Atomically publish one block's shard; returns (filename, crc32).
+
+    The returned digest comes from re-reading the written bytes, never from
+    the in-memory arrays — what's recorded in the ledger is what the disk
+    actually holds.
+    """
+    os.makedirs(directory, exist_ok=True)
+    name = shard_name(block)
+    final = os.path.join(directory, name)
+    tmp = final + f".tmp.{os.getpid()}"
+    host = {k: np.asarray(v) for k, v in tree.items()}
+
+    def _write():
+        if faults.fires("ptq.transient_oserror"):
+            raise OSError("injected transient shard-write failure")
+        with open(tmp, "wb") as f:
+            np.savez(f, **host)
+            f.flush()
+            os.fsync(f.fileno())
+
+    retry_on_transient(_write, retries=io_retries, backoff=io_backoff,
+                       exceptions=(OSError,))
+
+    if faults.fires("ptq.kill_mid_write"):
+        # temp written, final never published: a resume must re-do the block
+        raise InjectedFault(f"killed mid shard write (block {block})")
+
+    # verify-on-write: digest the bytes that actually landed on disk
+    def _verify():
+        got = _digest_tree(read_shard(tmp))
+        want = _digest_tree(host)
+        if got != want:
+            raise OSError(
+                f"shard verify-on-write mismatch for block {block}: "
+                f"disk crc {got:#010x} != memory crc {want:#010x}")
+        return got
+
+    crc = retry_on_transient(_verify, retries=io_retries, backoff=io_backoff,
+                             exceptions=(OSError,))
+    retry_on_transient(lambda: os.replace(tmp, final), retries=io_retries,
+                       backoff=io_backoff, exceptions=(OSError,))
+
+    if faults.fires("ptq.corrupt_shard"):
+        _flip_byte(final)
+    return name, crc
+
+
+def _flip_byte(path: str, offset: int | None = None):
+    """Bit-rot simulator: XOR one byte of the published file in place.
+
+    Defaults to the middle of the file — inside the (uncompressed) array
+    data, so the *content* digest changes; flipping zip trailer metadata
+    would be invisible to a content-level checksum."""
+    size = os.path.getsize(path)
+    pos = size // 2 if offset is None else offset
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1)
+        f.seek(pos)
+        f.write(bytes([b[0] ^ 0xFF]))

@@ -1,0 +1,121 @@
+"""Dense-block sources: where the streaming pipeline gets one block at a time.
+
+The pipeline never sees a whole model — it talks to a *source* exposing:
+
+  * ``num_blocks``                    — sequential transformer-block count,
+  * ``calibration_inputs()``          — the (T, d) activations entering
+    block 0 (the Catcher output: in a real deployment the embedding+norm
+    front end runs over the calibration set once and is freed),
+  * ``load_block(i)``                 — materialize block *i*'s dense
+    weights as ``{name: (n, m) array}`` — the only point dense weights
+    exist, and the watchdog charges them against the memory budget,
+  * ``calib_inputs(weights, x)``      — per-matrix calibration activations
+    for one block given its weights and the block input (the in-block
+    Catcher: each linear is calibrated against what actually feeds it),
+  * ``block_apply(weights, x)``       — the block forward used to propagate
+    calibration activations to the next block (called with the *quantized*
+    weights, GPTQ-style, so later blocks calibrate against the error the
+    earlier ones actually emit),
+  * ``fingerprint()``                 — identity recorded in the ledger.
+
+:class:`ResidualMLPSource` is the reference implementation: a chain of
+pre-norm-free residual MLP blocks (``x + gelu(x Upᵀ) Downᵀ``) whose dense
+weights live in per-block ``.npz`` files on disk, so process memory holds at
+most one dense block — the layout a 100B+ checkpoint-streaming adapter
+plugs into.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+
+import jax
+import numpy as np
+
+from repro.data.calibration import synthetic_activations
+
+__all__ = ["ResidualMLPSource"]
+
+_META = "source.json"
+
+
+def _dense_name(i: int) -> str:
+    return f"dense_{i:05d}.npz"
+
+
+class ResidualMLPSource:
+    """Disk-backed chain of residual MLP blocks (see module docstring)."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        with open(os.path.join(directory, _META)) as f:
+            meta = json.load(f)
+        self.d = int(meta["d"])
+        self.d_ff = int(meta["d_ff"])
+        self.num_blocks = int(meta["num_blocks"])
+        self.tokens = int(meta["tokens"])
+        self.seed = int(meta["seed"])
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def create(directory: str, *, num_blocks: int, d: int, d_ff: int,
+               tokens: int = 64, seed: int = 0) -> "ResidualMLPSource":
+        """Generate + persist a deterministic dense model (one npz/block)."""
+        os.makedirs(directory, exist_ok=True)
+        rng = np.random.default_rng(seed)
+        for i in range(num_blocks):
+            up = (rng.standard_normal((d_ff, d)) * 0.2).astype(np.float32)
+            down = (rng.standard_normal((d, d_ff)) * 0.2).astype(np.float32)
+            # persistent outlier input channels — what SmoothRot-style
+            # pre-transforms (and block scales) actually fight
+            n_out = max(1, d // 16)
+            idx = rng.choice(d, n_out, replace=False)
+            up[:, idx] *= 8.0
+            np.savez(os.path.join(directory, _dense_name(i)),
+                     up=up, down=down)
+        meta = {"kind": "residual_mlp", "d": d, "d_ff": d_ff,
+                "num_blocks": num_blocks, "tokens": tokens, "seed": seed}
+        with open(os.path.join(directory, _META), "w") as f:
+            json.dump(meta, f)
+        return ResidualMLPSource(directory)
+
+    # -- the source protocol ------------------------------------------------
+
+    def fingerprint(self) -> dict:
+        return {"kind": "residual_mlp", "d": self.d, "d_ff": self.d_ff,
+                "num_blocks": self.num_blocks, "tokens": self.tokens,
+                "seed": self.seed}
+
+    def calibration_inputs(self) -> np.ndarray:
+        x = synthetic_activations(self.tokens, self.d, seed=self.seed)
+        return (0.1 * x).astype(np.float32)  # keep the residual stream sane
+
+    def load_block(self, i: int) -> dict:
+        with np.load(os.path.join(self.dir, _dense_name(i))) as z:
+            return {k: z[k] for k in z.files}
+
+    def calib_inputs(self, weights: dict, x: np.ndarray) -> dict:
+        h = jax.nn.gelu(x @ np.asarray(weights["up"]).T)
+        return {"up": np.asarray(x, np.float32),
+                "down": np.asarray(h, np.float32)}
+
+    def block_apply(self, weights: dict, x: np.ndarray) -> np.ndarray:
+        h = jax.nn.gelu(x @ np.asarray(weights["up"]).T)
+        y = x + np.asarray(h) @ np.asarray(weights["down"]).T
+        return np.asarray(y, np.float32)
+
+    # -- accounting ---------------------------------------------------------
+
+    def block_bytes(self, i: int | None = None) -> int:
+        """Dense bytes of one block (shape-derived, nothing materialized)."""
+        return 2 * self.d * self.d_ff * 4
+
+    def dense_bytes(self) -> int:
+        """Total dense model bytes — what in-memory PTQ would have to hold."""
+        return sum(self.block_bytes(i) for i in range(self.num_blocks))
+
+    def content_seed(self, block: int) -> int:
+        """Stable per-block seed derived from (source seed, block index)."""
+        return zlib.crc32(f"{self.seed}/{block}".encode())

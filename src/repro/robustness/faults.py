@@ -38,6 +38,25 @@ Train injection points (consulted by ``repro.launch.train.run_training``):
   * ``train.grad_spike`` — one per step; firing forces the grad-spike
     detector's threshold below any real norm, so the in-graph guard skips
     the update (and K consecutive fires exercise checkpoint rollback).
+
+Streaming-PTQ injection points (consulted by ``repro.ptq_stream``):
+  * ``ptq.kill_at_block``     — one per freshly-processed block; firing
+    raises :class:`InjectedFault` at the block boundary, before any work.
+  * ``ptq.kill_mid_write``    — one per shard write; firing kills between
+    the temp-file write and the atomic publish (temp is stray, no shard).
+  * ``ptq.kill_before_commit``— one per block commit; firing kills after
+    the shard is published but before its ledger entry lands.
+  * ``ptq.corrupt_shard``     — one per shard write; firing flips a byte
+    of the *published* shard (bitrot the resume audit must catch).
+  * ``ptq.transient_oserror`` — one per shard-write attempt; firing raises
+    ``OSError`` inside the retried write fn (``retry_on_transient`` path).
+  * ``ptq.oom_spike``         — one per budget charge; firing adds a
+    phantom allocation of the full limit, tripping the memory watchdog.
+
+Checkpoint injection points (consulted by ``repro.checkpoint``):
+  * ``ckpt.save_crash``       — one per leaf written during a save; firing
+    raises :class:`InjectedFault` mid-save, leaving a stray ``.tmp`` step
+    dir that ``latest_step``/``restore`` must ignore.
 """
 from __future__ import annotations
 

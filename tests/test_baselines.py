@@ -84,3 +84,65 @@ def test_awq_protects_outlier_channels(wx):
     e_b = float(jnp.mean((x @ w_b.T - y) ** 2))
     assert e_a <= e_b * 1.0001
     assert not np.allclose(np.asarray(sc), 1.0)  # non-trivial smoothing
+
+
+# ---------------------------------------------------------------------------
+# SmoothRot: channel smoothing + randomized Hadamard rotation
+# ---------------------------------------------------------------------------
+
+
+def test_hadamard_transform_is_orthonormal_involution(key):
+    v = jax.random.normal(key, (5, 64))
+    t = baselines.hadamard_transform(v)
+    np.testing.assert_allclose(
+        np.asarray(baselines.hadamard_transform(t)), np.asarray(v),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(t), axis=-1),
+        np.linalg.norm(np.asarray(v), axis=-1), rtol=1e-5)
+
+
+def test_hadamard_transform_non_pow2_uses_block_groups(key):
+    """m = 96 -> block-diagonal groups of 32: still an isometric involution."""
+    v = jax.random.normal(key, (3, 96))
+    t = baselines.hadamard_transform(v)
+    assert not np.allclose(np.asarray(t), np.asarray(v))
+    np.testing.assert_allclose(
+        np.asarray(baselines.hadamard_transform(t)), np.asarray(v),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(t), axis=-1),
+        np.linalg.norm(np.asarray(v), axis=-1), rtol=1e-5)
+
+
+def test_randomized_hadamard_inverts_with_signs(key):
+    signs = baselines.hadamard_signs(64, seed=3)
+    assert set(np.unique(np.asarray(signs))) <= {-1.0, 1.0}
+    v = jax.random.normal(key, (4, 64))
+    t = baselines.hadamard_transform(v, signs)
+    back = baselines.hadamard_transform(t) * signs
+    np.testing.assert_allclose(np.asarray(back), np.asarray(v),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_smoothrot_basis_change_preserves_forward(wx):
+    """Before quantization, x' W'^T == x W^T exactly (orthogonal + d² = 1)."""
+    w, x = wx
+    c = baselines.smooth_scales(w, x)
+    signs = baselines.hadamard_signs(w.shape[1], seed=0)
+    w_rot = baselines.hadamard_transform(w * c[None, :], signs)
+    x_rot = baselines.hadamard_transform(x / c[None, :], signs)
+    np.testing.assert_allclose(np.asarray(x_rot @ w_rot.T),
+                               np.asarray(x @ w.T), rtol=1e-4, atol=1e-5)
+
+
+def test_smoothrot_beats_blockwise_on_calibration_mse(wx):
+    w, x = wx
+    q, s_blk, c, signs = baselines.smoothrot_quantize(w, x, 64, "nf4")
+    w_sr = baselines.smoothrot_dequantize(q, s_blk, c, signs, 64, "nf4")
+    qb, sb = quantize.quantize_blockwise(w, 64, "nf4")
+    w_b = quantize.dequantize_blockwise(qb, sb, 64, "nf4")
+    y = x @ w.T
+    e_sr = float(jnp.mean((x @ w_sr.T - y) ** 2))
+    e_b = float(jnp.mean((x @ w_b.T - y) ** 2))
+    assert e_sr < e_b

@@ -351,3 +351,27 @@ def test_save_raises_after_retry_budget(tmp_path, monkeypatch):
     monkeypatch.undo()
     assert flaky.calls == 2        # first try + io_retries=1
     assert ck.latest_step() is None
+
+
+def test_kill_mid_save_keeps_previous_checkpoint_restorable(tmp_path):
+    """An injected crash partway through ``save`` (ckpt.save_crash, fired
+    mid-leaf-loop) must leave the previous step as ``latest_step()`` and
+    fully restorable — the atomic tmp-dir protocol never exposes a torn
+    checkpoint."""
+    from repro.robustness import FaultPlan, InjectedFault
+
+    state = _quant_state()
+    faults = FaultPlan(0, {"ckpt.save_crash": {"at": (6,)}})  # 2nd save,
+    ck = Checkpointer(str(tmp_path), faults=faults)           # leaf 2 of 5
+    ck.save(1, state)
+    with pytest.raises(InjectedFault):
+        ck.save(2, _quant_state(seed=1))
+    assert ck.latest_step() == 1
+    r = ck.restore(state)
+    np.testing.assert_array_equal(np.asarray(r["params"]["q"]),
+                                  np.asarray(state["params"]["q"]))
+    # the half-written attempt is only a .tmp dir; a retried save wins
+    assert os.path.isdir(str(tmp_path / "step_2.tmp"))
+    ck.save(2, _quant_state(seed=1))
+    assert ck.latest_step() == 2
+    assert ck.restore(state, step=2) is not None

@@ -116,3 +116,34 @@ def test_lords_dagger_extra_rank(key):
     """LoRDS† (Appendix B): r = parity + r_q."""
     spec = QuantSpec(method="lords", block_size=128, extra_rank=16)
     assert spec.lords_rank(4096, 4096) == 16 + 16
+
+
+def test_channel_scale_folds_into_svd_init(key):
+    """Init with channel_scale c must equal block scales of the *smoothed*
+    weight divided back by c — so quantizing W against it is exactly
+    quantizing W ⊙ c against its own block scales (AWQ-style smoothing at
+    zero runtime cost; diagonal scaling preserves the S rank)."""
+    w = jax.random.normal(key, (64, 256)) * 0.02
+    c = jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (256,)) * 0.5)
+    b, a = scaling.lords_init_from_weight(w, 64, rank=4, channel_scale=c)
+    s_fold = scaling.expand_block_scales(
+        scaling.blockwise_scales(w * c[None, :], 64), 64) / c[None, :]
+    np.testing.assert_allclose(np.asarray(b @ a), np.asarray(s_fold),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_ptq_refine_col_weight_prioritizes_heavy_columns(key):
+    """Activation-weighted refinement must reduce the weighted recon error
+    at least as well as unweighted refinement does."""
+    w = jax.random.normal(key, (64, 128)) * 0.02
+    colw = jnp.ones((128,)).at[:8].set(100.0)  # heavy leading channels
+
+    def werr(res):
+        s = scaling.scale_matrix(res.b, res.a)
+        codes = quantize.unpack_codes(res.q_packed, "nf4")
+        w_hat = quantize.dequantize_codes(codes, s, "nf4")
+        return float(jnp.mean(((w - w_hat) ** 2) * colw[None, :]))
+
+    plain = ptq_refine(w, "nf4", 32, rank=3, steps=40)
+    weighted = ptq_refine(w, "nf4", 32, rank=3, steps=40, col_weight=colw)
+    assert werr(weighted) <= werr(plain) * 1.0001

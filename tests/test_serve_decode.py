@@ -1,6 +1,7 @@
 """Decode fast path: on-device generation loop parity, quantized-KV
 numerics, decode-GEMV kernel backend parity, ragged positions, and
 autotune-table persistence."""
+import json
 import os
 
 import jax
@@ -209,8 +210,43 @@ def test_autotune_table_persists_across_processes(tmp_path, monkeypatch):
     dispatch._AUTOTUNE.pop(akey, None)  # don't leak tuned tiles to others
 
 
-def test_autotune_load_ignores_corrupt_cache(tmp_path, monkeypatch):
+def test_autotune_load_ignores_corrupt_cache_with_warning(tmp_path,
+                                                          monkeypatch):
     path = tmp_path / "bad.json"
     path.write_text("{not json")
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
-    assert dispatch.load_autotune_table() == 0
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert dispatch.load_autotune_table() == 0
+
+
+def test_autotune_load_skips_malformed_entries_with_warning(tmp_path):
+    path = tmp_path / "mixed.json"
+    good = {"key": ["lords", 5, 96, 160, "nf4", "float32", None],
+            "tiles": [8, 128, 256]}
+    path.write_text(json.dumps({"version": 1, "entries": [
+        good,
+        {"key": ["x"], "tiles": [8, 128]},        # wrong tile arity
+        {"key": ["y"], "tiles": ["a", "b", "c"]},  # non-int tiles
+        {"tiles": [1, 2, 3]},                      # missing key
+    ]}))
+    with pytest.warns(RuntimeWarning, match="3 malformed"):
+        assert dispatch.load_autotune_table(str(path)) == 1
+    akey = tuple(good["key"])
+    assert dispatch._AUTOTUNE.get(akey) == (8, 128, 256)
+    dispatch._AUTOTUNE.pop(akey, None)  # don't leak to other tests
+
+
+def test_autotune_save_then_load_roundtrip_atomic(tmp_path):
+    """save_autotune_table publishes via tmp+rename: the target is either
+    absent or a complete, loadable table."""
+    akey = ("lords", 5, 64, 96, "nf4", "float32", None)
+    dispatch._AUTOTUNE[akey] = (8, 64, 128)
+    try:
+        path = str(tmp_path / "tiles.json")
+        assert dispatch.save_autotune_table(path) == path
+        assert not [p for p in os.listdir(tmp_path) if ".tmp" in p]
+        dispatch._AUTOTUNE.pop(akey)
+        assert dispatch.load_autotune_table(path) >= 1
+        assert dispatch._AUTOTUNE[akey] == (8, 64, 128)
+    finally:
+        dispatch._AUTOTUNE.pop(akey, None)

@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
 	bench-attn serve-smoke serve-smoke-interpret serve-trace-smoke \
-	train-smoke-interpret chaos-smoke ptq-stream-smoke
+	train-smoke-interpret chaos-smoke ptq-stream-smoke lowbit-smoke
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -69,6 +69,17 @@ ptq-stream-smoke:  ## streaming-PTQ kill/resume/bitrot self-check + resume-contr
 	$(PY) -m repro.launch.ptq_stream --selfcheck --out /tmp/ptq_stream_sc \
 		--blocks 4 --d 64 --dff 96 --tokens 32 --steps 8 --rank 4
 	$(PY) -m pytest -x -q tests/test_ptq_stream.py
+
+# sub-4-bit frontier: a reduced accuracy-vs-bytes/token Pareto sweep
+# (self-asserting: true 3-bit packing undercuts 4-bit on bytes/token at
+# matched error-reduction, LoRDS leads LoftQ at 2-bit, allocator respects
+# its budget, nf3 serving config <= 0.40 bytes/weight incl. scales) plus
+# the sub-byte pack/parity suites with fused kernels in interpret mode
+lowbit-smoke:    ## reduced lowbit Pareto sweep + sub-byte parity suites -> BENCH_lowbit.json
+	$(PY) -m benchmarks.bench_lowbit --smoke
+	REPRO_KERNEL_BACKEND=interpret $(PY) -m pytest -x -q \
+		tests/test_quantize.py tests/test_allocate.py \
+		tests/test_kernels.py -k "subbyte or nf3 or pack"
 
 bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
 	$(PY) -m benchmarks.bench_train

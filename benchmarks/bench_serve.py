@@ -23,40 +23,60 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ShapeCfg, get_config, smoke_variant
-from repro.core.quantize import codes_per_byte
+from repro.core.quantize import pack_spec
 from repro.models import cache_init, model_init
 
 _SCALE_LEAVES = ("b", "a", "s_blk")  # fold into Ŵ on the dense path
 
 
-def _leaf_name(path) -> str:
-    return str(path[-1].key) if path else ""
+def _path_names(path) -> list[str]:
+    """All key names along a tree path (the leaf itself usually sits behind
+    a FlattenedIndexKey, so the meaningful name is an ancestor dict key)."""
+    return [str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", ""))))
+            for p in path]
 
 
 def weight_stream_bytes(cfg) -> dict:
     """Per-decode-token weight HBM traffic: packed (as stored: uint8 codes +
     low-rank/block scales) vs dense (bf16 Ŵ).  The embedding table is
     excluded (decode gathers one row); a separate head counts (it's a full
-    matmul every token)."""
-    pack = codes_per_byte(cfg.quant.codebook)
+    matmul every token).  Also breaks out the quantized linears alone:
+    ``q_codes`` / ``q_scales`` bytes over ``q_weights`` logical weights
+    (``bytes_per_weight`` = true storage incl. scales, e.g. nf3 = 0.375 +
+    factor overhead)."""
+    ps = pack_spec(cfg.quant.codebook)
     ptree = jax.eval_shape(
         lambda k: model_init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
     leaves = jax.tree_util.tree_flatten_with_path(ptree)[0]
-    packed = dense = 0
+    packed = dense = q_codes = q_scales = q_weights = 0
     for path, leaf in leaves:
-        name = _leaf_name(path)
+        names = _path_names(path)
         nbytes = leaf.size * leaf.dtype.itemsize
-        if any(str(p.key) == "embed" for p in path if hasattr(p, "key")):
+        if "embed" in names:
             continue
         if leaf.dtype == jnp.uint8:      # packed codes
             packed += nbytes
-            dense += leaf.size * pack * 2
-        elif name in _SCALE_LEAVES:      # rides along only on the fused path
-            packed += nbytes
+            q_codes += nbytes
+            # logical weight count from the packed bytes (true bit packing:
+            # e.g. 8 nf3 codes per 3 bytes)
+            n_logical = leaf.size // ps.group_bytes * ps.group_codes
+            q_weights += n_logical
+            dense += n_logical * 2
+        elif any(n in _SCALE_LEAVES for n in names):
+            packed += nbytes             # rides along only on the fused path
+            q_scales += nbytes
         else:                            # norms, head, dense convs, biases
             packed += nbytes
             dense += nbytes
-    return {"packed": packed, "dense": dense}
+    return {
+        "packed": packed,
+        "dense": dense,
+        "q_codes": q_codes,
+        "q_scales": q_scales,
+        "q_weights": q_weights,
+        "bytes_per_weight": ((q_codes + q_scales) / q_weights
+                             if q_weights else 0.0),
+    }
 
 
 def cache_bytes(cfg, batch: int, capacity: int) -> int:

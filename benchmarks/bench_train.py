@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs import ShapeCfg, get_config, smoke_variant
 from repro.core import peft
-from repro.core.quantize import codes_per_byte
+from repro.core.quantize import pack_spec
 from repro.data import SyntheticLM, make_batch_iterator
 from repro.kernels import dispatch
 from repro.launch.mesh import make_host_mesh
@@ -78,12 +78,12 @@ def backward_bytes(cfg, tokens: int) -> dict:
     (N, K) f32 temporary footprint: Ŵ + ∂S for dense, the (N/bn)·r·K
     partial-dA accumulator for fused (~r/bn of one weight matrix).
     """
-    pack = codes_per_byte(cfg.quant.codebook)
+    ps = pack_spec(cfg.quant.codebook)
     mtiles = -(-tokens // _BM)
     mode = cfg.quant.mode
     fused = dense = fused_peak = dense_peak = 0
     for n, k, r in _lords_linears(cfg):
-        q_b = n * k // pack
+        q_b = n * ps.packed_width(k)  # true packed bytes per row
         ba_b = 4 * (n * r + r * k)
         w_b = 4 * n * k
         fused += (mtiles + 1) * (q_b + ba_b)

@@ -12,6 +12,7 @@ NF4 for the first 50% of layers, NF2 for the rest, etc.).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +24,7 @@ __all__ = [
     "CODEBOOKS",
     "midpoints",
     "mixed_precision_schedule",
+    "realized_bits",
 ]
 
 
@@ -101,7 +103,12 @@ def codebook(name: str) -> jnp.ndarray:
 
 
 def codebook_bits(name: str) -> int:
-    return _BITS[name.lower()]
+    try:
+        return _BITS[name.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown codebook {name!r}; available: {', '.join(CODEBOOKS)}"
+        ) from None
 
 
 def midpoints(name: str) -> jnp.ndarray:
@@ -124,5 +131,21 @@ def mixed_precision_schedule(
     if not (b_lo <= avg_bits <= b_hi):
         raise ValueError(f"avg_bits {avg_bits} outside [{b_lo}, {b_hi}]")
     frac_hi = (avg_bits - b_lo) / (b_hi - b_lo)
-    n_hi = int(round(frac_hi * num_layers))
+    # pick n_hi minimizing |realized − requested| average bits: plain
+    # round(frac·n) can silently drift (e.g. 2.25-bit over 7 layers) and
+    # rounds half-to-even, biasing small layer counts
+    exact = frac_hi * num_layers
+    n_hi = min(
+        (int(math.floor(exact)), int(math.ceil(exact))),
+        key=lambda c: (abs((c * b_hi + (num_layers - c) * b_lo) / num_layers
+                           - avg_bits), c),
+    )
     return [hi] * n_hi + [lo] * (num_layers - n_hi)
+
+
+def realized_bits(schedule: list[str]) -> float:
+    """Average storage bits/weight a mixed-precision schedule actually
+    realizes (what ``bench_lowbit`` reports next to the requested width)."""
+    if not schedule:
+        return 0.0
+    return sum(codebook_bits(c) for c in schedule) / len(schedule)

@@ -3,17 +3,24 @@
 Storage format
 --------------
 Codes are indices into a codebook (``repro.core.lut``).  On disk / in HBM we
-pack them along the last axis:
+pack them along the last axis in groups of ``PackSpec.group_codes`` codes per
+``PackSpec.group_bytes`` bytes, little-endian within the group (code 0 in the
+lowest bits of byte 0):
 
-  * 4-bit codebooks (nf4/int4/fp4): 2 codes per uint8  (low nibble first)
-  * 2-bit codebooks (nf2/int2):     4 codes per uint8
-  * 3-bit / 8-bit:                  1 code  per uint8  (3-bit is only used in
-    mixed-precision schedules where layers are individually nf4 or nf2; an
-    nf3 codebook is available but stored unpacked)
+  * 8-bit codebooks (int8):          1 code  per byte   (1c/1B)
+  * 4-bit codebooks (nf4/int4/fp4):  2 codes per byte   (2c/1B, low nibble
+    first — unchanged from the historical nibble layout)
+  * 3-bit codebooks (nf3):           8 codes per 3 bytes (8c/3B, cross-byte:
+    the 8 codes form one 24-bit little-endian integer)
+  * 2-bit codebooks (nf2/int2):      4 codes per byte   (4c/1B)
 
-All functions are jit-friendly and differentiable where meaningful.
+For ``group_bytes == 1`` widths this is byte-identical to the historical
+layout; 3-bit is the only cross-byte group.  All functions are jit-friendly
+and differentiable where meaningful.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +29,8 @@ from repro.core import lut
 from repro.core.scaling import SCALE_EPS
 
 __all__ = [
+    "PackSpec",
+    "pack_spec",
     "nearest_code",
     "quantize_codes",
     "dequantize_codes",
@@ -33,6 +42,55 @@ __all__ = [
     "quantize_blockwise",
     "dequantize_blockwise",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Bit-packing group layout: ``group_codes`` codes per ``group_bytes``
+    bytes, little-endian (code i occupies bits [bits*i, bits*(i+1)) of the
+    group's ``8 * group_bytes``-bit integer)."""
+
+    bits: int
+    group_codes: int
+    group_bytes: int
+
+    def packed_width(self, m: int) -> int:
+        """Packed byte count for a logical last-axis width of ``m`` codes."""
+        if m % self.group_codes:
+            raise ValueError(
+                f"last dim {m} not divisible by pack group {self.group_codes}"
+                f" ({self.bits}-bit)")
+        return m // self.group_codes * self.group_bytes
+
+    def logical_width(self, mp: int) -> int:
+        """Logical code count for a packed last-axis width of ``mp`` bytes."""
+        if mp % self.group_bytes:
+            raise ValueError(
+                f"packed dim {mp} not divisible by group bytes "
+                f"{self.group_bytes} ({self.bits}-bit)")
+        return mp // self.group_bytes * self.group_codes
+
+
+# bits -> (group_codes, group_bytes).  group_bytes==1 entries are
+# byte-identical to the historical single-byte layout.
+_PACK_SPECS = {
+    8: PackSpec(8, 1, 1),
+    4: PackSpec(4, 2, 1),
+    3: PackSpec(3, 8, 3),
+    2: PackSpec(2, 4, 1),
+}
+
+
+def pack_spec(codebook_name: str) -> PackSpec:
+    """The storage :class:`PackSpec` for a codebook — the single source of
+    the bits->pack-layout map."""
+    bits = lut.codebook_bits(codebook_name)
+    spec = _PACK_SPECS.get(bits)
+    if spec is None:
+        raise ValueError(
+            f"no pack layout for {bits}-bit codebook {codebook_name!r}; "
+            f"supported bit widths: {sorted(_PACK_SPECS)}")
+    return spec
 
 
 def nearest_code(x: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
@@ -70,44 +128,61 @@ def dequantize_codes(
 
 
 def codes_per_byte(codebook_name: str) -> int:
-    """Pack factor per uint8 — the single source of the bits->pack map."""
-    bits = lut.codebook_bits(codebook_name)
-    return {8: 1, 4: 2, 3: 1, 2: 4}[bits]
+    """Whole codes per uint8 for single-byte pack groups.
+
+    Only defined when the pack group is one byte wide; 3-bit codes straddle
+    byte boundaries (8 codes / 3 bytes) and must go through :func:`pack_spec`
+    ``packed_width`` / ``logical_width`` instead.
+    """
+    spec = pack_spec(codebook_name)
+    if spec.group_bytes != 1:
+        raise ValueError(
+            f"{spec.bits}-bit codebook {codebook_name!r} packs "
+            f"{spec.group_codes} codes across {spec.group_bytes} bytes — "
+            "there is no whole codes-per-byte factor; use pack_spec()")
+    return spec.group_codes
 
 
 def packed_dim(m: int, codebook_name: str) -> int:
-    cpb = codes_per_byte(codebook_name)
-    if m % cpb:
-        raise ValueError(f"last dim {m} not divisible by pack factor {cpb}")
-    return m // cpb
+    """Packed byte count of a logical last-axis width ``m``."""
+    return pack_spec(codebook_name).packed_width(m)
 
 
 def pack_codes(codes: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
-    """Pack uint8 code indices along the last axis into uint8 bytes."""
-    cpb = codes_per_byte(codebook_name)
-    if cpb == 1:
+    """Pack uint8 code indices along the last axis into uint8 bytes.
+
+    Each group of ``group_codes`` codes is assembled into one little-endian
+    integer (code i at bits ``[bits*i, bits*(i+1))``) and emitted as
+    ``group_bytes`` little-endian bytes.  For single-byte groups this reduces
+    to the historical low-nibble-first layout.
+    """
+    ps = pack_spec(codebook_name)
+    if ps.group_codes == 1:
         return codes.astype(jnp.uint8)
-    bits = 8 // cpb
     *lead, m = codes.shape
-    if m % cpb:
-        raise ValueError(f"last dim {m} not divisible by pack factor {cpb}")
-    grp = codes.reshape(*lead, m // cpb, cpb).astype(jnp.uint32)
-    shifts = jnp.arange(cpb, dtype=jnp.uint32) * bits  # low nibble first
-    packed = jnp.sum(grp << shifts[None, :], axis=-1)
-    return packed.astype(jnp.uint8)
+    grp = codes.reshape(*lead, ps.packed_width(m) // ps.group_bytes,
+                        ps.group_codes).astype(jnp.uint32)
+    shifts = jnp.arange(ps.group_codes, dtype=jnp.uint32) * ps.bits
+    word = jnp.sum(grp << shifts, axis=-1)  # <= 24 bits, fits uint32
+    byte_shifts = jnp.arange(ps.group_bytes, dtype=jnp.uint32) * 8
+    packed = (word[..., None] >> byte_shifts) & jnp.uint32(0xFF)
+    return packed.reshape(*lead, -1).astype(jnp.uint8)
 
 
 def unpack_codes(packed: jnp.ndarray, codebook_name: str) -> jnp.ndarray:
     """Inverse of :func:`pack_codes`; returns uint8 code indices."""
-    cpb = codes_per_byte(codebook_name)
-    if cpb == 1:
+    ps = pack_spec(codebook_name)
+    if ps.group_codes == 1:
         return packed.astype(jnp.uint8)
-    bits = 8 // cpb
-    mask = jnp.uint8(2**bits - 1)
     *lead, mp = packed.shape
-    shifts = jnp.arange(cpb, dtype=jnp.uint32) * bits
-    grp = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
-    return grp.reshape(*lead, mp * cpb).astype(jnp.uint8)
+    grp = packed.reshape(*lead, ps.logical_width(mp) // ps.group_codes,
+                         ps.group_bytes).astype(jnp.uint32)
+    byte_shifts = jnp.arange(ps.group_bytes, dtype=jnp.uint32) * 8
+    word = jnp.sum(grp << byte_shifts, axis=-1)
+    shifts = jnp.arange(ps.group_codes, dtype=jnp.uint32) * ps.bits
+    mask = jnp.uint32(2**ps.bits - 1)
+    codes = (word[..., None] >> shifts) & mask
+    return codes.reshape(*lead, -1).astype(jnp.uint8)
 
 
 def fake_quant(w: jnp.ndarray, s: jnp.ndarray, codebook_name: str) -> jnp.ndarray:

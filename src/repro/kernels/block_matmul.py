@@ -23,14 +23,14 @@ from repro.kernels.lords_matmul import _lut_select, _unpack_tile
 __all__ = ["block_matmul_pallas"]
 
 
-def _kernel(x_ref, q_ref, s_ref, lut_ref, o_ref, *, pack, n_levels, reps):
+def _kernel(x_ref, q_ref, s_ref, lut_ref, o_ref, *, ps, n_levels, reps):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_tile(q_ref[...], pack)
+    codes = _unpack_tile(q_ref[...], ps)
     vals = _lut_select(codes, lut_ref, n_levels)
     s = s_ref[...]  # (bn, bk // block_size) or (bn, 1)
     bn, nblk = s.shape
@@ -65,12 +65,12 @@ def block_matmul_pallas(
 ) -> jnp.ndarray:
     m, kdim = x.shape
     n = q_packed.shape[0]
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    if m % bm or n % bn or kdim % bk:
+    if m % bm or n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(f"({m},{n},{kdim}) not divisible by ({bm},{bn},{bk})")
     if not (bk % block_size == 0 or block_size % bk == 0):
         raise ValueError(f"bk {bk} incompatible with block_size {block_size}")
@@ -84,13 +84,13 @@ def block_matmul_pallas(
         s_index = lambda i, j, k: (j, k // (block_size // bk))
 
     lut_arr = levels.reshape(1, -1).astype(jnp.float32)
-    kern = functools.partial(_kernel, pack=pack, n_levels=n_levels, reps=reps)
+    kern = functools.partial(_kernel, ps=ps, n_levels=n_levels, reps=reps)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bk // pack), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, ps.packed_width(bk)), lambda i, j, k: (j, k)),
             pl.BlockSpec((bn, s_cols), s_index),
             pl.BlockSpec((1, n_levels), lambda i, j, k: (0, 0)),
         ],

@@ -245,10 +245,10 @@ def _round_up(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 
 
-def _pack_of(codebook_name: str) -> int:
-    from repro.core.quantize import codes_per_byte
+def _spec_of(codebook_name: str):
+    from repro.core.quantize import pack_spec
 
-    return codes_per_byte(codebook_name)
+    return pack_spec(codebook_name)
 
 
 def _m_bucket(m: int) -> int:
@@ -376,15 +376,28 @@ def tile_for(method: str, m: int, n: int, k: int, codebook: str, dtype,
     hit = lookup_tiles(method, m, n, k, codebook, dtype, block_size)
     if hit is not None:
         return hit
-    pack = _pack_of(codebook)
+    ps = _spec_of(codebook)
     bm = min(128, _round_up(m, 8))
     bn = min(256, _round_up(n, 128))
-    bk = min(512, _round_up(k, 128 * pack))
+    if ps.group_bytes == 1:
+        # historical unit: bk a multiple of 128·codes-per-byte so the packed
+        # q tile width stays lane-aligned
+        bk = min(512, _round_up(k, 128 * ps.group_codes))
+    else:
+        # cross-byte groups (3-bit): prefer the smallest bk whose packed
+        # width is lane-aligned (1024 → 384 bytes = 3 lanes); for small K
+        # fall back to lane-aligned *logical* tiles with whole pack groups
+        # rather than padding K up to 1024
+        unit = ps.group_codes * (128 // math.gcd(ps.group_bytes, 128))
+        bk = min(max(512, unit),
+                 _round_up(k, math.lcm(ps.group_codes, 128)))
     if block_size is not None:
         if bk >= block_size:
             bk = max(block_size, (bk // block_size) * block_size)
         elif block_size % bk:
             bk = math.gcd(bk, block_size) or block_size
+        if bk % ps.group_codes:  # exotic block sizes: keep whole groups
+            bk = _round_up(bk, ps.group_codes)
     return bm, bn, bk
 
 
@@ -405,7 +418,7 @@ def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
         return ref.lords_matmul_ref(x2d, q_packed, b, a, codebook)
     m, k = x2d.shape
     n = q_packed.shape[0]
-    pack = _pack_of(codebook)
+    ps = _spec_of(codebook)
     bm, bn, bk = tiles or tile_for("lords", m, n, k, codebook, x2d.dtype)
     interp = backend == "interpret"
     if m <= DECODE_M_MAX:
@@ -414,7 +427,7 @@ def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
         np_, kp = _round_up(n, bn), _round_up(k, bk)
         y = lords_decode_pallas(
             _pad2(x2d, m, kp),
-            _pad2(q_packed, np_, kp // pack),
+            _pad2(q_packed, np_, ps.packed_width(kp)),
             _pad2(b, np_, b.shape[1]),
             _pad2(a, a.shape[0], kp),
             codebook,
@@ -425,7 +438,7 @@ def _lords_forward(x2d, q_packed, b, a, codebook, backend, tiles):
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
     y = lords_matmul_pallas(
         _pad2(x2d, mp, kp),
-        _pad2(q_packed, np_, kp // pack),
+        _pad2(q_packed, np_, ps.packed_width(kp)),
         _pad2(b, np_, b.shape[1]),
         _pad2(a, a.shape[0], kp),
         codebook,
@@ -445,14 +458,14 @@ def _lords_grads(g, x2d, q_packed, b, a, w, codebook, backend):
         return ref.lords_grads_ref(g, x2d, q_packed, b, a, codebook, w=w)
     m, k = x2d.shape
     n = q_packed.shape[0]
-    pack = _pack_of(codebook)
+    ps = _spec_of(codebook)
     # the `transposed` autotune key: one tile triple drives both bwd kernels
     bm, bn, bk = tile_for("lords_t", m, n, k, codebook, jnp.float32)
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
     interp = backend == "interpret"
     g32 = _pad2(g.astype(jnp.float32), mp, np_)
     x32 = _pad2(x2d.astype(jnp.float32), mp, kp)
-    qp = _pad2(q_packed, np_, kp // pack)
+    qp = _pad2(q_packed, np_, ps.packed_width(kp))
     bp = _pad2(b.astype(jnp.float32), np_, b.shape[1])
     ap = _pad2(a.astype(jnp.float32), a.shape[0], kp)
     dx = lords_matmul_t_pallas(
@@ -503,7 +516,7 @@ def _lords_qat_forward(x2d, w, b, a, codebook, backend, tiles):
         return ref.lords_matmul_ref(x2d, q_packed, b, a, codebook), q_packed
     m, k = x2d.shape
     n = w.shape[0]
-    pack = _pack_of(codebook)
+    ps = _spec_of(codebook)
     bm, bn, bk = tiles or tile_for("lords", m, n, k, codebook, x2d.dtype)
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
     interp = backend == "interpret"
@@ -516,7 +529,9 @@ def _lords_qat_forward(x2d, w, b, a, codebook, backend, tiles):
         _pad2(x2d, mp, kp), qp, bp, ap, codebook,
         bm=bm, bn=bn, bk=bk, interpret=interp,
     )
-    return y[:m, :n], qp[:n, : k // pack]
+    # slice codes back to the logical K, rounded up to whole pack groups —
+    # trailing codes past k (if any) decode under zero-padded activations
+    return y[:m, :n], qp[:n, : ps.packed_width(_round_up(k, ps.group_codes))]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
@@ -548,14 +563,14 @@ _lords_qat_qmatmul.defvjp(_lords_qat_fwd, _lords_qat_bwd)
 # ---------------------------------------------------------------------------
 
 
-def _block_padded(q_packed, s_blk, m, n, k, block_size, bm, bn, bk, pack):
+def _block_padded(q_packed, s_blk, m, n, k, block_size, bm, bn, bk, ps):
     """Shared fwd/bwd block-operand padding: K rounds to lcm(bk, block_size)
     so tiles and blocks stay commensurate, padded scales are 1.0 (never the
     eps clamp), padded rows/cols contribute zeros.  One helper so the
     forward and its VJP can never pad differently."""
     kmult = bk * block_size // math.gcd(bk, block_size)  # lcm: tiles + blocks
     mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, kmult)
-    qp = _pad2(q_packed, np_, kp // pack)
+    qp = _pad2(q_packed, np_, ps.packed_width(kp))
     s_pad = jnp.pad(
         s_blk,
         ((0, np_ - n), (0, kp // block_size - s_blk.shape[1])),
@@ -569,11 +584,11 @@ def _block_forward(x2d, q_packed, s_blk, block_size, codebook, backend, tiles):
         return ref.block_matmul_ref(x2d, q_packed, s_blk, block_size, codebook)
     m, k = x2d.shape
     n = q_packed.shape[0]
-    pack = _pack_of(codebook)
+    ps = _spec_of(codebook)
     bm, bn, bk = tiles or tile_for(
         "blockwise", m, n, k, codebook, x2d.dtype, block_size=block_size)
     qp, s_pad, mp, np_, kp = _block_padded(
-        q_packed, s_blk, m, n, k, block_size, bm, bn, bk, pack)
+        q_packed, s_blk, m, n, k, block_size, bm, bn, bk, ps)
     y = block_matmul_pallas(
         _pad2(x2d, mp, kp),
         qp,
@@ -606,12 +621,12 @@ def _block_grads(g, x2d, q_packed, s_blk, block_size, codebook, backend):
                                    codebook)
     m, k = x2d.shape
     n = q_packed.shape[0]
-    pack = _pack_of(codebook)
+    ps = _spec_of(codebook)
     bm, bn, bk = tile_for("blockwise_t", m, n, k, codebook, jnp.float32,
                           block_size=block_size)
     qp, s_pad, mp, np_, kp = _block_padded(
         q_packed, s_blk.astype(jnp.float32), m, n, k, block_size,
-        bm, bn, bk, pack)
+        bm, bn, bk, ps)
     interp = backend == "interpret"
     g32 = _pad2(g.astype(jnp.float32), mp, np_)
     x32 = _pad2(x2d.astype(jnp.float32), mp, kp)

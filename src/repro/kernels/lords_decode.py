@@ -54,7 +54,7 @@ __all__ = ["lords_decode_pallas", "DECODE_M_MAX"]
 DECODE_M_MAX = 8  # one f32 sublane tile: the M-bucket this kernel serves
 
 
-def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
+def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, ps, n_levels,
             eps, bk):
     k = pl.program_id(1)
 
@@ -63,7 +63,7 @@ def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     ks = pl.multiple_of(k * bk, bk)  # live K columns of the resident x/a
-    codes = _unpack_tile(q_ref[...], pack)                    # (bn, bk)
+    codes = _unpack_tile(q_ref[...], ps)                      # (bn, bk)
     vals = _lut_select(codes, lut_ref, n_levels)              # (bn, bk) f32
     s = jax.lax.dot_general(
         bt_ref[...], a_ref[:, pl.ds(ks, bk)], (((0,), (0,)), ((), ())),
@@ -103,13 +103,13 @@ def lords_decode_pallas(
             f"decode kernel serves M <= {DECODE_M_MAX}, got M={m}; "
             "use lords_matmul_pallas for prefill-shaped inputs"
         )
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bn = min(bn, n)
     bk = min(bk, kdim)
-    if n % bn or kdim % bk or bk % pack:
+    if n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(
             f"shape (N={n}, K={kdim}) not divisible by blocks ({bn},{bk})"
         )
@@ -120,7 +120,7 @@ def lords_decode_pallas(
     bt = b.T  # (r, N)
     lut_arr = levels.reshape(1, -1).astype(jnp.float32)
     kern = functools.partial(
-        _kernel, pack=pack, n_levels=n_levels, eps=SCALE_EPS, bk=bk
+        _kernel, ps=ps, n_levels=n_levels, eps=SCALE_EPS, bk=bk
     )
     y = pl.pallas_call(
         kern,
@@ -128,7 +128,7 @@ def lords_decode_pallas(
         in_specs=[
             # x and a: constant index map = fetched once, VMEM-resident
             pl.BlockSpec((DECODE_M_MAX, kdim), lambda j, k: (0, 0)),
-            pl.BlockSpec((bn, bk // pack), lambda j, k: (j, k)),
+            pl.BlockSpec((bn, ps.packed_width(bk)), lambda j, k: (j, k)),
             pl.BlockSpec((r, bn), lambda j, k: (0, j)),
             pl.BlockSpec((r, kdim), lambda j, k: (0, 0)),
             pl.BlockSpec((1, n_levels), lambda j, k: (0, 0)),

@@ -57,7 +57,7 @@ __all__ = ["lords_grad_pallas", "block_grad_pallas"]
 
 
 def _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
-          dap_ref, dw_ref, acc_ref, *, pack, n_levels, eps):
+          dap_ref, dw_ref, acc_ref, *, ps, n_levels, eps):
     k, m = pl.program_id(1), pl.program_id(2)
     nm = pl.num_programs(2)
 
@@ -76,7 +76,7 @@ def _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
 
     @pl.when(m == nm - 1)
     def _reduce():
-        codes = _unpack_tile(q_ref[...], pack)
+        codes = _unpack_tile(q_ref[...], ps)
         vals = _lut_select(codes, lut_ref, n_levels)           # (bn, bk) f32
         s_raw = jax.lax.dot_general(
             bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
@@ -103,15 +103,15 @@ def _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
 
 
 def _kernel_frozen(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, dbt_ref,
-                   dap_ref, acc_ref, *, pack, n_levels, eps):
+                   dap_ref, acc_ref, *, ps, n_levels, eps):
     _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, None, dbt_ref,
-          dap_ref, None, acc_ref, pack=pack, n_levels=n_levels, eps=eps)
+          dap_ref, None, acc_ref, ps=ps, n_levels=n_levels, eps=eps)
 
 
 def _kernel_qat(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
-                dap_ref, dw_ref, acc_ref, *, pack, n_levels, eps):
+                dap_ref, dw_ref, acc_ref, *, ps, n_levels, eps):
     _body(x_ref, g_ref, q_ref, bt_ref, a_ref, lut_ref, w_ref, dbt_ref,
-          dap_ref, dw_ref, acc_ref, pack=pack, n_levels=n_levels, eps=eps)
+          dap_ref, dw_ref, acc_ref, ps=ps, n_levels=n_levels, eps=eps)
 
 
 @functools.partial(
@@ -138,14 +138,14 @@ def lords_grad_pallas(
 
     m, kdim = x.shape
     n, r = b.shape
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, kdim)
-    if m % bm or n % bn or kdim % bk or bk % pack:
+    if m % bm or n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(
             f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
         )
@@ -156,12 +156,12 @@ def lords_grad_pallas(
     qat = w is not None
     kern = functools.partial(
         _kernel_qat if qat else _kernel_frozen,
-        pack=pack, n_levels=n_levels, eps=SCALE_EPS,
+        ps=ps, n_levels=n_levels, eps=SCALE_EPS,
     )
     in_specs = [
         pl.BlockSpec((bm, bk), lambda j, k, m: (m, k)),        # x
         pl.BlockSpec((bm, bn), lambda j, k, m: (m, j)),        # g
-        pl.BlockSpec((bn, bk // pack), lambda j, k, m: (j, k)),  # q
+        pl.BlockSpec((bn, ps.packed_width(bk)), lambda j, k, m: (j, k)),  # q
         pl.BlockSpec((r, bn), lambda j, k, m: (0, j)),         # bT
         pl.BlockSpec((r, bk), lambda j, k, m: (0, k)),         # a
         pl.BlockSpec((1, n_levels), lambda j, k, m: (0, 0)),   # lut
@@ -196,7 +196,7 @@ def lords_grad_pallas(
 # ---------------------------------------------------------------------------
 
 
-def _block_body(x_ref, g_ref, q_ref, lut_ref, o_ref, acc_ref, *, pack,
+def _block_body(x_ref, g_ref, q_ref, lut_ref, o_ref, acc_ref, *, ps,
                 n_levels, group, blocks_per_tile):
     k, m = pl.program_id(1), pl.program_id(2)
     nm = pl.num_programs(2)
@@ -216,7 +216,7 @@ def _block_body(x_ref, g_ref, q_ref, lut_ref, o_ref, acc_ref, *, pack,
 
     @pl.when(m == nm - 1)
     def _reduce():
-        codes = _unpack_tile(q_ref[...], pack)
+        codes = _unpack_tile(q_ref[...], ps)
         vals = _lut_select(codes, lut_ref, n_levels)
         ds = acc_ref[...] * vals                               # (bn, bk)
         bn, bk = ds.shape
@@ -244,12 +244,12 @@ def block_grad_pallas(
     """∂s_blk (N, K/block_size) for the block-wise dequant matmul."""
     m, kdim = x.shape
     n = q_packed.shape[0]
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    if m % bm or n % bn or kdim % bk or bk % pack:
+    if m % bm or n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(
             f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
         )
@@ -269,7 +269,7 @@ def block_grad_pallas(
         s_index = lambda j, k, m: (j, k // group)
 
     lut_arr = levels.reshape(1, -1).astype(jnp.float32)
-    kern = functools.partial(_block_body, pack=pack, n_levels=n_levels,
+    kern = functools.partial(_block_body, ps=ps, n_levels=n_levels,
                              group=group, blocks_per_tile=blocks_per_tile)
     return pl.pallas_call(
         kern,
@@ -277,7 +277,7 @@ def block_grad_pallas(
         in_specs=[
             pl.BlockSpec((bm, bk), lambda j, k, m: (m, k)),
             pl.BlockSpec((bm, bn), lambda j, k, m: (m, j)),
-            pl.BlockSpec((bn, bk // pack), lambda j, k, m: (j, k)),
+            pl.BlockSpec((bn, ps.packed_width(bk)), lambda j, k, m: (j, k)),
             pl.BlockSpec((1, n_levels), lambda j, k, m: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bn, s_cols), s_index),

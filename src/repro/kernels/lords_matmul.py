@@ -2,7 +2,8 @@
 
 Computes  y[M, N] = x[M, K] @ Ŵᵀ,   Ŵ[N, K] = lut[Q] ⊙ (B·A)
 
-with Q stored packed (2×4-bit or 4×2-bit codes per uint8) in HBM.  This is
+with Q stored packed (2×4-bit / 4×2-bit codes per uint8, or 8×3-bit codes
+per 3 bytes) in HBM.  This is
 the TPU analogue of the paper's Triton kernel (§4.4): the low-rank scale
 product rides along with each weight tile, so dequantization adds no extra
 HBM traffic beyond the packed codes themselves — the entire reason LoRDS
@@ -12,7 +13,7 @@ GEMM.
 Tiling (all VMEM):
   grid = (M/bm, N/bn, K/bk), K innermost for accumulation
     x tile   (bm, bk)            input activations
-    q tile   (bn, bk/pack) uint8 packed codes
+    q tile   (bn, packed(bk)) uint8 packed codes (bk·bits/8 bytes)
     bT tile  (r, bn)             scale factor B, transposed so the tiny rank
     a tile   (r, bk)             dim sits in sublanes (lane dim stays 128-al.)
     lut      (1, L) f32          codebook levels
@@ -41,16 +42,26 @@ from repro.core.scaling import clamp_scale
 __all__ = ["lords_matmul_pallas"]
 
 
-def _unpack_tile(q, pack: int):
-    """(bn, bkp) uint8 -> (bn, bkp*pack) int32 codes, low bits first."""
-    if pack == 1:
+def _unpack_tile(q, ps: quantize_mod.PackSpec):
+    """(bn, bkp) uint8 -> (bn, logical(bkp)) int32 codes, little-endian.
+
+    Cross-byte groups (3-bit: 8 codes / 3 bytes) first assemble each group's
+    bytes into one int32 word, then shift/mask out the codes — pure VPU
+    bit work feeding the one-hot×LUT MXU gather, no dense unpack in HBM.
+    """
+    if ps.group_codes == 1:
         return q.astype(jnp.int32)
-    bits = 8 // pack
-    mask = (1 << bits) - 1
-    qi = q.astype(jnp.int32)
-    parts = [(qi >> (bits * i)) & mask for i in range(pack)]
-    stacked = jnp.stack(parts, axis=-1)  # (bn, bkp, pack)
-    return stacked.reshape(q.shape[0], q.shape[1] * pack)
+    bn, bkp = q.shape
+    word = q.astype(jnp.int32)
+    if ps.group_bytes > 1:
+        grp = word.reshape(bn, bkp // ps.group_bytes, ps.group_bytes)
+        word = grp[:, :, 0]
+        for j in range(1, ps.group_bytes):
+            word |= grp[:, :, j] << (8 * j)
+    mask = (1 << ps.bits) - 1
+    parts = [(word >> (ps.bits * i)) & mask for i in range(ps.group_codes)]
+    stacked = jnp.stack(parts, axis=-1)  # (bn, groups, group_codes)
+    return stacked.reshape(bn, ps.logical_width(bkp))
 
 
 # One-hot tensors above this LUT width would dwarf the codes tile in VMEM
@@ -98,7 +109,7 @@ def _lut_select(codes, lut_ref, n_levels: int):
     return jnp.concatenate(slabs, axis=-1)
 
 
-def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
+def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, ps, n_levels,
             eps):
     k = pl.program_id(2)
 
@@ -106,7 +117,7 @@ def _kernel(x_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_tile(q_ref[...], pack)                    # (bn, bk)
+    codes = _unpack_tile(q_ref[...], ps)                      # (bn, bk)
     vals = _lut_select(codes, lut_ref, n_levels)              # (bn, bk) f32
     # low-rank scale tile: S = Bᵀᵀ·A  -> (bn, bk), r-contraction on the MXU
     s = jax.lax.dot_general(
@@ -143,14 +154,14 @@ def lords_matmul_pallas(
 
     m, kdim = x.shape
     n, r = b.shape
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, kdim)
-    if m % bm or n % bn or kdim % bk or bk % pack:
+    if m % bm or n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(
             f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
         )
@@ -160,14 +171,14 @@ def lords_matmul_pallas(
     lut_arr = levels.reshape(1, -1).astype(jnp.float32)
 
     kern = functools.partial(
-        _kernel, pack=pack, n_levels=n_levels, eps=SCALE_EPS
+        _kernel, ps=ps, n_levels=n_levels, eps=SCALE_EPS
     )
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bk // pack), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, ps.packed_width(bk)), lambda i, j, k: (j, k)),
             pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((r, bk), lambda i, j, k: (0, k)),
             pl.BlockSpec((1, n_levels), lambda i, j, k: (0, 0)),

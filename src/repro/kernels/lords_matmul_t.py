@@ -46,7 +46,7 @@ from repro.kernels.lords_matmul import _lut_select, _unpack_tile
 __all__ = ["lords_matmul_t_pallas", "block_matmul_t_pallas"]
 
 
-def _kernel(g_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
+def _kernel(g_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, ps, n_levels,
             eps):
     nn = pl.program_id(2)
 
@@ -54,7 +54,7 @@ def _kernel(g_ref, q_ref, bt_ref, a_ref, lut_ref, o_ref, *, pack, n_levels,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_tile(q_ref[...], pack)                    # (bn, bk)
+    codes = _unpack_tile(q_ref[...], ps)                      # (bn, bk)
     vals = _lut_select(codes, lut_ref, n_levels)              # (bn, bk) f32
     s = jax.lax.dot_general(
         bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
@@ -90,14 +90,14 @@ def lords_matmul_t_pallas(
     m, n = g.shape
     _, r = b.shape
     kdim = a.shape[1]
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bm = min(bm, m)
     bn = min(bn, n)
     bk = min(bk, kdim)
-    if m % bm or n % bn or kdim % bk or bk % pack:
+    if m % bm or n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(
             f"shape ({m},{n},{kdim}) not divisible by blocks ({bm},{bn},{bk})"
         )
@@ -106,14 +106,14 @@ def lords_matmul_t_pallas(
     bt = b.T  # (r, N)
     lut_arr = levels.reshape(1, -1).astype(jnp.float32)
     kern = functools.partial(
-        _kernel, pack=pack, n_levels=n_levels, eps=SCALE_EPS
+        _kernel, ps=ps, n_levels=n_levels, eps=SCALE_EPS
     )
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, k, nn: (i, nn)),
-            pl.BlockSpec((bn, bk // pack), lambda i, k, nn: (nn, k)),
+            pl.BlockSpec((bn, ps.packed_width(bk)), lambda i, k, nn: (nn, k)),
             pl.BlockSpec((r, bn), lambda i, k, nn: (0, nn)),
             pl.BlockSpec((r, bk), lambda i, k, nn: (0, k)),
             pl.BlockSpec((1, n_levels), lambda i, k, nn: (0, 0)),
@@ -129,7 +129,7 @@ def lords_matmul_t_pallas(
 # ---------------------------------------------------------------------------
 
 
-def _block_kernel(g_ref, q_ref, s_ref, lut_ref, o_ref, *, pack, n_levels,
+def _block_kernel(g_ref, q_ref, s_ref, lut_ref, o_ref, *, ps, n_levels,
                   reps):
     nn = pl.program_id(2)
 
@@ -137,7 +137,7 @@ def _block_kernel(g_ref, q_ref, s_ref, lut_ref, o_ref, *, pack, n_levels,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_tile(q_ref[...], pack)
+    codes = _unpack_tile(q_ref[...], ps)
     vals = _lut_select(codes, lut_ref, n_levels)
     s = s_ref[...]  # (bn, bk // block_size) or (bn, 1)
     bn, nblk = s.shape
@@ -171,13 +171,13 @@ def block_matmul_t_pallas(
     interpret: bool = False,
 ) -> jnp.ndarray:
     m, n = g.shape
-    pack = quantize_mod.codes_per_byte(codebook_name)
-    kdim = q_packed.shape[1] * pack
+    ps = quantize_mod.pack_spec(codebook_name)
+    kdim = ps.logical_width(q_packed.shape[1])
     levels = lut_mod.codebook(codebook_name)
     n_levels = levels.shape[0]
 
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
-    if m % bm or n % bn or kdim % bk:
+    if m % bm or n % bn or kdim % bk or bk % ps.group_codes:
         raise ValueError(f"({m},{n},{kdim}) not divisible by ({bm},{bn},{bk})")
     if not (bk % block_size == 0 or block_size % bk == 0):
         raise ValueError(f"bk {bk} incompatible with block_size {block_size}")
@@ -191,14 +191,14 @@ def block_matmul_t_pallas(
         s_index = lambda i, k, nn: (nn, k // (block_size // bk))
 
     lut_arr = levels.reshape(1, -1).astype(jnp.float32)
-    kern = functools.partial(_block_kernel, pack=pack, n_levels=n_levels,
+    kern = functools.partial(_block_kernel, ps=ps, n_levels=n_levels,
                              reps=reps)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, k, nn: (i, nn)),
-            pl.BlockSpec((bn, bk // pack), lambda i, k, nn: (nn, k)),
+            pl.BlockSpec((bn, ps.packed_width(bk)), lambda i, k, nn: (nn, k)),
             pl.BlockSpec((bn, s_cols), s_index),
             pl.BlockSpec((1, n_levels), lambda i, k, nn: (0, 0)),
         ],

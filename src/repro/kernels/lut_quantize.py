@@ -3,13 +3,18 @@
     codes[i, j] = argmin_{v ∈ L} (S_ij · v − W_ij)²,   S = B·A
                 = nearest-level( W_ij / S_ij )          (S² factors out)
 
-emitted *packed* (2×4-bit / 4×2-bit per uint8).  Used inside the PTQ
-refinement loop and the QAT fake-quant forward, where it fuses the S = B·A
-product, the division, the midpoint compare tree and the nibble packing into
-one VMEM pass over W.
+emitted *packed* (2×4-bit / 4×2-bit per uint8, 8×3-bit per 3 bytes).  Used
+inside the PTQ refinement loop and the QAT fake-quant forward, where it fuses
+the S = B·A product, the division, the midpoint compare tree and the bit
+packing into one VMEM pass over W.
 
 Tiling: grid = (N/bn, K/bk); W tile (bn, bk); bT (r, bn); a (r, bk);
-midpoints (1, L-1); out tile (bn, bk/pack) uint8.
+midpoints (1, L-1); out tile (bn, packed(bk)) uint8.
+
+Non-tile-divisible (n, kdim) are zero-padded up to the tile grid (mirroring
+``dispatch.qmatmul``) and the output sliced back; the trailing partial pack
+group, if kdim is not a multiple of ``group_codes``, keeps its deterministic
+padded codes (callers that slice by logical width never read them).
 
 The nearest-level search is a static compare tree over the L−1 midpoints
 (code = Σ_l [ratio > mid_l]) — branch-free, VPU-only, no dynamic gather.
@@ -29,7 +34,11 @@ from repro.core.scaling import clamp_scale
 __all__ = ["lut_quantize_pallas"]
 
 
-def _kernel(w_ref, bt_ref, a_ref, mids_ref, o_ref, *, pack, n_mids, eps):
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _kernel(w_ref, bt_ref, a_ref, mids_ref, o_ref, *, ps, n_mids, eps):
     s = jax.lax.dot_general(
         bt_ref[...], a_ref[...], (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -39,16 +48,20 @@ def _kernel(w_ref, bt_ref, a_ref, mids_ref, o_ref, *, pack, n_mids, eps):
     codes = jnp.zeros(ratio.shape, jnp.int32)
     for l in range(n_mids):
         codes += (ratio > mids_ref[0, l]).astype(jnp.int32)
-    if pack == 1:
+    if ps.group_codes == 1:
         o_ref[...] = codes.astype(jnp.uint8)
         return
-    bits = 8 // pack
     bn, bk = codes.shape
-    grp = codes.reshape(bn, bk // pack, pack)
-    packed = jnp.zeros((bn, bk // pack), jnp.int32)
-    for i in range(pack):
-        packed |= grp[:, :, i] << (bits * i)
-    o_ref[...] = packed.astype(jnp.uint8)
+    grp = codes.reshape(bn, bk // ps.group_codes, ps.group_codes)
+    word = jnp.zeros((bn, bk // ps.group_codes), jnp.int32)
+    for i in range(ps.group_codes):
+        word |= grp[:, :, i] << (ps.bits * i)
+    if ps.group_bytes == 1:
+        o_ref[...] = word.astype(jnp.uint8)
+        return
+    parts = [(word >> (8 * j)) & 0xFF for j in range(ps.group_bytes)]
+    stacked = jnp.stack(parts, axis=-1)  # (bn, groups, group_bytes)
+    o_ref[...] = stacked.reshape(bn, -1).astype(jnp.uint8)
 
 
 @functools.partial(
@@ -68,18 +81,24 @@ def lut_quantize_pallas(
 
     n, kdim = w.shape
     _, r = b.shape
-    pack = quantize_mod.codes_per_byte(codebook_name)
+    ps = quantize_mod.pack_spec(codebook_name)
     mids = lut_mod.midpoints(codebook_name).reshape(1, -1).astype(jnp.float32)
     n_mids = mids.shape[1]
 
     bn = min(bn, n)
-    bk = min(bk, kdim)
-    if n % bn or kdim % bk or bk % pack:
-        raise ValueError(f"({n},{kdim}) not divisible by ({bn},{bk})")
-    grid = (n // bn, kdim // bk)
+    # bk % group_codes must hold on the (possibly padded) tile so every tile
+    # packs whole groups
+    bk = _round_up(min(bk, kdim), ps.group_codes)
+    np_ = _round_up(n, bn)
+    kp = _round_up(kdim, bk)
+    if (np_, kp) != (n, kdim):
+        w = jnp.pad(w, ((0, np_ - n), (0, kp - kdim)))
+        b = jnp.pad(b, ((0, np_ - n), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, kp - kdim)))
+    grid = (np_ // bn, kp // bk)
 
-    kern = functools.partial(_kernel, pack=pack, n_mids=n_mids, eps=SCALE_EPS)
-    return pl.pallas_call(
+    kern = functools.partial(_kernel, ps=ps, n_mids=n_mids, eps=SCALE_EPS)
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -88,9 +107,12 @@ def lut_quantize_pallas(
             pl.BlockSpec((r, bk), lambda i, k: (0, k)),
             pl.BlockSpec((1, n_mids), lambda i, k: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bn, bk // pack), lambda i, k: (i, k)),
+        out_specs=pl.BlockSpec(
+            (bn, ps.packed_width(bk)), lambda i, k: (i, k)
+        ),
         out_shape=jax.ShapeDtypeStruct(
-            (n, kdim // pack), jnp.uint8
+            (np_, ps.packed_width(kp)), jnp.uint8
         ),
         interpret=interpret,
     )(w, b.T, a, mids)
+    return out[:n, : ps.packed_width(_round_up(kdim, ps.group_codes))]

@@ -186,9 +186,9 @@ def model_flops(values, cfg, tokens: int, training: bool) -> float:
     """6·N·D (train) or 2·N·D (forward) with MoE active-only counting."""
     import jax
 
-    from repro.core.quantize import codes_per_byte
+    from repro.core.quantize import pack_spec
 
-    pack = codes_per_byte(cfg.quant.codebook)
+    ps = pack_spec(cfg.quant.codebook)
     flat = jax.tree_util.tree_flatten_with_path(values)[0]
     n_active = 0.0
     moe_frac = (cfg.moe.top_k / cfg.moe.num_experts) if cfg.moe else 1.0
@@ -196,7 +196,8 @@ def model_flops(values, cfg, tokens: int, training: bool) -> float:
         keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
         name = keys[-1] if keys else ""
         if name == "q":
-            n = leaf.size * pack
+            # logical weight count from the packed byte count
+            n = leaf.size // ps.group_bytes * ps.group_codes
         elif name in ("w", "head", "router", "dt_proj", "lora_a", "lora_b", "r"):
             n = leaf.size
         else:

@@ -237,6 +237,15 @@ def main(argv=None):
                     choices=["pallas", "interpret", "ref", "dense"],
                     help="quantized-matmul dispatch backend "
                          "(default: fused pallas on TPU, ref elsewhere)")
+    ap.add_argument("--codebook", default=None,
+                    choices=["nf4", "nf3", "nf2", "int8", "int4", "fp4"],
+                    help="override the weight codebook (nf3 = the true "
+                         "3-bit serving config: 8 codes packed into 3 "
+                         "bytes, unpacked in-kernel)")
+    ap.add_argument("--scale-dtype", default=None, choices=["f32", "bf16"],
+                    help="storage dtype of the LoRDS B/A factors (default: "
+                         "config; sub-4-bit codebooks default to bf16 so "
+                         "total storage stays under 0.5 bytes/weight)")
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="host mesh shape, e.g. 2x4 (needs that many visible "
                          "devices; on CPU force them via XLA_FLAGS="
@@ -246,6 +255,21 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if args.codebook or args.scale_dtype:
+        from repro.core import lut
+
+        q = cfg.quant
+        if args.codebook:
+            q = q.with_(codebook=args.codebook)
+        if args.scale_dtype:
+            q = q.with_(scale_dtype={"f32": jnp.float32,
+                                     "bf16": jnp.bfloat16}[args.scale_dtype])
+        elif lut.codebook_bits(q.codebook) < 4:
+            # sub-4-bit point of the storage Pareto: bf16 factors keep the
+            # B/A overhead below the packing win (nf3 ≈ 0.39 bytes/weight
+            # incl. scales vs 0.41 with f32 factors)
+            q = q.with_(scale_dtype=jnp.bfloat16)
+        cfg = cfg.with_(quant=q)
     mesh = None
     if args.mesh:
         data, model = (int(v) for v in args.mesh.lower().split("x"))

@@ -82,6 +82,10 @@ class StreamPlan:
     block_size: int = 32
     rank: int | None = None
     extra_rank: int = 0
+    # per-matrix mixed-precision overrides from the sensitivity allocator
+    # (core.allocate): ((matrix_name, codebook, rank), ...).  Overrides
+    # determine the artifact bytes, so they are fingerprinted.
+    overrides: tuple = ()
     refine_steps: int = 40
     lr: float = 0.05
     seed: int = 0
@@ -94,14 +98,41 @@ class StreamPlan:
     def __post_init__(self):
         if self.pretransform not in ("none", "smooth", "smoothrot"):
             raise ValueError(f"unknown pretransform {self.pretransform!r}")
+        object.__setattr__(
+            self, "overrides",
+            tuple((str(n), str(cb), None if r is None else int(r))
+                  for n, cb, r in self.overrides))
+
+    def codebook_for(self, name: str) -> str:
+        for n, cb, _ in self.overrides:
+            if n == name:
+                return cb
+        return self.codebook
+
+    def rank_for(self, name: str):
+        for n, _, r in self.overrides:
+            if n == name:
+                # a None rank in an override means "codebook only": the
+                # matrix keeps the plan-wide rank policy
+                return self.rank if r is None else r
+        return self.rank
+
+    def with_allocation(self, alloc) -> "StreamPlan":
+        """Fold a :class:`repro.core.allocate.AllocPlan` into per-matrix
+        overrides (keyed by the allocator's layer names)."""
+        ov = tuple((l.name, l.codebook, l.rank) for l in alloc.layers)
+        return dataclasses.replace(self, overrides=ov)
 
     def fingerprint(self) -> dict:
-        return {"codebook": self.codebook, "block_size": self.block_size,
-                "rank": self.rank, "extra_rank": self.extra_rank,
-                "refine_steps": self.refine_steps, "lr": self.lr,
-                "seed": self.seed, "pretransform": self.pretransform,
-                "smooth_alpha": self.smooth_alpha,
-                "act_weighted": self.act_weighted}
+        fp = {"codebook": self.codebook, "block_size": self.block_size,
+              "rank": self.rank, "extra_rank": self.extra_rank,
+              "refine_steps": self.refine_steps, "lr": self.lr,
+              "seed": self.seed, "pretransform": self.pretransform,
+              "smooth_alpha": self.smooth_alpha,
+              "act_weighted": self.act_weighted}
+        if self.overrides:  # absent for uniform plans: fingerprint-stable
+            fp["overrides"] = [list(o) for o in self.overrides]
+        return fp
 
 
 def _block_seed(plan_seed: int, block: int) -> int:
@@ -183,12 +214,14 @@ def _col_weight(xm: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean(jnp.asarray(xm, jnp.float32) ** 2, axis=0) + 1e-6
 
 
-def _quantize_matrix(w, xm, plan: StreamPlan, seed: int) -> dict:
+def _quantize_matrix(w, xm, plan: StreamPlan, seed: int,
+                     name: str = "") -> dict:
     """One matrix through Alg. 1 under the plan's pre-transform; returns the
     flat artifact arrays ({q, b, a[, c, signs]})."""
     w = jnp.asarray(w, jnp.float32)
-    kw = dict(codebook_name=plan.codebook, block_size=plan.block_size,
-              rank=plan.rank, extra_rank=plan.extra_rank,
+    kw = dict(codebook_name=plan.codebook_for(name),
+              block_size=plan.block_size,
+              rank=plan.rank_for(name), extra_rank=plan.extra_rank,
               steps=plan.refine_steps, lr=plan.lr)
     if plan.pretransform == "smoothrot":
         c = smooth_scales(w, xm, plan.smooth_alpha)
@@ -209,11 +242,13 @@ def _quantize_matrix(w, xm, plan: StreamPlan, seed: int) -> dict:
     return {"q": res.q_packed, "b": res.b, "a": res.a}
 
 
-def _dequant_matrix(mats: dict, plan: StreamPlan) -> np.ndarray:
+def _dequant_matrix(mats: dict, plan: StreamPlan,
+                    name: str = "") -> np.ndarray:
     """Ŵ in the original basis from one matrix's artifact arrays."""
-    codes = unpack_codes(jnp.asarray(mats["q"]), plan.codebook)
+    cb = plan.codebook_for(name)
+    codes = unpack_codes(jnp.asarray(mats["q"]), cb)
     s = scale_matrix(jnp.asarray(mats["b"]), jnp.asarray(mats["a"]))
-    w_hat = dequantize_codes(codes, s, plan.codebook)
+    w_hat = dequantize_codes(codes, s, cb)
     if "c" in mats:  # smoothrot: rotate back, un-smooth
         signs = jnp.asarray(mats["signs"], jnp.float32)
         c = jnp.asarray(mats["c"], jnp.float32)
@@ -233,10 +268,11 @@ def _quantize_block(weights: dict, calib: dict, plan: StreamPlan,
                if budget is not None else contextlib.nullcontext())
         with ctx:
             mats = _quantize_matrix(w, calib[name], plan,
-                                    _mat_seed(plan.seed, block, name))
+                                    _mat_seed(plan.seed, block, name),
+                                    name=name)
         for k, v in mats.items():
             flat[f"{name}/{k}"] = np.asarray(v)
-        w_hat[name] = _dequant_matrix(mats, plan)
+        w_hat[name] = _dequant_matrix(mats, plan, name=name)
         if budget is not None:
             budget.charge(f"block{block}/artifact",
                           sum(v.nbytes for v in mats.values()))
@@ -278,7 +314,7 @@ def _try_reuse(out_dir: str, entry: dict, plan: StreamPlan, source, x,
     i = entry["block"]
     w_hat = {}
     for name, m in mats.items():
-        w_hat[name] = _dequant_matrix(m, plan)
+        w_hat[name] = _dequant_matrix(m, plan, name=name)
         budget.charge(f"block{i}/dequant", w_hat[name].nbytes)
     x_out = source.block_apply(w_hat, x)
     budget.release_prefix(f"block{i}/")

@@ -1,0 +1,136 @@
+"""Sensitivity-driven bit/rank allocator: budget and monotonicity contracts,
+plus the mixed-precision override plumbing into ptq_stream."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import allocate, quantize
+from repro.ptq_stream import ResidualMLPSource, StreamPlan, stream_quantize
+from repro.ptq_stream.shards import read_shard, shard_name
+
+BLOCK = 16
+RANKS = (2, 4)
+CODEBOOKS = ("nf2", "nf3", "nf4")
+
+
+def _weights(seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for i, (n, k) in enumerate([(64, 48), (48, 64), (32, 32)]):
+        out[f"m{i}"] = np.asarray(
+            jax.random.normal(jax.random.fold_in(key, i), (n, k))) * 0.05
+    return out
+
+
+def _alloc(budget, **kw):
+    return allocate.allocate(_weights(), budget, codebooks=CODEBOOKS,
+                             ranks=RANKS, block_size=BLOCK, **kw)
+
+
+def _min_bytes():
+    return sum(min(c.bytes for c in allocate.layer_candidates(
+        w, codebooks=CODEBOOKS, ranks=RANKS, block_size=BLOCK))
+        for w in _weights().values())
+
+
+def test_budget_respected_and_spent():
+    lo = _min_bytes()
+    for budget in (lo, int(lo * 1.3), int(lo * 2.5)):
+        plan = _alloc(budget)
+        assert plan.total_bytes <= budget
+        assert plan.total_bytes == sum(
+            allocate.layer_bytes(l.n, l.k, l.codebook, l.rank)
+            for l in plan.layers)
+
+
+def test_infeasible_budget_raises():
+    with pytest.raises(ValueError, match="infeasible"):
+        _alloc(_min_bytes() - 1)
+
+
+def test_error_monotone_in_budget():
+    """More budget can never hurt: total error is non-increasing (the
+    greedy stops at the first non-fitting upgrade, so a larger budget's
+    upgrade sequence strictly extends a smaller one's)."""
+    lo = _min_bytes()
+    budgets = [int(lo * f) for f in (1.0, 1.2, 1.5, 2.0, 3.0)]
+    errors = [_alloc(b).total_error for b in budgets]
+    for smaller, larger in zip(errors, errors[1:]):
+        assert larger <= smaller + 1e-9
+
+
+def test_generous_budget_maxes_out_and_prefers_more_bits():
+    plan = _alloc(10**9)
+    assert all(l.codebook == "nf4" for l in plan.layers)
+    assert 2.0 <= _alloc(_min_bytes()).avg_bits() \
+        <= plan.avg_bits() <= 4.0
+
+
+def test_specs_emit_per_layer_quantspecs():
+    from repro.core import QuantSpec
+
+    plan = _alloc(int(_min_bytes() * 1.5))
+    specs = plan.specs(QuantSpec(method="lords", block_size=BLOCK))
+    assert set(specs) == set(_weights())
+    for layer in plan.layers:
+        assert specs[layer.name].codebook == layer.codebook
+        assert specs[layer.name].rank == layer.rank
+
+
+def test_col_weight_shifts_sensitivity():
+    """Upweighting a layer's calibration activations must not *lower* its
+    measured error (the proxy is linear in col_weight)."""
+    w = _weights()["m0"]
+    base = allocate.sensitivity_error(w, "nf2", 2, block_size=BLOCK)
+    hot = allocate.sensitivity_error(
+        w, "nf2", 2, col_weight=np.full(w.shape[1], 4.0), block_size=BLOCK)
+    assert hot == pytest.approx(4.0 * base, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# override plumbing into ptq_stream
+# ---------------------------------------------------------------------------
+
+
+def test_stream_plan_override_lookup_and_fingerprint():
+    plan = StreamPlan(block_size=BLOCK, rank=3, refine_steps=6)
+    fp_uniform = plan.fingerprint()
+
+    layers = (
+        allocate.LayerAlloc("up", 64, 48, "nf3", 2,
+                            allocate.layer_bytes(64, 48, "nf3", 2), 0.0),
+        allocate.LayerAlloc("down", 48, 64, "nf2", 4,
+                            allocate.layer_bytes(48, 64, "nf2", 4), 0.0),
+    )
+    mixed = plan.with_allocation(dataclasses.replace(
+        allocate.AllocPlan(layers=layers, budget=0, total_bytes=0,
+                           total_error=0.0)))
+    assert mixed.codebook_for("up") == "nf3"
+    assert mixed.rank_for("down") == 4
+    # unknown matrices fall back to the uniform plan defaults
+    assert mixed.codebook_for("other") == plan.codebook
+    assert mixed.rank_for("other") == plan.rank
+    # uniform plans keep their historical fingerprint (resume compat);
+    # mixed-precision plans must never alias them
+    assert plan.fingerprint() == fp_uniform
+    assert mixed.fingerprint() != fp_uniform
+
+
+def test_stream_quantize_honors_mixed_precision_overrides(tmp_path):
+    src = ResidualMLPSource.create(
+        str(tmp_path / "model"), num_blocks=1, d=48, d_ff=64,
+        tokens=16, seed=0)
+    plan = StreamPlan(block_size=BLOCK, rank=3, refine_steps=4,
+                      overrides=(("up", "nf3", 2), ("down", "nf2", None)))
+    stream_quantize(src, str(tmp_path / "out"), plan)
+    shard = read_shard(str(tmp_path / "out" / shard_name(0)))
+    # up: (64, 48) at nf3 -> 48 codes/row pack into 18 bytes (8c/3B)
+    assert shard["up/q"].shape == (64, quantize.pack_spec("nf3")
+                                   .packed_width(48))
+    assert shard["up/b"].shape[1] == 2  # overridden rank
+    # down: (48, 64) at nf2 -> 16 bytes/row, rank falls back to plan's 3
+    assert shard["down/q"].shape == (48, quantize.pack_spec("nf2")
+                                     .packed_width(64))
+    assert shard["down/b"].shape[1] == 3

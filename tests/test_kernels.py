@@ -29,7 +29,7 @@ def _setup(m, n, k, r, codebook, seed=0, dtype=jnp.float32):
 
 
 @pytest.mark.parametrize("m,n,k,blocks", SHAPES)
-@pytest.mark.parametrize("codebook", ["nf4", "nf2"])
+@pytest.mark.parametrize("codebook", ["nf4", "nf3", "nf2"])
 def test_lords_matmul_shapes(m, n, k, blocks, codebook):
     x, w, qp, b, a = _setup(m, n, k, 4, codebook)
     y_ref = ref.lords_matmul_ref(x, qp, b, a, codebook)
@@ -51,9 +51,73 @@ def test_lords_matmul_dtypes(dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("codebook", ["nf3", "nf2"])
+@pytest.mark.parametrize("n,k", [(96, 160), (72, 328)])
+def test_subbyte_dispatch_parity_non_tile_aligned(codebook, n, k):
+    """Fused path (pad-to-tile + in-kernel sub-byte unpack) vs the ref
+    oracle on shapes that divide neither the tile nor the lane width —
+    forward at GEMV and GEMM widths, backward through x/b/a."""
+    from repro.core import QuantSpec, init_quantized_linear
+    from repro.kernels import dispatch
+
+    spec = QuantSpec(method="lords", codebook=codebook, block_size=8,
+                     rank=4, mode="peft")
+    kw, kx = jax.random.split(jax.random.PRNGKey(n + k))
+    w = jax.random.normal(kw, (n, k), jnp.float32) * 0.02
+    params = init_quantized_linear(kw, n, k, spec, w)
+    for m in (3, 16):
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        y_ref = dispatch.qmatmul(params, x, spec, n, k, backend="ref")
+        y_int = dispatch.qmatmul(params, x, spec, n, k, backend="interpret")
+        np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                                   rtol=3e-5, atol=3e-5)
+
+    def loss(backend):
+        def f(x_, b_, a_):
+            p = {**params, "b": b_, "a": a_}
+            return jnp.sum(dispatch.qmatmul(p, x_, spec, n, k,
+                                            backend=backend) ** 2)
+        return jax.grad(f, argnums=(0, 1, 2))(x, params["b"], params["a"])
+
+    for g_ref, g_int in zip(loss("ref"), loss("interpret")):
+        np.testing.assert_allclose(np.asarray(g_int), np.asarray(g_ref),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_subbyte_decode_has_no_dense_unpack_temporary():
+    """The fused sub-byte path must unpack shift/mask *inside the tile*:
+    no integer-typed (N, K) code array may appear anywhere in the jaxpr
+    (that full-width temporary is exactly what true packing removes)."""
+    m, n, k, r = 8, 128, 512, 4
+    x, w, qp, b, a = _setup(m, n, k, r, "nf3")
+
+    def fused(x, qp, b, a):
+        return ops.lords_matmul(x, qp, b, a, "nf3", use_pallas=True,
+                                interpret=True, bm=8, bn=64, bk=128)
+
+    jaxpr = jax.make_jaxpr(fused)(x, qp, b, a)
+
+    def int_avals(jx):
+        for eqn in jx.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "shape"):
+                    if jnp.issubdtype(aval.dtype, jnp.integer):
+                        yield aval
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                yield from int_avals(sub)
+
+    # a dense unpack temporary would be a 2-D integer (N, K) code matrix;
+    # the tile-level one-hot (bn, bk, levels) is 3-D and allowed — it IS
+    # the MXU gather
+    offenders = [a_ for a_ in int_avals(jaxpr.jaxpr)
+                 if a_.ndim == 2 and a_.size >= n * k]
+    assert not offenders, f"full-width unpack temporaries: {offenders}"
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 10_000),
-       st.sampled_from(["nf4", "nf2", "int8"]))
+       st.sampled_from(["nf4", "nf3", "nf2", "int8"]))
 def test_lut_quantize_matches_oracle(rank, seed, codebook):
     _, w, _, b, a = _setup(8, 128, 256, rank, codebook, seed=seed)
     got = ops.lut_quantize(w, b, a, codebook, use_pallas=True, interpret=True,

@@ -13,15 +13,44 @@ from repro.core import lut, quantize, scaling
        st.sampled_from(["nf4", "nf2", "int8", "nf3", "fp4"]),
        st.integers(0, 2**31 - 1))
 def test_pack_unpack_roundtrip(rows, groups, name, seed):
-    cpb = {8: 1, 4: 2, 3: 1, 2: 4}[lut.codebook_bits(name)]
-    cols = groups * cpb
+    ps = quantize.pack_spec(name)
+    cols = groups * ps.group_codes  # cross-byte: nf3 = 8 codes / 3 bytes
     rng = np.random.default_rng(seed)
     codes = rng.integers(0, len(lut.codebook(name)),
                          (rows, cols)).astype(np.uint8)
     packed = quantize.pack_codes(jnp.asarray(codes), name)
-    assert packed.shape == (rows, cols // cpb)
+    assert packed.shape == (rows, groups * ps.group_bytes)
     out = quantize.unpack_codes(packed, name)
     np.testing.assert_array_equal(codes, np.asarray(out))
+
+
+def test_pack_spec_layout():
+    """Storage contract: true bit-packing densities, little-endian groups."""
+    assert quantize.pack_spec("nf4").packed_width(256) == 128
+    assert quantize.pack_spec("nf3").packed_width(256) == 96  # 3 bits/code
+    assert quantize.pack_spec("nf2").packed_width(256) == 64
+    assert quantize.pack_spec("int8").packed_width(256) == 256
+    # nf4/nf2 stay byte-identical to the historical single-byte layout:
+    # code i lives at bits [bits*i, bits*(i+1)) of its byte
+    codes = jnp.asarray([[1, 2, 3, 0]], jnp.uint8)
+    assert np.asarray(quantize.pack_codes(codes, "nf4")).tolist() \
+        == [[1 | (2 << 4), 3]]
+    assert np.asarray(quantize.pack_codes(codes, "nf2")).tolist() \
+        == [[1 | (2 << 2) | (3 << 4)]]
+    # nf3 group: 8 codes -> one little-endian 24-bit word -> 3 bytes
+    codes = jnp.asarray([[5, 1, 7, 2, 0, 3, 6, 4]], jnp.uint8)
+    word = sum(c << (3 * i) for i, c in enumerate([5, 1, 7, 2, 0, 3, 6, 4]))
+    assert np.asarray(quantize.pack_codes(codes, "nf3")).tolist() \
+        == [[word & 0xFF, (word >> 8) & 0xFF, (word >> 16) & 0xFF]]
+
+
+def test_pack_errors_are_descriptive():
+    with pytest.raises(ValueError, match="pack_spec"):
+        quantize.codes_per_byte("nf3")  # cross-byte: no integer codes/byte
+    with pytest.raises(ValueError, match="unknown codebook"):
+        quantize.pack_spec("nf5")
+    with pytest.raises(ValueError, match="divisible"):
+        quantize.pack_spec("nf3").packed_width(12)  # 12 % 8 != 0
 
 
 @settings(max_examples=20, deadline=None)

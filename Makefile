@@ -5,7 +5,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-interpret test-multidevice bench bench-serve bench-train \
 	bench-attn serve-smoke serve-smoke-interpret serve-trace-smoke \
-	train-smoke-interpret chaos-smoke ptq-stream-smoke lowbit-smoke
+	train-smoke-interpret chaos-smoke ptq-stream-smoke lowbit-smoke \
+	dist-chaos-smoke
 
 test:            ## tier-1 suite (CPU; kernels in interpret mode where tested)
 	$(PY) -m pytest -x -q
@@ -80,6 +81,17 @@ lowbit-smoke:    ## reduced lowbit Pareto sweep + sub-byte parity suites -> BENC
 	REPRO_KERNEL_BACKEND=interpret $(PY) -m pytest -x -q \
 		tests/test_quantize.py tests/test_allocate.py \
 		tests/test_kernels.py -k "subbyte or nf3 or pack"
+
+# elastic distributed recovery under a forced 8-device host mesh: injected
+# device loss -> mesh rebuild + elastic checkpoint reshard (train) / param
+# reshard with bit-identical tokens (engine), replica-desync detect +
+# rollback, host-crash resume, and the sharded streaming-PTQ crash +
+# mesh-shrink drill — every invariant self-asserted into
+# BENCH_dist_chaos.json — plus the elastic multidevice test suite
+dist-chaos-smoke:  ## elastic recovery drills + multidevice elastic tests -> BENCH_dist_chaos.json
+	$(PY) -m benchmarks.run dist_chaos
+	REPRO_MULTIDEVICE=1 $(PY) -m pytest -x -q -m multidevice \
+		tests/test_dist_elastic.py
 
 bench-train:     ## training fast path: fused vs dequant backward step time + bwd-bytes roofline -> BENCH_train.json
 	$(PY) -m benchmarks.bench_train

@@ -18,6 +18,14 @@ layer-streaming PTQ once clean, then re-run it under injected faults and
     :class:`MemoryBudgetExceeded` (fail fast, diagnosable), and the run
     still resumes to the identical artifact afterwards.
 
+  * **sharded drill** (forced 8 host devices, run in a subprocess so the
+    device count can be forced before jax initializes) — the data-parallel
+    sharded pipeline killed at *every* block boundary resumes bit-identical
+    to the uninterrupted **single-host** run, including once across a mesh
+    shrink (killed on 2×4, resumed on 1×4, and once resumed with no mesh at
+    all): the canonical chunked math makes the mesh pure placement, so
+    bytes never depend on the device count — not even across a crash.
+
 Writes ``BENCH_ptq_stream.json`` with the scenario records and the peak
 streaming footprint vs the dense model size.
 """
@@ -25,6 +33,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import tempfile
 
 import numpy as np
@@ -146,10 +156,105 @@ def run_scenarios(root: str) -> dict:
     return results
 
 
+def dist_drill(root: str) -> dict:
+    """Forced-8-device sharded kill/resume/mesh-shrink drill (see module
+    docstring).  Must run in a process whose jax sees >= 8 devices."""
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+
+    if jax.device_count() < 8:
+        raise RuntimeError(
+            f"dist drill needs 8 devices, found {jax.device_count()} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "before the first jax import")
+    src = ResidualMLPSource.create(os.path.join(root, "model"), **_MODEL)
+    plan = StreamPlan(block_size=32, rank=4, refine_steps=10)
+    n = src.num_blocks
+
+    # the oracle is the *single-host* run: every sharded variant below must
+    # reproduce these bytes exactly
+    clean_dir = os.path.join(root, "clean_single")
+    clean = stream_quantize(src, clean_dir, plan)
+    assert clean["status"] == "complete", clean
+    ref = _shards(clean_dir, n)
+
+    full = os.path.join(root, "sharded_full")
+    s = stream_quantize(src, full, plan, mesh=make_host_mesh(data=2, model=4))
+    assert s["status"] == "complete" and _identical(ref, full), (
+        "uninterrupted sharded run diverged from single-host bytes")
+    results = {"devices": jax.device_count(), "sharded_parity": True,
+               "boundary_sweep": [], "mesh_shrink": {}}
+
+    # kill the 2x4 sharded run at EVERY block boundary; resume on the same
+    # mesh — bytes must match the single-host oracle and prefixes reuse
+    for b in range(n):
+        out = os.path.join(root, f"dist_kill_b{b}")
+        faults = FaultPlan(b, {"ptq.kill_at_block": {"at": (b,)}})
+        killed = False
+        try:
+            stream_quantize(src, out, plan, faults=faults,
+                            mesh=make_host_mesh(data=2, model=4))
+        except InjectedFault:
+            killed = True
+        assert killed, f"dist kill at {b} never fired"
+        s = stream_quantize(src, out, plan, resume=True,
+                            mesh=make_host_mesh(data=2, model=4))
+        rec = {"boundary": b, "reused": s["reused"],
+               "recomputed": s["recomputed"],
+               "bit_identical": _identical(ref, out),
+               "audit_clean": audit_artifact(out, src, plan)["clean"]}
+        assert rec["bit_identical"], f"dist boundary {b}: bytes diverged"
+        assert rec["audit_clean"], f"dist boundary {b}: dirty audit"
+        assert s["reused"] == b, (b, s["reused"])
+        results["boundary_sweep"].append(rec)
+
+    # mid-mesh-shrink: killed on 2x4, resumed on 1x4 (half the devices
+    # gone), then a second drill resumed with no mesh at all — a crash plus
+    # an elastic reshard still lands on the oracle bytes
+    for name, resume_mesh in (("to_1x4", make_host_mesh(data=1, model=4)),
+                              ("to_single", None)):
+        out = os.path.join(root, f"shrink_{name}")
+        faults = FaultPlan(17, {"ptq.kill_at_block": {"at": (n // 2,)}})
+        killed = False
+        try:
+            stream_quantize(src, out, plan, faults=faults,
+                            mesh=make_host_mesh(data=2, model=4))
+        except InjectedFault:
+            killed = True
+        assert killed
+        s = stream_quantize(src, out, plan, resume=True, mesh=resume_mesh)
+        rec = {"reused": s["reused"], "recomputed": s["recomputed"],
+               "bit_identical": _identical(ref, out),
+               "audit_clean": audit_artifact(out, src, plan)["clean"]}
+        assert rec["bit_identical"], f"mesh shrink {name}: bytes diverged"
+        assert rec["audit_clean"] and s["reused"] == n // 2, (name, rec)
+        results["mesh_shrink"][name] = rec
+    return results
+
+
+def dist_drill_subprocess() -> dict:
+    """Run :func:`dist_drill` in a child process with 8 forced host devices
+    (the parent's jax is already initialized with 1)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    with tempfile.TemporaryDirectory() as root:
+        out_json = os.path.join(root, "dist_drill.json")
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_ptq_stream",
+             "--dist-drill", root, "--json", out_json],
+            env=env, check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        with open(out_json) as f:
+            return json.load(f)
+
+
 def run(report):
     """benchmarks.run entry point -> BENCH_ptq_stream.json."""
     with tempfile.TemporaryDirectory() as root:
         results = run_scenarios(root)
+    results["dist_drill"] = dist_drill_subprocess()
     c = results["clean"]
     report("ptq_stream/clean", c["wall_s"] * 1e6,
            f"peak_bytes={c['peak_bytes']} dense_bytes={c['dense_bytes']}")
@@ -160,12 +265,43 @@ def run(report):
     for name, rec in results["scenarios"].items():
         report(f"ptq_stream/{name}", 0.0,
                f"bit_identical={rec['bit_identical']}")
+    dd = results["dist_drill"]
+    report("ptq_stream/dist_drill", 0.0,
+           f"devices={dd['devices']} sharded_parity={dd['sharded_parity']} "
+           f"boundaries={len(dd['boundary_sweep'])} "
+           f"all_bit_identical="
+           f"{all(r['bit_identical'] for r in dd['boundary_sweep'])} "
+           f"mesh_shrink_ok="
+           f"{all(r['bit_identical'] for r in dd['mesh_shrink'].values())}")
     with open("BENCH_ptq_stream.json", "w") as f:
         json.dump(results, f, indent=1)
     report("ptq_stream/json", 0.0, "wrote BENCH_ptq_stream.json")
 
 
-if __name__ == "__main__":
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dist-drill", default=None, metavar="ROOT",
+                    help="run only the forced-8-device sharded drill into "
+                         "ROOT (needs XLA_FLAGS host device forcing)")
+    ap.add_argument("--json", default=None,
+                    help="with --dist-drill: write the drill record here")
+    args = ap.parse_args(argv)
+    if args.dist_drill is not None:
+        results = dist_drill(args.dist_drill)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(results, f, indent=1)
+        print(f"[bench_ptq_stream] dist drill: {len(results['boundary_sweep'])}"
+              f" boundaries + {len(results['mesh_shrink'])} mesh-shrink "
+              "resumes, all bit-identical to the single-host run")
+        return
+
     def _p(name, us, derived):
         print(f"{name},{us:.1f},{derived}")
     run(_p)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,14 @@ table registry and exits.
                           audit) -> BENCH_serve.json ("chaos" section)
   ptq_stream   §4.1     — crash-safe layer-streaming PTQ (kill/resume
                           parity at every block boundary, bitrot + OOM
-                          watchdog drills) -> BENCH_ptq_stream.json
+                          watchdog drills, forced-8-device sharded
+                          kill/resume/mesh-shrink) -> BENCH_ptq_stream.json
+  dist_chaos   §4.4     — elastic distributed recovery drills under a
+                          forced 8-device mesh (device-loss resharding,
+                          desync rollback, host-crash resume, engine
+                          elastic rebuild, sharded-PTQ crash + mesh
+                          shrink; every invariant self-asserted)
+                          -> BENCH_dist_chaos.json
 """
 from __future__ import annotations
 
@@ -34,7 +41,8 @@ import sys
 import time
 
 TABLES = ["ptq", "refine", "lowbit", "qat", "peft", "rank", "kernels",
-          "error_ratio", "serve", "train", "attn", "chaos", "ptq_stream"]
+          "error_ratio", "serve", "train", "attn", "chaos", "ptq_stream",
+          "dist_chaos"]
 
 
 def main() -> None:

@@ -96,11 +96,14 @@ def _is_sharded(leaf) -> bool:
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3,
                  io_retries: int = 2, io_backoff: float = 0.05,
-                 faults=NO_FAULTS):
+                 io_jitter: float = 0.0, faults=NO_FAULTS):
         self.dir = directory
         self.keep = keep
         self.io_retries = io_retries
         self.io_backoff = io_backoff
+        # decorrelated-jitter fraction for retry sleeps: many hosts saving
+        # shards to one filesystem must not retry in lockstep
+        self.io_jitter = io_jitter
         # chaos hook: ``ckpt.save_crash`` is consulted once per leaf write,
         # so tests can kill a save at any point mid-step and assert the
         # previous checkpoint stays restorable (atomicity contract).
@@ -115,7 +118,8 @@ class Checkpointer:
         ``io_retries`` attempts."""
         return retry_on_transient(fn, retries=self.io_retries,
                                   backoff=self.io_backoff,
-                                  exceptions=(OSError,))
+                                  exceptions=(OSError,),
+                                  jitter=self.io_jitter)
 
     # -- save ---------------------------------------------------------------
 

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from repro.core import lut, scaling
 from repro.core.quantize import pack_codes, quantize_codes
 
-__all__ = ["ptq_refine", "PTQResult"]
+__all__ = ["ptq_refine", "ptq_refine_chunked", "virtual_shards", "PTQResult"]
 
 
 class PTQResult(NamedTuple):
@@ -121,4 +121,109 @@ def ptq_refine(
     # final quantization with the refined manifold
     s = scaling.scale_matrix(b, a)
     codes = quantize_codes(w, s, codebook_name)
+    return PTQResult(b, a, pack_codes(codes, codebook_name), losses)
+
+
+def virtual_shards(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (>= 1).
+
+    The chunked refine folds partial sums over a *fixed* virtual-shard count
+    so the arithmetic is independent of how many physical devices run it;
+    the count must divide the row dimension exactly."""
+    ns = max(1, min(int(want), int(dim)))
+    while dim % ns:
+        ns -= 1
+    return ns
+
+
+@partial(jax.jit, static_argnames=("codebook_name", "steps", "block_size",
+                                   "rank", "extra_rank", "nshard"))
+def ptq_refine_chunked(
+    w: jnp.ndarray,
+    codebook_name: str = "nf4",
+    block_size: int = 128,
+    rank: int | None = None,
+    extra_rank: int = 0,
+    steps: int = 500,
+    lr: float = 0.05,
+    weight_decay: float = 0.0,
+    col_weight: jnp.ndarray | None = None,
+    channel_scale: jnp.ndarray | None = None,
+    nshard: int = 1,
+) -> PTQResult:
+    """Algorithm 1 with *canonical chunked arithmetic*: bit-identical on any
+    device count.
+
+    The rows of ``w`` are split into ``nshard`` fixed virtual shards
+    (``nshard`` must divide ``n`` — see :func:`virtual_shards`).  Everything
+    row-local (quantization step, ∂loss/∂B, B's Adam state) is computed
+    per-chunk under ``vmap``; the only cross-chunk quantities — the loss and
+    ∂loss/∂A, whose reduction order is what normally changes with sharding —
+    are combined by an explicitly *ordered left fold* over chunk partials.
+    A mesh only changes where chunks live (`device_put` of the chunk axis),
+    never the arithmetic, so a single-host run and an 8-device run of the
+    same ``nshard`` produce byte-identical (B, A, Q).  ``nshard`` is part of
+    the numerical program and is fingerprinted by callers (StreamPlan).
+    """
+    w = w.astype(jnp.float32)
+    n, m = w.shape
+    if n % nshard:
+        raise ValueError(f"nshard {nshard} does not divide rows {n}")
+    b0, a0 = scaling.lords_init_from_weight(
+        w, block_size, rank=rank, extra_rank=extra_rank,
+        channel_scale=channel_scale,
+    )
+    levels = lut.codebook(codebook_name)
+    colw = (None if col_weight is None
+            else col_weight.astype(jnp.float32)[None, :])
+    wc = w.reshape(nshard, n // nshard, m)
+    bc0 = b0.reshape(nshard, n // nshard, -1)
+    denom = jnp.float32(n * m)
+
+    def fold(parts):
+        # ordered left fold over the chunk axis — THE canonical reduction
+        acc = parts[0]
+        for i in range(1, nshard):
+            acc = acc + parts[i]
+        return acc
+
+    def chunk_grads(wc_i, bc_i, a, qv_i):
+        def local_loss(ba):
+            bb, aa = ba
+            s = scaling.scale_matrix(bb, aa)
+            err = (wc_i - s * qv_i) ** 2
+            if colw is not None:
+                err = err * colw
+            return jnp.sum(err)
+        return jax.value_and_grad(local_loss)((bc_i, a))
+
+    def step_fn(carry, t):
+        bc, a, st = carry
+        # -- quantization step: row-local, runs per chunk --
+        s = jax.vmap(scaling.scale_matrix, in_axes=(0, None))(bc, a)
+        codes = quantize_codes(wc, s, codebook_name)
+        qv = jnp.take(levels, codes.astype(jnp.int32), axis=0)
+        # -- adaptation step: per-chunk partials, ordered cross-chunk fold --
+        losses_c, (gbs, gas) = jax.vmap(
+            chunk_grads, in_axes=(0, 0, None, 0))(wc, bc, a, qv)
+        loss = fold(losses_c) / denom
+        gb = gbs / denom              # row-local: stays chunked
+        ga = fold(gas) / denom        # cross-chunk: ordered fold
+        ub, mu_b, nu_b = _adam_update(gb, st.mu_b, st.nu_b, t + 1, lr)
+        ua, mu_a, nu_a = _adam_update(ga, st.mu_a, st.nu_a, t + 1, lr)
+        bc = bc * (1 - lr * weight_decay) - ub
+        a = a * (1 - lr * weight_decay) - ua
+        return (bc, a, _AdamState(mu_b, nu_b, mu_a, nu_a)), loss
+
+    st0 = _AdamState(
+        jnp.zeros_like(bc0), jnp.zeros_like(bc0),
+        jnp.zeros_like(a0), jnp.zeros_like(a0),
+    )
+    (bc, a, _), losses = jax.lax.scan(
+        step_fn, (bc0, a0, st0), jnp.arange(steps, dtype=jnp.float32)
+    )
+    # final quantization with the refined manifold (row-local per chunk)
+    s = jax.vmap(scaling.scale_matrix, in_axes=(0, None))(bc, a)
+    codes = quantize_codes(wc, s, codebook_name).reshape(n, m)
+    b = bc.reshape(n, -1)
     return PTQResult(b, a, pack_codes(codes, codebook_name), losses)

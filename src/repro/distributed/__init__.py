@@ -1,4 +1,10 @@
 """repro.distributed — sharding rules, fault tolerance, elastic restarts."""
+from repro.distributed.desync import (  # noqa: F401
+    DesyncError,
+    desync_spread,
+    replica_digests,
+    tree_digest,
+)
 from repro.distributed.fault_tolerance import (  # noqa: F401
     PreemptionGuard,
     StragglerMonitor,
@@ -10,5 +16,6 @@ from repro.distributed.sharding import (  # noqa: F401
     estimate_quantized_gb,
     make_rules,
     resolve_spec,
+    row_shard,
     tree_shardings,
 )

@@ -92,15 +92,38 @@ class StragglerMonitor:
 
 
 def retry_on_transient(fn, retries: int = 3, backoff: float = 0.5,
-                       exceptions=(OSError, RuntimeError)):
-    """Call fn() with bounded retries + exponential backoff."""
+                       exceptions=(OSError, RuntimeError),
+                       jitter: float = 0.0, rng=None,
+                       backoff_cap: float = 30.0):
+    """Call fn() with bounded retries + exponential backoff.
+
+    ``jitter`` > 0 switches to *decorrelated jitter* (AWS-style): each sleep
+    is drawn uniformly from ``[backoff, prev_sleep * 3]``, capped at
+    ``backoff_cap``, scaled so ``jitter=1.0`` is fully decorrelated and
+    smaller values interpolate toward the deterministic schedule.  Sharded
+    writers hitting the same filesystem stamp retry at the same instant
+    under pure exponential backoff; jitter spreads the herd.  Pass a seeded
+    ``rng`` (``np.random.Generator``-like, needs ``.uniform``) for
+    reproducible chaos runs; default draws a fresh one per call.
+    """
+    if jitter > 0.0 and rng is None:
+        import numpy as np
+        rng = np.random.default_rng()
+    prev = backoff
     for attempt in range(retries + 1):
         try:
             return fn()
         except exceptions:
             if attempt == retries:
                 raise
-            time.sleep(backoff * (2**attempt))
+            base = backoff * (2**attempt)
+            if jitter > 0.0:
+                decorr = min(backoff_cap, rng.uniform(backoff, prev * 3))
+                sleep = (1.0 - jitter) * base + jitter * decorr
+                prev = max(decorr, backoff)
+            else:
+                sleep = base
+            time.sleep(min(sleep, backoff_cap))
 
 
 def elastic_mesh_shape(n_devices: int, model_parallel: int = 16,

@@ -25,7 +25,29 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 __all__ = ["ShardingPolicy", "make_rules", "resolve_spec", "tree_pspecs",
-           "tree_shardings", "estimate_quantized_gb"]
+           "tree_shardings", "estimate_quantized_gb", "row_shard"]
+
+
+def row_shard(arr, mesh):
+    """Place an array with its leading axis sharded over *every* axis of
+    ``mesh`` (data-parallel rows), replicating when the mesh is absent,
+    trivial, or the dim does not divide.
+
+    Used by the sharded streaming-PTQ path: placement only — the chunked
+    arithmetic is fixed by the plan's virtual-shard count, so replicating
+    (the fallback here) changes wall-clock, never bytes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.asarray(arr)
+    if mesh is None:
+        return x
+    total = int(np.prod(list(dict(mesh.shape).values())))
+    if total <= 1 or x.ndim == 0 or x.shape[0] % total:
+        return x
+    spec = PartitionSpec(tuple(mesh.axis_names))
+    return jax.device_put(x, NamedSharding(mesh, spec))
 
 
 @dataclasses.dataclass

@@ -60,11 +60,30 @@ layer covers instead of raising away completed work:
     rejected with ``reason='preempted'``, in-flight requests run to
     completion, and the stats report ``preempted=True``.
 
+**Elastic execution** (PR 10): the engine also survives *infrastructure*
+faults, injected through the mesh-aware ``dist.*`` points:
+
+  * **Device loss** (``dist.device_loss``) triggers an elastic mesh
+    rebuild: the mesh shrinks (data axis halves first), the step plans and
+    jits are rebuilt on the survivors, params reshard onto the new layout,
+    the page pool is rebuilt, and every in-flight request is requeued for
+    recompute without being charged a retry — bounded by
+    ``max_mesh_rebuilds``.
+  * **Collective timeouts** (``dist.collective_timeout``) surface as
+    injected step failures riding the retry + requeue path, counted
+    separately in ``stats['collective_timeouts']``.
+  * **Straggler watchdog**: per-shard ``dist.straggler`` injection streams
+    (one RNG per shard index) pair with an EMA z-score over tick wall time;
+    flagged ticks land in ``stats['straggler_flags']`` with the slow shard
+    indices.
+
 Every recovery action is counted in ``Engine.stats`` (``evictions``,
 ``retries``, ``step_failures``, ``quarantined``, ``shed``,
-``deadline_cancels``) and :meth:`Engine.audit_pages` checks the page-pool
-invariant (``free + held == total_pages - 1``, no page in two places)
-after each recovery when faults are active and always at exit.
+``deadline_cancels``, ``mesh_rebuilds``, ``lost_devices``,
+``resharded_restores``, ``collective_timeouts``) and
+:meth:`Engine.audit_pages` checks the page-pool invariant
+(``free + held == total_pages - 1``, no page in two places) after each
+recovery when faults are active and always at exit.
 """
 from __future__ import annotations
 
@@ -76,6 +95,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.fault_tolerance import StragglerMonitor
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import (
     NONFINITE_TOKEN,
@@ -145,7 +165,8 @@ class Engine:
                  kernel_backend: str | None = None,
                  temperature: float = 0.0, seed: int = 0, params=None,
                  faults=None, admission_budget: int | None = None,
-                 max_retries: int = 2, preemption_guard=None):
+                 max_retries: int = 2, preemption_guard=None,
+                 max_mesh_rebuilds: int = 4):
         if cfg.input_kind != "tokens":
             raise ValueError("the paged engine serves token models")
         if chunk % page_size:
@@ -164,23 +185,18 @@ class Engine:
         self.faults = faults or NO_FAULTS
         self.admission_budget = admission_budget
         self.max_retries = max_retries
+        self.max_mesh_rebuilds = max_mesh_rebuilds
         self.audit_every = False   # force post-recovery audits sans faults
         self._guard = preemption_guard
 
-        kw = dict(slots=slots, total_pages=total_pages, page_size=page_size,
-                  max_pages=max_pages, temperature=temperature,
-                  kernel_backend=kernel_backend)
-        self.chunk_plan = build_prefill_chunk_plan(
-            cfg, self.mesh, chunk=chunk, **kw)
-        self.decode_plan = build_paged_generate_plan(
-            cfg, self.mesh, gen=1, **kw)
-        self.burst_plan = (build_paged_generate_plan(
-            cfg, self.mesh, gen=self.burst, **kw)
-            if self.burst > 1 else self.decode_plan)
+        self._step_kw = dict(slots=slots, total_pages=total_pages,
+                             page_size=page_size, max_pages=max_pages,
+                             temperature=temperature,
+                             kernel_backend=kernel_backend)
+        self._build_plans()
 
         if params is None:
             params, _ = split_tree(model_init(jax.random.PRNGKey(seed), cfg))
-        self._multi = int(np.prod(tuple(self.mesh.shape.values()))) > 1
         pools, _ = split_tree(
             paged_cache_init(cfg, total_pages, page_size))
         if self._multi:
@@ -189,14 +205,6 @@ class Engine:
         self.params = params
         self.pools = pools
         self._key = jax.random.PRNGKey(seed + 1)
-
-        self._chunk_step = jax.jit(self.chunk_plan.step_fn,
-                                   donate_argnums=(2,))
-        self._decode_step = jax.jit(self.decode_plan.step_fn,
-                                    donate_argnums=(2,))
-        self._burst_step = (jax.jit(self.burst_plan.step_fn,
-                                    donate_argnums=(2,))
-                            if self.burst > 1 else self._decode_step)
 
         self._slots = [_Slot() for _ in range(slots)]
         self._free_pages = list(range(1, total_pages))  # page 0 = dummy
@@ -208,6 +216,28 @@ class Engine:
         self._retries: dict = {}
         self._drain_reason: str | None = None
         self.stats: dict = {}
+
+    def _build_plans(self):
+        """(Re)build the three fixed-shape step plans and their jits on
+        ``self.mesh`` — at construction and again after an elastic mesh
+        rebuild (device loss shrinks the mesh; the plans' shardings and
+        compiled steps must follow it)."""
+        self.chunk_plan = build_prefill_chunk_plan(
+            self.cfg, self.mesh, chunk=self.chunk, **self._step_kw)
+        self.decode_plan = build_paged_generate_plan(
+            self.cfg, self.mesh, gen=1, **self._step_kw)
+        self.burst_plan = (build_paged_generate_plan(
+            self.cfg, self.mesh, gen=self.burst, **self._step_kw)
+            if self.burst > 1 else self.decode_plan)
+        self._multi = int(np.prod(tuple(self.mesh.shape.values()))) > 1
+        self._chunk_step = jax.jit(self.chunk_plan.step_fn,
+                                   donate_argnums=(2,))
+        self._decode_step = jax.jit(self.decode_plan.step_fn,
+                                    donate_argnums=(2,))
+        self._burst_step = (jax.jit(self.burst_plan.step_fn,
+                                    donate_argnums=(2,))
+                            if self.burst > 1 else self._decode_step)
+        self._warm = False
 
     def warmup(self):
         """Compile and steady-state every step function before serving:
@@ -420,6 +450,47 @@ class Engine:
         self._free_pages = list(range(1, self.total_pages))
         self._poisoned = set()
 
+    def _elastic_rebuild(self, queue: deque) -> bool:
+        """Elastic recovery from a (injected) device loss: shrink the mesh
+        — the data axis halves first, the model axis only once data
+        parallelism is exhausted — rebuild the step plans and their jits on
+        the surviving devices, reshard the live params onto the new layout
+        (an elastic restore: same bytes, new placement), rebuild the page
+        pool, and requeue every in-flight request for recompute *without*
+        charging its retry budget — the hardware failed, not the request.
+        Returns False when the mesh is already a single device (nothing
+        left to lose)."""
+        shape = dict(self.mesh.shape)
+        data = int(shape.get("data", 1))
+        model = int(shape.get("model", 1))
+        old = data * model
+        if old <= 1:
+            return False
+        if data > 1:
+            data //= 2
+        else:
+            model //= 2
+        self.stats["lost_devices"] += old - data * model
+        self.mesh = make_host_mesh(data=data, model=model)
+        self._build_plans()
+        self.params = jax.device_put(
+            self.params, self.chunk_plan.in_shardings[0]) if self._multi \
+            else jax.device_put(self.params, self.mesh.devices.flat[0])
+        self.stats["resharded_restores"] += 1
+        # every active sequence's KV lived (in part) on the lost devices:
+        # requeue oldest-frontmost for recompute, then rebuild the pool on
+        # the new mesh
+        active = [s for s in self._slots if s.state != _FREE]
+        for s in sorted(active, key=lambda s: s.admit_seq, reverse=True):
+            req = s.req
+            self._reset(s)
+            queue.appendleft(req)
+        self._reinit_pools()
+        self.stats["mesh_rebuilds"] += 1
+        self.warmup()
+        self._post_recovery_audit("mesh_rebuild")
+        return True
+
     def _step_failure(self, participants, queue: deque, *, injected: bool,
                       phase: str):
         """Recover from a failed step launch.  Participants are charged a
@@ -518,10 +589,15 @@ class Engine:
                       "prefill_ms": 0.0, "decode_ms": 0.0,
                       "step_failures": 0, "retries": 0, "quarantined": 0,
                       "shed": 0, "deadline_cancels": 0, "nan_injections": 0,
-                      "preempted": False}
+                      "preempted": False, "mesh_rebuilds": 0,
+                      "lost_devices": 0, "resharded_restores": 0,
+                      "collective_timeouts": 0, "straggler_flags": []}
         t0 = time.perf_counter()
         self._t0 = t0
         now = self._now
+        tick = 0
+        mon = StragglerMonitor(warmup_steps=5)
+        n_shards = int(np.prod(tuple(self.mesh.shape.values())))
 
         while pending or queue or any(s.state != _FREE for s in self._slots):
             if now() > timeout_s:
@@ -552,7 +628,23 @@ class Engine:
                     self._record(pending.popleft(), "rejected",
                                  reason="preempted")
 
+            if (self.faults.enabled
+                    and self.stats["mesh_rebuilds"] < self.max_mesh_rebuilds
+                    and self.faults.fires("dist.device_loss")):
+                self._elastic_rebuild(queue)
+                n_shards = int(np.prod(tuple(self.mesh.shape.values())))
+
             self.faults.fires("engine.straggler")   # sleeps when it fires
+            # straggler watchdog: per-shard injection streams (one RNG per
+            # shard index — deterministic across process counts) plus an
+            # EMA z-score over tick wall time that flags organic slowness
+            tick += 1
+            mon.start_step()
+            slow_shards = []
+            if self.faults.enabled:
+                for sidx in range(n_shards):
+                    if self.faults.fires("dist.straggler", index=sidx):
+                        slow_shards.append(sidx)  # fires() slept in-line
 
             while pending and pending[0].arrival <= now():
                 r = pending.popleft()
@@ -604,6 +696,15 @@ class Engine:
                 n = min(n, max(len(s.req.tokens) + s.req.max_new - s.pos - 1
                                for s in decoding))
                 self._run_decode(decoding, max(n, 1), queue)
+
+            if (prefilling or decoding) and (
+                    mon.end_step(tick) or slow_shards):
+                flagged = mon.flags[-1] if mon.flags else None
+                self.stats["straggler_flags"].append({
+                    "tick": tick, "shards": slow_shards,
+                    "injected": bool(slow_shards),
+                    "dt_s": flagged[1] if flagged else None,
+                    "zscore": flagged[2] if flagged else None})
 
             if not prefilling and not decoding and not queue and pending:
                 time.sleep(min(max(pending[0].arrival - now(), 0.0), 0.05))
@@ -670,6 +771,9 @@ class Engine:
                 pt[i, : len(s.pages)] = s.pages
         t0 = time.perf_counter()
         try:
+            if self.faults.fires("dist.collective_timeout"):
+                self.stats["collective_timeouts"] += 1
+                raise InjectedFault("injected collective timeout (prefill)")
             if self.faults.fires("engine.step"):
                 raise InjectedFault("injected chunk-step failure")
             tok1, self.pools = self._chunk_step(
@@ -751,6 +855,9 @@ class Engine:
             n = 1
         t0 = time.perf_counter()
         try:
+            if self.faults.fires("dist.collective_timeout"):
+                self.stats["collective_timeouts"] += 1
+                raise InjectedFault("injected collective timeout (decode)")
             if self.faults.fires("engine.step"):
                 raise InjectedFault("injected decode-step failure")
             toks, self.pools = step(

@@ -59,7 +59,24 @@ def _plan(args) -> StreamPlan:
         extra_rank=args.extra_rank, refine_steps=args.steps, lr=args.lr,
         seed=args.seed, pretransform=args.pretransform,
         smooth_alpha=args.smooth_alpha, act_weighted=not args.no_act_weighted,
-        memory_budget=budget)
+        memory_budget=budget, calib_shards=args.calib_shards,
+        io_retries=args.io_retries, io_backoff=args.io_backoff,
+        io_jitter=args.io_jitter)
+
+
+def _mesh(args):
+    """``--mesh DxM`` → a data×model host mesh (needs that many visible
+    devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8).
+    The mesh is pure placement: artifacts stay byte-identical with or
+    without it."""
+    if args.mesh is None:
+        return None
+    from repro.launch.mesh import make_host_mesh
+    try:
+        data, model = (int(v) for v in args.mesh.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh wants DxM (e.g. 2x4), got {args.mesh!r}")
+    return make_host_mesh(data=data, model=model)
 
 
 def _faults(args):
@@ -158,6 +175,18 @@ def main(argv=None):
     ap.add_argument("--kill-mid-write", type=int, default=None, metavar="N")
     ap.add_argument("--corrupt-shard", type=int, default=None, metavar="N")
     ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard calibration data-parallel over a data x "
+                         "model host mesh (placement only — bytes are "
+                         "mesh-invariant)")
+    ap.add_argument("--calib-shards", type=int, default=8,
+                    help="virtual-shard count of the canonical chunked "
+                         "calibration math (part of the fingerprint)")
+    ap.add_argument("--io-retries", type=int, default=2)
+    ap.add_argument("--io-backoff", type=float, default=0.02)
+    ap.add_argument("--io-jitter", type=float, default=0.0,
+                    help="decorrelated-jitter fraction for IO retry "
+                         "backoff (0 = pure exponential)")
     args = ap.parse_args(argv)
 
     if args.selfcheck:
@@ -171,7 +200,7 @@ def main(argv=None):
         sys.exit(0 if aud["clean"] else 1)
     try:
         s = stream_quantize(src, args.out, plan, resume=args.resume,
-                            faults=_faults(args))
+                            faults=_faults(args), mesh=_mesh(args))
     except InjectedFault as e:
         print(f"[ptq-stream] injected fault fired: {e}")
         sys.exit(17)  # distinct code so drivers can tell kill from crash

@@ -16,7 +16,9 @@ from repro.ptq_stream.stream import (  # noqa: F401
     MemoryBudget,
     MemoryBudgetExceeded,
     StreamPlan,
+    allocate_from_artifact,
     audit_artifact,
+    calibration_moments,
     quantize_dense_blocks,
     stream_quantize,
 )

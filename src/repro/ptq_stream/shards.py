@@ -67,18 +67,25 @@ def shard_digest(path: str) -> int:
 
 def write_shard(directory: str, block: int, tree: dict, *,
                 faults=NO_FAULTS, io_retries: int = 2,
-                io_backoff: float = 0.02) -> tuple[str, int]:
+                io_backoff: float = 0.02,
+                io_jitter: float = 0.0) -> tuple[str, int]:
     """Atomically publish one block's shard; returns (filename, crc32).
 
     The returned digest comes from re-reading the written bytes, never from
     the in-memory arrays — what's recorded in the ledger is what the disk
-    actually holds.
+    actually holds.  ``io_jitter`` > 0 decorrelates the retry backoff
+    (sharded writers hammering one filesystem shouldn't retry in lockstep);
+    it changes sleep timing only, never bytes.
     """
     os.makedirs(directory, exist_ok=True)
     name = shard_name(block)
     final = os.path.join(directory, name)
     tmp = final + f".tmp.{os.getpid()}"
     host = {k: np.asarray(v) for k, v in tree.items()}
+
+    def _retry(fn):
+        return retry_on_transient(fn, retries=io_retries, backoff=io_backoff,
+                                  exceptions=(OSError,), jitter=io_jitter)
 
     def _write():
         if faults.fires("ptq.transient_oserror"):
@@ -88,8 +95,7 @@ def write_shard(directory: str, block: int, tree: dict, *,
             f.flush()
             os.fsync(f.fileno())
 
-    retry_on_transient(_write, retries=io_retries, backoff=io_backoff,
-                       exceptions=(OSError,))
+    _retry(_write)
 
     if faults.fires("ptq.kill_mid_write"):
         # temp written, final never published: a resume must re-do the block
@@ -105,10 +111,8 @@ def write_shard(directory: str, block: int, tree: dict, *,
                 f"disk crc {got:#010x} != memory crc {want:#010x}")
         return got
 
-    crc = retry_on_transient(_verify, retries=io_retries, backoff=io_backoff,
-                             exceptions=(OSError,))
-    retry_on_transient(lambda: os.replace(tmp, final), retries=io_retries,
-                       backoff=io_backoff, exceptions=(OSError,))
+    crc = _retry(_verify)
+    _retry(lambda: os.replace(tmp, final))
 
     if faults.fires("ptq.corrupt_shard"):
         _flip_byte(final)

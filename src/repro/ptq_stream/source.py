@@ -9,13 +9,17 @@ The pipeline never sees a whole model — it talks to a *source* exposing:
   * ``load_block(i)``                 — materialize block *i*'s dense
     weights as ``{name: (n, m) array}`` — the only point dense weights
     exist, and the watchdog charges them against the memory budget,
-  * ``calib_inputs(weights, x)``      — per-matrix calibration activations
-    for one block given its weights and the block input (the in-block
-    Catcher: each linear is calibrated against what actually feeds it),
-  * ``block_apply(weights, x)``       — the block forward used to propagate
-    calibration activations to the next block (called with the *quantized*
-    weights, GPTQ-style, so later blocks calibrate against the error the
-    earlier ones actually emit),
+  * ``calib_inputs(weights, x, *, chunks=1, mesh=None)`` — per-matrix
+    calibration activations for one block given its weights and the block
+    input (the in-block Catcher: each linear is calibrated against what
+    actually feeds it),
+  * ``block_apply(weights, x, *, chunks=1, mesh=None)`` — the block forward
+    used to propagate calibration activations to the next block (called
+    with the *quantized* weights, GPTQ-style, so later blocks calibrate
+    against the error the earlier ones actually emit).  ``chunks`` fixes
+    the virtual-shard count of the canonical chunked math (bytes depend on
+    it, never on ``mesh``); ``mesh`` optionally places the token chunks
+    data-parallel,
   * ``fingerprint()``                 — identity recorded in the ledger.
 
 :class:`ResidualMLPSource` is the reference implementation: a chain of
@@ -29,15 +33,35 @@ from __future__ import annotations
 import json
 import os
 import zlib
+from functools import partial
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ptq import virtual_shards
 from repro.data.calibration import synthetic_activations
+from repro.distributed.sharding import row_shard
 
 __all__ = ["ResidualMLPSource"]
 
 _META = "source.json"
+
+
+@partial(jax.jit, static_argnames=("chunks",))
+def _mlp_forward_chunked(up, down, x, chunks: int):
+    """Canonical chunked residual-MLP forward: ``h = gelu(x Upᵀ)``,
+    ``y = x + h Downᵀ``, with the token axis split into ``chunks`` fixed
+    virtual shards.  Every chunk's math is token-local (the matmuls reduce
+    over the *feature* axis, which is never split), so the program — and
+    its bytes — are identical whether the chunk axis lives on one device
+    or eight: a mesh is pure placement.
+    """
+    t, d = x.shape
+    xc = x.reshape(chunks, t // chunks, d)
+    h = jax.nn.gelu(jnp.einsum("ctd,fd->ctf", xc, up))
+    y = xc + jnp.einsum("ctf,df->ctd", h, down)
+    return h.reshape(t, -1), y.reshape(t, d)
 
 
 def _dense_name(i: int) -> str:
@@ -96,14 +120,23 @@ class ResidualMLPSource:
         with np.load(os.path.join(self.dir, _dense_name(i))) as z:
             return {k: z[k] for k in z.files}
 
-    def calib_inputs(self, weights: dict, x: np.ndarray) -> dict:
-        h = jax.nn.gelu(x @ np.asarray(weights["up"]).T)
+    def _forward(self, weights: dict, x: np.ndarray, chunks: int, mesh):
+        ns = virtual_shards(x.shape[0], chunks)
+        xj = row_shard(np.asarray(x, np.float32), mesh)
+        h, y = _mlp_forward_chunked(
+            jnp.asarray(weights["up"], jnp.float32),
+            jnp.asarray(weights["down"], jnp.float32), xj, ns)
+        return h, y
+
+    def calib_inputs(self, weights: dict, x: np.ndarray, *,
+                     chunks: int = 1, mesh=None) -> dict:
+        h, _ = self._forward(weights, x, chunks, mesh)
         return {"up": np.asarray(x, np.float32),
                 "down": np.asarray(h, np.float32)}
 
-    def block_apply(self, weights: dict, x: np.ndarray) -> np.ndarray:
-        h = jax.nn.gelu(x @ np.asarray(weights["up"]).T)
-        y = x + np.asarray(h) @ np.asarray(weights["down"]).T
+    def block_apply(self, weights: dict, x: np.ndarray, *,
+                    chunks: int = 1, mesh=None) -> np.ndarray:
+        _, y = self._forward(weights, x, chunks, mesh)
         return np.asarray(y, np.float32)
 
     # -- accounting ---------------------------------------------------------

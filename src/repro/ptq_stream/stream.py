@@ -42,7 +42,7 @@ import zlib
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ptq_refine
+from repro.core.ptq import ptq_refine_chunked, virtual_shards
 from repro.core.baselines import (
     hadamard_signs,
     hadamard_transform,
@@ -50,6 +50,8 @@ from repro.core.baselines import (
 )
 from repro.core.quantize import dequantize_codes, unpack_codes
 from repro.core.scaling import scale_matrix
+from repro.distributed.sharding import row_shard
+from repro.kernels import dispatch
 from repro.ptq_stream.ledger import Ledger
 from repro.ptq_stream.shards import (
     digest_array,
@@ -60,7 +62,8 @@ from repro.ptq_stream.shards import (
 from repro.robustness import NO_FAULTS, InjectedFault
 
 __all__ = ["StreamPlan", "MemoryBudget", "MemoryBudgetExceeded",
-           "stream_quantize", "quantize_dense_blocks", "audit_artifact"]
+           "stream_quantize", "quantize_dense_blocks", "audit_artifact",
+           "calibration_moments", "allocate_from_artifact"]
 
 
 # ---------------------------------------------------------------------------
@@ -92,8 +95,19 @@ class StreamPlan:
     pretransform: str = "none"      # none | smooth | smoothrot
     smooth_alpha: float = 0.5
     act_weighted: bool = True       # col_weight = E[x_j^2] in refinement
+    # Fixed virtual-shard count for the canonical chunked arithmetic
+    # (calibration matmuls, E[x²] folds, ptq_refine_chunked).  Part of the
+    # numerical program — fingerprinted — so a run is bit-identical on any
+    # physical device count: a mesh changes where chunks live, never what
+    # is computed.  Per-dim counts clamp to the largest divisor
+    # (core.ptq.virtual_shards).
+    calib_shards: int = 8
     memory_budget: int | None = None  # bytes; None = unenforced
     refine_overhead: int = 6        # transient f32 copies charged per refine
+    # shard/ledger IO retry policy (execution knobs, not fingerprinted)
+    io_retries: int = 2
+    io_backoff: float = 0.02
+    io_jitter: float = 0.0          # 0 = deterministic exponential backoff
 
     def __post_init__(self):
         if self.pretransform not in ("none", "smooth", "smoothrot"):
@@ -129,7 +143,8 @@ class StreamPlan:
               "refine_steps": self.refine_steps, "lr": self.lr,
               "seed": self.seed, "pretransform": self.pretransform,
               "smooth_alpha": self.smooth_alpha,
-              "act_weighted": self.act_weighted}
+              "act_weighted": self.act_weighted,
+              "calib_shards": self.calib_shards}
         if self.overrides:  # absent for uniform plans: fingerprint-stable
             fp["overrides"] = [list(o) for o in self.overrides]
         return fp
@@ -210,36 +225,59 @@ class MemoryBudget:
 # ---------------------------------------------------------------------------
 
 
-def _col_weight(xm: jnp.ndarray) -> jnp.ndarray:
-    return jnp.mean(jnp.asarray(xm, jnp.float32) ** 2, axis=0) + 1e-6
+def _col_weight(xm: jnp.ndarray, chunks: int = 1) -> jnp.ndarray:
+    """E[x_j²] + eps with *canonical chunked* token reduction: the token
+    axis is split into ``chunks`` fixed virtual shards whose partial sums
+    fold in shard order, so the bytes never depend on physical sharding."""
+    x = jnp.asarray(xm, jnp.float32)
+    t = x.shape[0]
+    ns = virtual_shards(t, chunks)
+    parts = jnp.sum(x.reshape(ns, t // ns, -1) ** 2, axis=1)
+    acc = parts[0]
+    for i in range(1, ns):
+        acc = acc + parts[i]
+    return acc / jnp.float32(t) + 1e-6
 
 
 def _quantize_matrix(w, xm, plan: StreamPlan, seed: int,
-                     name: str = "") -> dict:
+                     name: str = "", mesh=None) -> dict:
     """One matrix through Alg. 1 under the plan's pre-transform; returns the
-    flat artifact arrays ({q, b, a[, c, signs]})."""
+    flat artifact arrays ({q, b, a[, c, signs], xsq}).
+
+    The refine runs :func:`ptq_refine_chunked` over ``plan.calib_shards``
+    virtual row shards; when ``mesh`` is given the rows (chunk axis) are
+    placed data-parallel across it — placement only, identical bytes.
+    ``xsq`` is the original-basis E[x_j²] moment, stored for the
+    sensitivity allocator (core.allocate) to consume later.
+    """
     w = jnp.asarray(w, jnp.float32)
+    cs = plan.calib_shards
+    xsq = _col_weight(xm, cs)
     kw = dict(codebook_name=plan.codebook_for(name),
               block_size=plan.block_size,
               rank=plan.rank_for(name), extra_rank=plan.extra_rank,
-              steps=plan.refine_steps, lr=plan.lr)
+              steps=plan.refine_steps, lr=plan.lr,
+              nshard=virtual_shards(w.shape[0], cs))
+    w_in = row_shard(w, mesh)
     if plan.pretransform == "smoothrot":
         c = smooth_scales(w, xm, plan.smooth_alpha)
         signs = hadamard_signs(w.shape[1], seed)
         w_work = hadamard_transform(w * c[None, :], signs)
         x_work = hadamard_transform(
             jnp.asarray(xm, jnp.float32) / c[None, :], signs)
-        colw = _col_weight(x_work) if plan.act_weighted else None
-        res = ptq_refine(w_work, col_weight=colw, **kw)
+        colw = _col_weight(x_work, cs) if plan.act_weighted else None
+        res = ptq_refine_chunked(row_shard(w_work, mesh),
+                                 col_weight=colw, **kw)
         return {"q": res.q_packed, "b": res.b, "a": res.a,
-                "c": c, "signs": signs}
-    colw = _col_weight(xm) if plan.act_weighted else None
+                "c": c, "signs": signs, "xsq": xsq}
+    colw = _col_weight(xm, cs) if plan.act_weighted else None
     if plan.pretransform == "smooth":
         c = smooth_scales(w, xm, plan.smooth_alpha)
-        res = ptq_refine(w, col_weight=colw, channel_scale=c, **kw)
+        res = ptq_refine_chunked(w_in, col_weight=colw, channel_scale=c,
+                                 **kw)
     else:
-        res = ptq_refine(w, col_weight=colw, **kw)
-    return {"q": res.q_packed, "b": res.b, "a": res.a}
+        res = ptq_refine_chunked(w_in, col_weight=colw, **kw)
+    return {"q": res.q_packed, "b": res.b, "a": res.a, "xsq": xsq}
 
 
 def _dequant_matrix(mats: dict, plan: StreamPlan,
@@ -257,8 +295,8 @@ def _dequant_matrix(mats: dict, plan: StreamPlan,
 
 
 def _quantize_block(weights: dict, calib: dict, plan: StreamPlan,
-                    block: int, budget: MemoryBudget | None = None
-                    ) -> tuple[dict, dict]:
+                    block: int, budget: MemoryBudget | None = None,
+                    mesh=None) -> tuple[dict, dict]:
     """Quantize every matrix of one block; returns (flat shard tree, Ŵ)."""
     flat, w_hat = {}, {}
     for name in sorted(weights):
@@ -269,7 +307,7 @@ def _quantize_block(weights: dict, calib: dict, plan: StreamPlan,
         with ctx:
             mats = _quantize_matrix(w, calib[name], plan,
                                     _mat_seed(plan.seed, block, name),
-                                    name=name)
+                                    name=name, mesh=mesh)
         for k, v in mats.items():
             flat[f"{name}/{k}"] = np.asarray(v)
         w_hat[name] = _dequant_matrix(mats, plan, name=name)
@@ -295,7 +333,7 @@ def _unflatten(tree: dict) -> dict:
 
 
 def _try_reuse(out_dir: str, entry: dict, plan: StreamPlan, source, x,
-               budget: MemoryBudget):
+               budget: MemoryBudget, mesh=None):
     """Validate one ledger entry against disk + the activation chain.
 
     Returns (ok, x_out, reason).  On ok the block's work is skipped and the
@@ -316,7 +354,8 @@ def _try_reuse(out_dir: str, entry: dict, plan: StreamPlan, source, x,
     for name, m in mats.items():
         w_hat[name] = _dequant_matrix(m, plan, name=name)
         budget.charge(f"block{i}/dequant", w_hat[name].nbytes)
-    x_out = source.block_apply(w_hat, x)
+    x_out = source.block_apply(w_hat, x, chunks=plan.calib_shards,
+                               mesh=mesh)
     budget.release_prefix(f"block{i}/")
     if digest_array(x_out) != entry["x_out"]:
         return False, None, "output-activation digest mismatch"
@@ -324,16 +363,27 @@ def _try_reuse(out_dir: str, entry: dict, plan: StreamPlan, source, x,
 
 
 def stream_quantize(source, out_dir: str, plan: StreamPlan, *,
-                    resume: bool = False, faults=None, guard=None) -> dict:
+                    resume: bool = False, faults=None, guard=None,
+                    mesh=None) -> dict:
     """Run (or resume) the streaming pipeline; returns a summary dict.
 
     ``faults``: a :class:`repro.robustness.FaultPlan` consulted at the
     ``ptq.*`` points.  ``guard``: anything with a ``preempted`` property
     (:class:`PreemptionGuard`) — checked at block boundaries.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — the calibration matmuls and
+    the ``ptq_refine_chunked`` inner loop run data-parallel over it (rows /
+    tokens placed across every mesh axis, ``dispatch.shard_scope``
+    active).  The mesh is an *execution* knob: the plan's fixed
+    ``calib_shards`` virtual-shard arithmetic makes the artifact bytes
+    identical on any device count, so a sharded run killed at a block
+    boundary may resume on a smaller mesh (or a single host) and still
+    converge to the bit-identical artifact.
     """
     faults = faults or NO_FAULTS
     t_start = time.monotonic()
-    ledger = Ledger(out_dir)
+    ledger = Ledger(out_dir, io_retries=plan.io_retries,
+                    io_backoff=plan.io_backoff)
     budget = MemoryBudget(plan.memory_budget, faults)
     plan_fp, source_fp = plan.fingerprint(), source.fingerprint()
 
@@ -350,55 +400,67 @@ def stream_quantize(source, out_dir: str, plan: StreamPlan, *,
 
     reused, recomputed = 0, []
     n = source.num_blocks
-    for i in range(n):
-        entry = ledger.entry(i)
-        if entry is not None:
-            ok, x_out, _reason = _try_reuse(out_dir, entry, plan, source, x,
-                                            budget)
-            if ok:
-                x = x_out
-                reused += 1
-                continue
-            # invalid entry: fall through and re-do exactly this block —
-            # deterministic recompute restores the original bytes, so
-            # later entries stay reusable via the digest chain.
-        if guard is not None and guard.preempted:
-            return {"status": "preempted", "blocks_done": i,
-                    "num_blocks": n, "reused": reused,
-                    "recomputed": recomputed, "stray_tmp_removed": stray,
-                    "peak_bytes": budget.peak,
-                    "wall_s": time.monotonic() - t_start}
-        if faults.fires("ptq.kill_at_block"):
-            raise InjectedFault(f"killed at block boundary {i}")
+    scope = (dispatch.shard_scope(mesh) if mesh is not None
+             else contextlib.nullcontext())
+    with scope:
+        for i in range(n):
+            entry = ledger.entry(i)
+            if entry is not None:
+                ok, x_out, _reason = _try_reuse(out_dir, entry, plan,
+                                                source, x, budget, mesh=mesh)
+                if ok:
+                    x = x_out
+                    reused += 1
+                    continue
+                # invalid entry: fall through and re-do exactly this block —
+                # deterministic recompute restores the original bytes, so
+                # later entries stay reusable via the digest chain.
+            if guard is not None and guard.preempted:
+                return {"status": "preempted", "blocks_done": i,
+                        "num_blocks": n, "reused": reused,
+                        "recomputed": recomputed, "stray_tmp_removed": stray,
+                        "peak_bytes": budget.peak,
+                        "wall_s": time.monotonic() - t_start}
+            if faults.fires("ptq.kill_at_block"):
+                raise InjectedFault(f"killed at block boundary {i}")
 
-        t0 = time.monotonic()
-        weights = source.load_block(i)
-        budget.charge(f"block{i}/dense",
-                      sum(np.asarray(v).nbytes for v in weights.values()))
-        calib = source.calib_inputs(weights, x)
-        budget.charge(f"block{i}/calib",
-                      sum(np.asarray(v).nbytes for v in calib.values()))
+            t0 = time.monotonic()
+            weights = source.load_block(i)
+            budget.charge(f"block{i}/dense",
+                          sum(np.asarray(v).nbytes
+                              for v in weights.values()))
+            calib = source.calib_inputs(weights, x,
+                                        chunks=plan.calib_shards, mesh=mesh)
+            budget.charge(f"block{i}/calib",
+                          sum(np.asarray(v).nbytes for v in calib.values()))
 
-        flat, w_hat = _quantize_block(weights, calib, plan, i, budget)
-        shard, crc = write_shard(out_dir, i, flat, faults=faults)
-        x_out = source.block_apply(w_hat, x)
-        new_entry = {"block": i, "status": "done", "shard": shard,
-                     "crc32": crc, "x_in": digest_array(x),
-                     "x_out": digest_array(x_out),
-                     "seed": _block_seed(plan.seed, i),
-                     "wall_s": round(time.monotonic() - t0, 4)}
-        if faults.fires("ptq.kill_before_commit"):
-            # shard published but never journaled: resume re-does the block
-            raise InjectedFault(f"killed before ledger commit (block {i})")
-        if entry is None:
-            ledger.append(new_entry)
-        else:
-            ledger.replace(i, new_entry)
-        recomputed.append(i)
-        budget.release_prefix(f"block{i}/")
-        budget.release("calib/x")
-        budget.charge("calib/x", x_out.nbytes)
-        x = x_out
+            flat, w_hat = _quantize_block(weights, calib, plan, i, budget,
+                                          mesh=mesh)
+            shard, crc = write_shard(out_dir, i, flat, faults=faults,
+                                     io_retries=plan.io_retries,
+                                     io_backoff=plan.io_backoff,
+                                     io_jitter=plan.io_jitter)
+            x_out = source.block_apply(w_hat, x, chunks=plan.calib_shards,
+                                       mesh=mesh)
+            new_entry = {"block": i, "status": "done", "shard": shard,
+                         "crc32": crc, "x_in": digest_array(x),
+                         "x_out": digest_array(x_out),
+                         "seed": _block_seed(plan.seed, i),
+                         "wall_s": round(time.monotonic() - t0, 4)}
+            if faults.fires("ptq.kill_before_commit"):
+                # shard published but never journaled: resume re-does the
+                # block
+                raise InjectedFault(
+                    f"killed before ledger commit (block {i})")
+            if entry is None:
+                ledger.append(new_entry)
+            else:
+                ledger.replace(i, new_entry)
+            recomputed.append(i)
+            budget.release_prefix(f"block{i}/")
+            budget.release("calib/x")
+            budget.charge("calib/x", x_out.nbytes)
+            x = x_out
 
     ledger.complete()
     return {"status": "complete", "blocks_done": n, "num_blocks": n,
@@ -422,10 +484,10 @@ def quantize_dense_blocks(source, plan: StreamPlan) -> tuple[list[dict], int]:
     x = np.asarray(source.calibration_inputs(), np.float32)
     out = []
     for i, weights in enumerate(blocks):
-        calib = source.calib_inputs(weights, x)
+        calib = source.calib_inputs(weights, x, chunks=plan.calib_shards)
         flat, w_hat = _quantize_block(weights, calib, plan, i)
         out.append({k: np.asarray(v) for k, v in flat.items()})
-        x = source.block_apply(w_hat, x)
+        x = source.block_apply(w_hat, x, chunks=plan.calib_shards)
     return out, digest_array(x)
 
 
@@ -470,3 +532,69 @@ def audit_artifact(out_dir: str, source, plan: StreamPlan) -> dict:
         x = x_out
     report["clean"] = clean
     return report
+
+
+# ---------------------------------------------------------------------------
+# calibration moments -> sensitivity allocator
+# ---------------------------------------------------------------------------
+
+
+def calibration_moments(out_dir: str) -> dict:
+    """Per-matrix E[x_j²] moments stored by a streamed run.
+
+    Reads the ``xsq`` arrays out of every journaled shard and averages them
+    per matrix name across blocks — the override system (StreamPlan /
+    ``core.allocate``) keys layers by matrix name, so the result plugs
+    straight into ``allocate(..., col_weights=calibration_moments(dir))``.
+    Returns ``{}`` when no ledger/shards exist (or none carry moments):
+    callers then fall back to plain weight-MSE sensitivity
+    (``col_weight=None`` — the documented fallback parity).
+    """
+    ledger = Ledger(out_dir)
+    if not ledger.load():
+        return {}
+    sums: dict[str, np.ndarray] = {}
+    counts: dict[str, int] = {}
+    for entry in ledger.entries:
+        path = os.path.join(out_dir, entry["shard"])
+        try:
+            tree = read_shard(path)
+        except Exception:
+            continue
+        for k, v in tree.items():
+            if k.endswith("/xsq"):
+                name = k[:-len("/xsq")]
+                arr = np.asarray(v, np.float64)
+                if name in sums and sums[name].shape == arr.shape:
+                    sums[name] = sums[name] + arr
+                    counts[name] += 1
+                elif name not in sums:
+                    sums[name] = arr
+                    counts[name] = 1
+    return {name: (sums[name] / counts[name]).astype(np.float32)
+            for name in sums}
+
+
+def allocate_from_artifact(weights: dict, budget_bytes: int, out_dir: str,
+                           **kw):
+    """Sensitivity allocation driven by a streamed run's calibration ledger.
+
+    Feeds :func:`calibration_moments` (the E[x_j²] each matrix was actually
+    calibrated against) into ``core.allocate`` as per-layer ``col_weights``.
+    Layer names match moments exactly or by their ``.../<matrix>`` suffix
+    (streamed moments are per matrix *kind*, shared across blocks).  A layer
+    with no usable moment — missing, or shaped for a different fan-in —
+    falls back to plain weight-MSE sensitivity (``col_weight=None``), so an
+    artifact with no moments reproduces ``allocate(...)`` exactly.
+    """
+    from repro.core.allocate import allocate
+
+    moments = calibration_moments(out_dir)
+    col = {}
+    for name, w in weights.items():
+        m = moments.get(name)
+        if m is None:
+            m = moments.get(name.rsplit("/", 1)[-1])
+        if m is not None and m.shape == (w.shape[1],):
+            col[name] = m
+    return allocate(weights, budget_bytes, col_weights=col, **kw)

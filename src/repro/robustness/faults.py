@@ -57,6 +57,35 @@ Checkpoint injection points (consulted by ``repro.checkpoint``):
   * ``ckpt.save_crash``       — one per leaf written during a save; firing
     raises :class:`InjectedFault` mid-save, leaving a stray ``.tmp`` step
     dir that ``latest_step``/``restore`` must ignore.
+
+Mesh injection points (consulted by the elastic layers in
+``repro.launch.train`` / ``repro.launch.engine`` / ``repro.ptq_stream``):
+  * ``dist.device_loss``       — one per step/tick; firing simulates a host
+    dropping out of the mesh: the consumer rebuilds a smaller mesh
+    (``make_host_mesh``), elastically reshards its state onto it
+    (checkpointer v2 restore / ``device_put``), and continues.
+  * ``dist.host_crash``        — one per step; firing raises
+    :class:`InjectedFault` (whole-process crash drill — the outer driver
+    restarts and resumes from the latest checkpoint/ledger).
+  * ``dist.collective_timeout``— one per collective step launch; firing
+    raises :class:`InjectedFault` *before* the launch, exercising the
+    bounded retry path without corrupting device state.
+  * ``dist.replica_desync``    — one per desync-digest interval; firing
+    perturbs one replica's digest so the *real* compare-quarantine-rollback
+    path runs (silent divergence cannot be created under single-controller
+    SPMD, so — like ``train.grad_spike`` — the detector input is forced
+    and the recovery path is exercised for real).
+  * ``dist.straggler``         — one per (tick, shard); firing sleeps
+    ``delay_s`` so the straggler watchdog flags that shard.
+
+Mesh points are consulted with an explicit *shard/process index*
+(``plan.fires("dist.straggler", index=3)``): every (point, index) pair owns
+an independent RNG stream keyed ``[seed, crc32(point), index]`` and its own
+consultation counter, so a multi-process replay is bit-identical no matter
+how many processes consult concurrently — shard 3's fault schedule never
+depends on how many siblings exist (the acceptance contract for
+deterministic mesh chaos across process counts).  ``FaultSpec.only_index``
+restricts a point to one shard (e.g. "host 1 dies", "shard 3 straggles").
 """
 from __future__ import annotations
 
@@ -81,13 +110,19 @@ class FaultSpec:
 
     ``at``: consultation indices (0-based) that fire deterministically.
     ``prob``: per-consultation fire probability (seeded RNG).
-    ``max_fires``: cap on total fires (None = unbounded).
+    ``max_fires``: cap on total fires (None = unbounded).  For indexed
+    (mesh) points the cap is **per stream** — a global cap would make one
+    shard's schedule depend on sibling interleaving and break cross-
+    process-count determinism.
     ``delay_s``: sleep this long on fire (straggler-style points).
+    ``only_index``: restrict an indexed point to one shard/process
+    (e.g. "host 1 dies"); consultations with any other index never fire.
     """
     prob: float = 0.0
     at: tuple = ()
     max_fires: int | None = None
     delay_s: float = 0.0
+    only_index: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "at", tuple(self.at))
@@ -95,9 +130,16 @@ class FaultSpec:
             raise ValueError(f"prob {self.prob} outside [0, 1]")
 
 
-def _point_rng(seed: int, point: str) -> np.random.Generator:
+def _point_rng(seed: int, point: str,
+               index: int | None = None) -> np.random.Generator:
     # crc32, not hash(): stable across processes (PYTHONHASHSEED)
-    return np.random.default_rng([seed, zlib.crc32(point.encode())])
+    key = [seed, zlib.crc32(point.encode())]
+    if index is not None:
+        # index + 1, never a bare 0: SeedSequence zero-pads its entropy
+        # list, so [seed, crc, 0] would be the *same* stream as the
+        # un-indexed [seed, crc] — shard 0 must not mirror the legacy point
+        key.append(int(index) + 1)
+    return np.random.default_rng(key)
 
 
 class FaultPlan:
@@ -112,45 +154,76 @@ class FaultPlan:
         self.spec: dict[str, FaultSpec] = {
             k: (v if isinstance(v, FaultSpec) else FaultSpec(**v))
             for k, v in spec.items()}
-        self._rngs = {k: _point_rng(self.seed, k) for k in self.spec}
-        self._consults: dict[str, int] = {k: 0 for k in self.spec}
-        self._fired: dict[str, int] = {k: 0 for k in self.spec}
+        # Streams are keyed (point, index); index None is the classic
+        # un-indexed stream and keeps the exact pre-existing RNG keying.
+        # Indexed streams materialize lazily on first consultation.
+        self._rngs: dict[tuple, np.random.Generator] = {}
+        self._consults: dict[tuple, int] = {}
+        self._fired: dict[tuple, int] = {}
+        for k in self.spec:
+            self._stream(k, None)
 
-    def fires(self, point: str) -> bool:
-        """Consult ``point``; True iff the fault fires this consultation."""
+    def _stream(self, point: str, index: int | None) -> tuple:
+        key = (point, index)
+        if key not in self._rngs:
+            self._rngs[key] = _point_rng(self.seed, point, index)
+            self._consults[key] = 0
+            self._fired[key] = 0
+        return key
+
+    def fires(self, point: str, index: int | None = None) -> bool:
+        """Consult ``point``; True iff the fault fires this consultation.
+
+        ``index`` names the consulting shard/process for mesh points: each
+        (point, index) pair is an independent deterministic stream, so the
+        schedule seen by shard *i* does not depend on how many other shards
+        consult, or in what order.
+        """
         s = self.spec.get(point)
         if s is None:
             return False
-        i = self._consults[point]
-        self._consults[point] = i + 1
+        key = self._stream(point, index)
+        i = self._consults[key]
+        self._consults[key] = i + 1
+        if s.only_index is not None and index != s.only_index:
+            return False
         hit = i in s.at
         if not hit and s.prob > 0.0:
-            hit = self._rngs[point].random() < s.prob
+            hit = self._rngs[key].random() < s.prob
         if not hit:
             return False
-        if s.max_fires is not None and self._fired[point] >= s.max_fires:
+        if s.max_fires is not None and self._fired[key] >= s.max_fires:
             return False
-        self._fired[point] += 1
+        self._fired[key] += 1
         if s.delay_s > 0.0:
             time.sleep(s.delay_s)
         return True
 
-    def fired(self, point: str) -> int:
-        return self._fired.get(point, 0)
+    def fired(self, point: str, index: int | None = ...) -> int:
+        if index is not ...:
+            return self._fired.get((point, index), 0)
+        return sum(n for (p, _), n in self._fired.items() if p == point)
 
-    def consulted(self, point: str) -> int:
-        return self._consults.get(point, 0)
+    def consulted(self, point: str, index: int | None = ...) -> int:
+        if index is not ...:
+            return self._consults.get((point, index), 0)
+        return sum(n for (p, _), n in self._consults.items() if p == point)
 
     def reset(self):
         """Rewind every point to consultation 0 (fresh replay)."""
-        self._rngs = {k: _point_rng(self.seed, k) for k in self.spec}
-        self._consults = {k: 0 for k in self.spec}
-        self._fired = {k: 0 for k in self.spec}
+        self._rngs = {}
+        self._consults = {}
+        self._fired = {}
+        for k in self.spec:
+            self._stream(k, None)
 
     def summary(self) -> dict:
+        def _label(key):
+            point, index = key
+            return point if index is None else f"{point}[{index}]"
         return {"enabled": True, "seed": self.seed,
-                "consults": dict(self._consults),
-                "fired": dict(self._fired)}
+                "consults": {_label(k): v for k, v in self._consults.items()},
+                "fired": {_label(k): v for k, v in self._fired.items()}}
 
 
 class _NoFaults:
@@ -158,13 +231,13 @@ class _NoFaults:
 
     enabled = False
 
-    def fires(self, point: str) -> bool:
+    def fires(self, point: str, index: int | None = None) -> bool:
         return False
 
-    def fired(self, point: str) -> int:
+    def fired(self, point: str, index: int | None = ...) -> int:
         return 0
 
-    def consulted(self, point: str) -> int:
+    def consulted(self, point: str, index: int | None = ...) -> int:
         return 0
 
     def reset(self):

@@ -134,3 +134,74 @@ def test_stream_quantize_honors_mixed_precision_overrides(tmp_path):
     assert shard["down/q"].shape == (48, quantize.pack_spec("nf2")
                                      .packed_width(64))
     assert shard["down/b"].shape[1] == 3
+
+
+# ---------------------------------------------------------------------------
+# allocation driven by the streamed calibration ledger (PR 10 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _streamed_artifact(tmp_path):
+    src = ResidualMLPSource.create(
+        str(tmp_path / "model"), num_blocks=2, d=48, d_ff=64,
+        tokens=16, seed=0)
+    out = str(tmp_path / "out")
+    stream_quantize(src, out, StreamPlan(block_size=BLOCK, rank=3,
+                                         refine_steps=4))
+    return out
+
+
+def test_allocate_from_artifact_matches_explicit_col_weights(tmp_path):
+    """allocate_from_artifact == allocate(col_weights=moments): the E[x^2]
+    ledger of a streamed run drives sensitivity, with suffix-matched names
+    and a shape gate (a layer whose fan-in disagrees with the stored
+    moment falls back to plain weight-MSE)."""
+    from repro.ptq_stream import allocate_from_artifact, calibration_moments
+
+    out = _streamed_artifact(tmp_path)
+    moments = calibration_moments(out)
+    assert {"up", "down"} <= set(moments)
+    assert moments["up"].shape == (48,) and moments["down"].shape == (64,)
+    assert float(np.ptp(moments["up"])) > 0      # real data, not a constant
+
+    key = jax.random.PRNGKey(1)
+    weights = {
+        "blk0/up": np.asarray(jax.random.normal(
+            jax.random.fold_in(key, 0), (64, 48))) * 0.05,   # suffix match
+        "blk0/down": np.asarray(jax.random.normal(
+            jax.random.fold_in(key, 1), (48, 64))) * 0.05,
+        "extra/up": np.asarray(jax.random.normal(
+            jax.random.fold_in(key, 2), (32, 32))) * 0.05,   # fan-in 32 != 48
+        "head": np.asarray(jax.random.normal(
+            jax.random.fold_in(key, 3), (32, 32))) * 0.05,   # no moment
+    }
+    budget = sum(min(c.bytes for c in allocate.layer_candidates(
+        w, codebooks=CODEBOOKS, ranks=RANKS, block_size=BLOCK))
+        for w in weights.values())
+    budget = int(budget * 1.5)
+
+    got = allocate_from_artifact(weights, budget, out, codebooks=CODEBOOKS,
+                                 ranks=RANKS, block_size=BLOCK)
+    want = allocate.allocate(
+        weights, budget,
+        col_weights={"blk0/up": moments["up"], "blk0/down": moments["down"]},
+        codebooks=CODEBOOKS, ranks=RANKS, block_size=BLOCK)
+    assert [(l.name, l.codebook, l.rank) for l in got.layers] == \
+        [(l.name, l.codebook, l.rank) for l in want.layers]
+    assert got.total_error == want.total_error
+    assert got.total_bytes == want.total_bytes
+
+
+def test_allocate_from_artifact_without_moments_is_plain_allocate(tmp_path):
+    """The documented fallback parity: an artifact with no ledger (or no
+    moments) must reproduce allocate(...) exactly, bit for bit."""
+    from repro.ptq_stream import allocate_from_artifact
+
+    budget = int(_min_bytes() * 1.5)
+    plain = _alloc(budget)
+    got = allocate_from_artifact(_weights(), budget, str(tmp_path / "empty"),
+                                 codebooks=CODEBOOKS, ranks=RANKS,
+                                 block_size=BLOCK)
+    assert [(l.name, l.codebook, l.rank, l.error) for l in got.layers] == \
+        [(l.name, l.codebook, l.rank, l.error) for l in plain.layers]
+    assert got.total_error == plain.total_error

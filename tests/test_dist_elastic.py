@@ -1,0 +1,345 @@
+"""Elastic fault-tolerant distributed execution (PR 10), pinned under the
+8-device harness: injected ``dist.device_loss`` must shrink the host mesh
+and elastically restore (train: checkpoint reshard + data reseek; engine:
+param reshard + full recompute with **bit-identical** tokens), an injected
+replica desync must be detected within one digest interval and rolled
+back (or quarantine the run when there is nothing to roll back to), the
+straggler watchdog must flag injected slow shards, and the data-parallel
+streaming PTQ must reproduce the single-host artifact byte-for-byte —
+including across a kill-plus-mesh-shrink resume.  The deadline-cancel and
+preemption-drain-under-eviction engine paths are re-pinned here on a
+mesh-backed engine (single-device coverage lives in test_paged_engine).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from multidevice_compat import dp_tp_mesh, multidevice, tp_mesh
+from repro.configs import ShapeCfg, get_config, smoke_variant
+from repro.launch.engine import Engine, Request
+from repro.launch.train import run_training
+from repro.models import model_init, split_tree
+from repro.ptq_stream import (
+    ResidualMLPSource,
+    StreamPlan,
+    audit_artifact,
+    read_shard,
+    stream_quantize,
+)
+from repro.ptq_stream.shards import shard_name
+from repro.robustness import NO_FAULTS, FaultPlan, InjectedFault
+
+STEPS = 6
+N_BLOCKS = 3
+
+
+def _tiny():
+    cfg = smoke_variant(get_config("llama3-8b")).with_(
+        num_layers=2, d_model=64)
+    return cfg, ShapeCfg("t", 32, 4, "train")
+
+
+# ---------------------------------------------------------------------------
+# training: device loss -> mesh rebuild + elastic restore
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def train_ref():
+    cfg, shape = _tiny()
+    out = run_training(cfg, shape, steps=STEPS, lr=1e-3, log_every=1000)
+    return float(out["losses"][-1])
+
+
+@multidevice
+def test_train_device_loss_rebuilds_mesh_and_restores(train_ref, tmp_path):
+    """A device loss at step 3 shrinks 2x4 -> 1x4, restores the step-2
+    checkpoint through elastic resharding, reseeks the data iterator and
+    finishes; the final loss lands within tolerance of the fault-free
+    run (the restored trajectory replays the lost steps)."""
+    cfg, shape = _tiny()
+    out = run_training(cfg, shape, steps=STEPS, lr=1e-3, log_every=1000,
+                       mesh=dp_tp_mesh(), ckpt_dir=str(tmp_path / "ck"),
+                       ckpt_every=2,
+                       faults=FaultPlan(0, {"dist.device_loss": {"at": (3,)}}))
+    assert out["status"] == "complete"
+    assert out["mesh_rebuilds"] == 1
+    assert out["lost_devices"] == 4          # 2x4 -> 1x4
+    assert out["resharded_restores"] == 1
+    assert out["final_mesh"] == {"data": 1, "model": 4}
+    tol = 0.15 * abs(train_ref) + 0.05
+    assert abs(float(out["losses"][-1]) - train_ref) <= tol
+
+
+@multidevice
+def test_train_device_loss_without_checkpoint_live_reshards(train_ref):
+    """No checkpoint dir: the surviving state is device_put onto the new
+    mesh in place (live reshard, no restore) and training continues."""
+    cfg, shape = _tiny()
+    out = run_training(cfg, shape, steps=STEPS, lr=1e-3, log_every=1000,
+                       mesh=dp_tp_mesh(),
+                       faults=FaultPlan(0, {"dist.device_loss": {"at": (3,)}}))
+    assert out["status"] == "complete"
+    assert out["mesh_rebuilds"] == 1
+    assert out["resharded_restores"] == 0    # nothing to restore from
+    tol = 0.15 * abs(train_ref) + 0.05
+    assert abs(float(out["losses"][-1]) - train_ref) <= tol
+
+
+# ---------------------------------------------------------------------------
+# training: replica desync -> detect within one interval, rollback
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+def test_train_desync_detected_within_one_interval_and_rolled_back(tmp_path):
+    cfg, shape = _tiny()
+    out = run_training(
+        cfg, shape, steps=STEPS, lr=1e-3, log_every=1000,
+        mesh=dp_tp_mesh(), desync_every=2, ckpt_dir=str(tmp_path / "ck"),
+        ckpt_every=1,
+        faults=FaultPlan(0, {"dist.replica_desync":
+                             {"prob": 1.0, "max_fires": 1, "only_index": 1}}))
+    assert out["status"] == "complete"
+    assert out["desyncs_detected"] == 1      # caught at the first digest
+    assert out["desync_rollbacks"] == 1
+    assert len(out["losses"]) == STEPS
+    assert all(np.isfinite(out["losses"]))
+
+
+@multidevice
+def test_train_desync_without_checkpoint_quarantines():
+    """Divergence with no checkpoint to roll back to must stop the run
+    with status 'quarantined' — never silently continue desynced."""
+    cfg, shape = _tiny()
+    out = run_training(
+        cfg, shape, steps=STEPS, lr=1e-3, log_every=1000,
+        mesh=dp_tp_mesh(), desync_every=2,
+        faults=FaultPlan(0, {"dist.replica_desync":
+                             {"prob": 1.0, "max_fires": 1, "only_index": 1}}))
+    assert out["status"] == "quarantined"
+    assert out["desyncs_detected"] == 1
+    assert out["desync_rollbacks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: elastic rebuild, straggler watchdog, mesh-backed deadline/preempt
+# ---------------------------------------------------------------------------
+
+
+def _ecfg():
+    return smoke_variant(get_config("llama3-8b")).with_(
+        num_layers=2, d_model=64, kv_cache_dtype="int8")
+
+
+def _ereqs(cfg, plens, gens, gap=0.0, seed=7, deadline=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, (p,))
+                    .astype(np.int32),
+                    max_new=g, arrival=gap * i, deadline_s=deadline)
+            for i, (p, g) in enumerate(zip(plens, gens))]
+
+
+@pytest.fixture(scope="module")
+def engine_params():
+    cfg = _ecfg()
+    params, _ = split_tree(model_init(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine_baseline(engine_params):
+    """Single-device oracle tokens for the elastic-recovery traces."""
+    cfg, params = engine_params
+    eng = Engine(cfg, slots=2, total_pages=12, page_size=8, max_pages=4,
+                 chunk=16, burst=4, kernel_backend="interpret", params=params)
+    stats = eng.run(_ereqs(cfg, [10, 6, 13], [5, 5, 5]), timeout_s=600)
+    assert stats["all_completed"]
+    return {r["rid"]: r["tokens"] for r in stats["records"]}
+
+
+@multidevice
+def test_engine_device_loss_rebuild_tokens_bit_identical(
+        engine_params, engine_baseline):
+    """Device loss at tick 3 on a 2x4 mesh: the engine rebuilds 1x4,
+    reshards params, requeues in-flight work without charging retries,
+    and — greedy decoding plus full recompute — every output token stays
+    bit-identical to the single-device run."""
+    cfg, params = engine_params
+    eng = Engine(cfg, mesh=dp_tp_mesh(), slots=2, total_pages=12,
+                 page_size=8, max_pages=4, chunk=16, burst=4,
+                 kernel_backend="interpret", params=params,
+                 faults=FaultPlan(0, {"dist.device_loss": {"at": (3,)}}))
+    stats = eng.run(_ereqs(cfg, [10, 6, 13], [5, 5, 5]), timeout_s=600)
+    assert stats["all_completed"], stats["statuses"]
+    assert stats["mesh_rebuilds"] == 1
+    assert stats["lost_devices"] == 4
+    assert stats["resharded_restores"] == 1
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+    toks = {r["rid"]: r["tokens"] for r in stats["records"]}
+    assert toks == engine_baseline
+
+
+@multidevice
+def test_engine_straggler_watchdog_flags_injected_shards(
+        engine_params, engine_baseline):
+    """Per-shard dist.straggler injections are caught by the watchdog and
+    reported in stats['straggler_flags'] with the shard indices; injected
+    collective timeouts ride the retry/requeue path and the run still
+    produces oracle-identical tokens."""
+    cfg, params = engine_params
+    eng = Engine(cfg, mesh=dp_tp_mesh(), slots=2, total_pages=12,
+                 page_size=8, max_pages=4, chunk=16, burst=4,
+                 kernel_backend="interpret", params=params,
+                 faults=FaultPlan(0, {
+                     "dist.collective_timeout": {"at": (1,)},
+                     "dist.straggler": {"prob": 0.3, "delay_s": 0.05,
+                                        "max_fires": 3}}))
+    stats = eng.run(_ereqs(cfg, [10, 6, 13], [5, 5, 5]), timeout_s=600)
+    assert stats["all_completed"], stats["statuses"]
+    assert stats["collective_timeouts"] == 1
+    injected = [f for f in stats["straggler_flags"] if f["injected"]]
+    assert injected, "injected stragglers never flagged"
+    for f in injected:
+        assert f["shards"] and all(0 <= s < 8 for s in f["shards"])
+    toks = {r["rid"]: r["tokens"] for r in stats["records"]}
+    assert toks == engine_baseline
+
+
+@pytest.fixture(scope="module")
+def mesh_engine(engine_params):
+    """Mesh-backed engine with the hardened-suite pool geometry (7 usable
+    pages, 5-page tables) so the eviction-pressure traces carry over."""
+    cfg, params = engine_params
+    eng = Engine(cfg, mesh=tp_mesh(), slots=2, total_pages=8, page_size=8,
+                 max_pages=5, chunk=16, burst=4, kernel_backend="interpret",
+                 params=params)
+    eng.warmup()
+    return cfg, eng
+
+
+@pytest.fixture
+def meng(mesh_engine):
+    cfg, eng = mesh_engine
+    yield cfg, eng
+    eng.faults = NO_FAULTS
+
+
+@multidevice
+def test_engine_deadline_cancels_on_mesh(meng):
+    """Satellite: deadline-cancel re-pinned on a sharded engine.  The
+    deadline-stretched request alone is cancelled with partial output;
+    its deadline-free sibling completes identically to the clean run."""
+    cfg, eng = meng
+    reqs = _ereqs(cfg, [10, 6], [10, 24], seed=5)
+    clean = eng.run([Request(0, reqs[0].tokens, 10),
+                     Request(1, reqs[1].tokens, 24)], timeout_s=600)
+    assert clean["all_completed"]
+    clean_toks = {r["rid"]: r["tokens"] for r in clean["records"]}
+
+    eng.faults = FaultPlan(0, {"engine.straggler": {"at": (2,),
+                                                    "delay_s": 1.0}})
+    stats = eng.run([Request(0, reqs[0].tokens, 10),
+                     Request(1, reqs[1].tokens, 24, deadline_s=0.5)],
+                    timeout_s=600)
+    rec = {r["rid"]: r for r in stats["records"]}
+    assert rec[1]["status"] == "timeout" and rec[1]["reason"] == "deadline"
+    assert stats["deadline_cancels"] >= 1
+    assert rec[0]["status"] == "completed"
+    assert rec[0]["tokens"] == clean_toks[0]
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+@multidevice
+def test_engine_preemption_drain_under_eviction_on_mesh(meng):
+    """Satellite: preemption-drain x eviction on a sharded engine.  The
+    eviction-heavy trace (two concurrent 5-page requests over a 7-page
+    pool) is preempted mid-run: in-flight work drains to terminal states,
+    late arrivals are rejected 'preempted', and the page-pool audit stays
+    clean through the stall/evict/recompute churn."""
+    cfg, eng = meng
+    reqs = _ereqs(cfg, [8, 8, 10, 8, 9], [32, 32, 12, 24, 8],
+                  gap=0.02, seed=13)
+    clean = eng.run(reqs, timeout_s=600)
+    assert clean["all_completed"], clean["statuses"]
+    assert clean["evictions"] > 0, "trace was sized to force eviction"
+
+    eng.faults = FaultPlan(0, {"engine.preempt": {"at": (12,)}})
+    stats = eng.run(reqs, timeout_s=600)
+    assert stats["preempted"] and stats["drained"] == "preempted"
+    assert len(stats["records"]) == len(reqs)
+    st = stats["statuses"]
+    assert st.get("completed", 0) >= 1, st      # in-flight work drained
+    assert st.get("rejected", 0) >= 1, st       # late arrivals shed
+    assert all(r["reason"] == "preempted"
+               for r in stats["records"] if r["status"] == "rejected")
+    assert stats["page_audit"]["ok"], stats["page_audit"]
+
+
+# ---------------------------------------------------------------------------
+# sharded streaming PTQ: mesh parity + crash/resume across a mesh shrink
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ptq_source(tmp_path_factory):
+    return ResidualMLPSource.create(
+        str(tmp_path_factory.mktemp("model")),
+        num_blocks=N_BLOCKS, d=48, d_ff=64, tokens=16, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ptq_plan():
+    return StreamPlan(block_size=16, rank=3, refine_steps=6)
+
+
+@pytest.fixture(scope="module")
+def ptq_reference(ptq_source, ptq_plan, tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("ref"))
+    stream_quantize(ptq_source, out, ptq_plan)
+    return [read_shard(os.path.join(out, shard_name(i)))
+            for i in range(N_BLOCKS)]
+
+
+def _assert_identical(ref_shards, out_dir):
+    for i, want in enumerate(ref_shards):
+        got = read_shard(os.path.join(out_dir, shard_name(i)))
+        assert sorted(got) == sorted(want), f"block {i}: key set differs"
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k],
+                                          err_msg=f"block {i} key {k}")
+
+
+@multidevice
+def test_ptq_sharded_run_bit_identical_to_single_host(
+        ptq_source, ptq_plan, ptq_reference, tmp_path):
+    """The mesh is placement only: a clean 2x4 data-parallel streamed run
+    must produce byte-identical shards and a clean audit."""
+    out = str(tmp_path / "out")
+    s = stream_quantize(ptq_source, out, ptq_plan, mesh=dp_tp_mesh())
+    assert s["status"] == "complete"
+    assert s["recomputed"] == list(range(N_BLOCKS))
+    _assert_identical(ptq_reference, out)
+    assert audit_artifact(out, ptq_source, ptq_plan)["clean"]
+
+
+@multidevice
+def test_ptq_sharded_kill_resume_across_mesh_shrink(
+        ptq_source, ptq_plan, ptq_reference, tmp_path):
+    """Killed at a block boundary on 2x4, resumed on the shrunken 1x4
+    mesh: proven blocks are reused, the rest recomputed, and the final
+    artifact is bit-identical to the uninterrupted single-host run."""
+    out = str(tmp_path / "out")
+    with pytest.raises(InjectedFault):
+        stream_quantize(ptq_source, out, ptq_plan, mesh=dp_tp_mesh(),
+                        faults=FaultPlan(17, {"ptq.kill_at_block":
+                                              {"at": (1,)}}))
+    s = stream_quantize(ptq_source, out, ptq_plan, resume=True,
+                        mesh=dp_tp_mesh(1, 4))
+    assert s["status"] == "complete"
+    assert s["reused"] == 1 and s["recomputed"] == [1, 2]
+    _assert_identical(ptq_reference, out)
+    assert audit_artifact(out, ptq_source, ptq_plan)["clean"]

@@ -160,3 +160,107 @@ def test_grad_guard_default_matches_unguarded_run():
     assert la and len(la) == len(lb)
     for a, b in zip(la, lb):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware dist.* points: indexed RNG streams
+# ---------------------------------------------------------------------------
+
+
+def test_indexed_streams_independent_of_sibling_interleaving():
+    """Shard i's fire schedule depends only on (seed, point, i) — never on
+    how many siblings are consulted or in what order.  This is the
+    cross-process-count determinism contract: an 8-process run and a
+    2-process run must inject the same faults into shard 0."""
+    spec = {"dist.straggler": {"prob": 0.4}}
+    solo = FaultPlan(3, spec)
+    seq_solo = [solo.fires("dist.straggler", index=0) for _ in range(32)]
+
+    interleaved = FaultPlan(3, spec)
+    seq_inter = []
+    for _ in range(32):
+        seq_inter.append(interleaved.fires("dist.straggler", index=0))
+        for sib in (1, 2, 5, 7):       # siblings consult in between
+            interleaved.fires("dist.straggler", index=sib)
+    assert seq_inter == seq_solo
+    # and the un-indexed legacy stream is yet another independent stream
+    legacy = FaultPlan(3, spec)
+    assert [legacy.fires("dist.straggler") for _ in range(32)] != seq_solo
+    assert legacy.consulted("dist.straggler") == 32
+
+
+def test_indexed_max_fires_is_per_stream():
+    plan = FaultPlan(0, {"dist.device_loss": {"prob": 1.0, "max_fires": 2}})
+    for i in (0, 1):
+        fires = [plan.fires("dist.device_loss", index=i) for _ in range(5)]
+        assert sum(fires) == 2, f"stream {i} not independently capped"
+    assert plan.fired("dist.device_loss") == 4  # aggregated across streams
+
+
+def test_only_index_restricts_firing_to_one_shard():
+    plan = FaultPlan(0, {"dist.host_crash": {"prob": 1.0, "only_index": 2}})
+    assert not plan.fires("dist.host_crash", index=0)
+    assert not plan.fires("dist.host_crash", index=1)
+    assert plan.fires("dist.host_crash", index=2)
+    assert plan.consulted("dist.host_crash") == 3
+    assert plan.fired("dist.host_crash") == 1
+
+
+def test_indexed_summary_labels_streams():
+    plan = FaultPlan(0, {"dist.straggler": {"prob": 1.0}})
+    plan.fires("dist.straggler", index=3)
+    plan.fires("dist.straggler")
+    s = plan.summary()
+    assert s["fired"]["dist.straggler[3]"] == 1
+    assert s["fired"]["dist.straggler"] == 1
+
+
+def test_dist_points_zero_cost_when_disabled():
+    assert not NO_FAULTS.fires("dist.device_loss", index=5)
+    assert not NO_FAULTS.enabled
+
+
+# ---------------------------------------------------------------------------
+# run_training: dist.* elastic recovery (single-device-runnable paths)
+# ---------------------------------------------------------------------------
+
+
+def test_training_collective_timeout_retries_then_completes():
+    cfg, shape = _tiny()
+    out = run_training(cfg, shape, steps=4, lr=1e-3, log_every=1000,
+                       faults=FaultPlan(0, {"dist.collective_timeout":
+                                            {"at": (1,)}}))
+    assert out["collective_timeouts"] == 1
+    assert out["status"] == "complete"
+    assert len(out["losses"]) == 4
+
+
+def test_training_collective_timeout_exhausts_retries():
+    from repro.robustness import InjectedFault
+    cfg, shape = _tiny()
+    with pytest.raises(InjectedFault, match="collective"):
+        run_training(cfg, shape, steps=4, lr=1e-3, log_every=1000,
+                     collective_retries=1,
+                     faults=FaultPlan(0, {"dist.collective_timeout":
+                                          {"prob": 1.0}}))
+
+
+def test_training_host_crash_then_resume(tmp_path):
+    from repro.robustness import InjectedFault
+    cfg, shape = _tiny()
+    ck = str(tmp_path / "ck")
+    with pytest.raises(InjectedFault, match="host crash"):
+        run_training(cfg, shape, steps=6, lr=1e-3, log_every=1000,
+                     ckpt_dir=ck, ckpt_every=2,
+                     faults=FaultPlan(0, {"dist.host_crash": {"at": (3,)}}))
+    ref = run_training(cfg, shape, steps=6, lr=1e-3, log_every=1000)
+    # the crash landed past the step-2 checkpoint; resuming trains 4 more
+    # steps (run_training counts steps beyond the restored position) and
+    # must land on the uninterrupted 6-step trajectory
+    out = run_training(cfg, shape, steps=4, lr=1e-3, log_every=1000,
+                       ckpt_dir=ck, ckpt_every=100)
+    assert out["status"] == "complete"
+    for a, b in zip(jax.tree.leaves(ref["trainable"]),
+                    jax.tree.leaves(out["trainable"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
